@@ -1,0 +1,171 @@
+"""Shared benchmark harness: datasets, method suite, measurement helpers.
+
+Sizes default small enough for the CPU container; ``--full`` in run.py scales
+up.  All query measurements average over repeated runs (paper: 100 queries x
+10 runs; here configurable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (HNSWCostModel, build_veda, build_effveda,
+                        build_vector_storage, build_oracle_store,
+                        coordinated_search, independent_search,
+                        global_filtered_search, routed_search,
+                        hnsw_factory, exact_factory, metrics, SearchStats)
+from repro.baselines import FilteredHNSW, SieveIndex, HoneyBeePartitioner
+from repro.data import make_retrieval_dataset, RetrievalDataset
+
+CSV_ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    CSV_ROWS.append(row)
+    print(row)
+
+
+@dataclasses.dataclass
+class BenchConfig:
+    n_vectors: int = 8000
+    dim: int = 24
+    n_roles: int = 10
+    n_permissions: int = 32
+    n_queries: int = 40
+    n_runs: int = 3
+    k: int = 10
+    efs: int = 50
+    lam: int = 400
+    M: int = 10
+    efc: int = 60
+    seed: int = 0
+
+
+_DATASET_CACHE: Dict[Tuple, RetrievalDataset] = {}
+
+
+def dataset(bc: BenchConfig, sensitivity: float = 1.0,
+            name: str = "sift-like") -> RetrievalDataset:
+    profile = {
+        # dataset profiles loosely mirroring paper Table 2 skews
+        "sift-like": dict(block_zipf=(1.0, 1.5), perm_zipf=(2.0, 1.5)),
+        "paper-like": dict(block_zipf=(1.0, 2.0), perm_zipf=(2.0, 1.5)),
+        "amzn-like": dict(block_zipf=(1.0, 2.0), perm_zipf=(1.0, 1.5)),
+    }[name]
+    key = (bc.n_vectors, bc.dim, bc.n_roles, bc.n_permissions, bc.n_queries,
+           sensitivity, name, bc.seed)
+    if key not in _DATASET_CACHE:
+        _DATASET_CACHE[key] = make_retrieval_dataset(
+            n_vectors=bc.n_vectors, dim=bc.dim, n_roles=bc.n_roles,
+            n_permissions=bc.n_permissions, n_queries=bc.n_queries,
+            sensitivity=sensitivity, seed=bc.seed, **profile)
+    return _DATASET_CACHE[key]
+
+
+def cost_model(bc: BenchConfig) -> HNSWCostModel:
+    return HNSWCostModel(lam_threshold=bc.lam)
+
+
+def truth_for(ds: RetrievalDataset, k: int) -> List[List[int]]:
+    out = []
+    for q, r in zip(ds.queries, ds.query_roles):
+        t = metrics.brute_force_topk(ds.vectors,
+                                     ds.policy.authorized_mask(int(r)), q, k)
+        out.append([i for _, i in t])
+    return out
+
+
+def measure_qps(fn: Callable[[np.ndarray, int], Sequence], ds, k: int,
+                n_runs: int) -> Tuple[float, float]:
+    """Returns (qps, mean_recall)."""
+    truths = truth_for(ds, k)
+    t0 = time.perf_counter()
+    recalls = []
+    for _ in range(n_runs):
+        for i, (q, r) in enumerate(zip(ds.queries, ds.query_roles)):
+            res = fn(q, int(r))
+            recalls.append(metrics.recall_at_k(
+                [vid for _, vid in res], truths[i], k))
+    dt = time.perf_counter() - t0
+    n = n_runs * len(ds.queries)
+    return n / dt, float(np.mean(recalls))
+
+
+class MethodSuite:
+    """Builds every compared method once over a dataset (HNSW engines)."""
+
+    def __init__(self, bc: BenchConfig, ds: RetrievalDataset,
+                 beta: float = 1.1, engines: str = "hnsw"):
+        self.bc, self.ds = bc, ds
+        cm = cost_model(bc)
+        factory = (hnsw_factory(M=bc.M, efc=bc.efc) if engines == "hnsw"
+                   else exact_factory())
+        t0 = time.perf_counter()
+        self.veda = build_veda(ds.policy, cm, beta=beta, k=bc.k)
+        self.t_veda = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        self.effveda = build_effveda(ds.policy, cm, beta=beta, k=bc.k)
+        self.t_effveda = time.perf_counter() - t0
+        self.veda_store = build_vector_storage(self.veda, ds.vectors,
+                                               engine_factory=factory)
+        self.eff_store = build_vector_storage(self.effveda, ds.vectors,
+                                              engine_factory=factory,
+                                              with_global=(engines == "hnsw"))
+        t0 = time.perf_counter()
+        self.sieve = SieveIndex(ds.policy, cm, beta=beta)
+        self.t_sieve = time.perf_counter() - t0
+        self.sieve.build_engines(ds.vectors, factory)
+        t0 = time.perf_counter()
+        self.honeybee = HoneyBeePartitioner(ds.policy, cm, beta=beta)
+        self.t_honeybee = time.perf_counter() - t0
+        self.honeybee.build_engines(ds.vectors, factory)
+        self.global_idx = factory(ds.vectors,
+                                  np.arange(len(ds.vectors), dtype=np.int64))
+        self.oracle = build_oracle_store(ds.policy, ds.vectors,
+                                         engine_factory=factory)
+        if engines == "hnsw":
+            self.acorn1 = FilteredHNSW(ds.vectors, M=bc.M, efc=bc.efc,
+                                       gamma=1)
+            self.acorng = FilteredHNSW(ds.vectors, M=bc.M,
+                                       efc=max(bc.efc // 2, 20), gamma=3)
+        else:
+            self.acorn1 = self.acorng = None
+
+    # ------------------------------------------------------- search closures
+    def searchers(self, efs: Optional[int] = None) -> Dict[str, Callable]:
+        bc = self.bc
+        efs = efs or bc.efs
+        policy = self.ds.policy
+        import math
+
+        def global_search(q, r):
+            mask = policy.authorized_mask(r)
+            lam = math.ceil(len(mask) / max(int(mask.sum()), 1))
+            res = self.global_idx.search(q, max(lam * bc.k, bc.k),
+                                         min(lam * efs, len(mask)))
+            return [(d, int(i)) for d, i in res if mask[int(i)]][:bc.k]
+
+        out = {
+            "global": global_search,
+            "oracle": lambda q, r: self.oracle[r].search(q, bc.k, efs),
+            "veda": lambda q, r: coordinated_search(
+                self.veda_store, q, r, bc.k, efs),
+            "effveda": lambda q, r: coordinated_search(
+                self.eff_store, q, r, bc.k, efs),
+            "sieve": lambda q, r: self.sieve.search(q, r, bc.k, efs),
+            "honeybee": lambda q, r: self.honeybee.search(q, r, bc.k, efs),
+        }
+        if self.acorn1 is not None:
+            out["acorn1"] = lambda q, r: self.acorn1.search(
+                q, bc.k, efs, allowed=policy.authorized_mask(r))
+            out["acorn_g"] = lambda q, r: self.acorng.search(
+                q, bc.k, efs, allowed=policy.authorized_mask(r))
+        return out

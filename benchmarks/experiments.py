@@ -1,0 +1,267 @@
+"""One benchmark per paper table/figure (Exps 1–14).
+
+Each function prints ``name,us_per_call,derived`` rows via common.emit.
+Construction experiments (1–5, 7, 8) use the calibrated cost model only
+(fast); query experiments (6, 9–14) run real engines.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from .common import (BenchConfig, MethodSuite, cost_model, dataset, emit,
+                     measure_qps, truth_for)
+
+from repro.core import (build_veda, build_effveda, metrics, SearchStats,
+                        coordinated_search, independent_search,
+                        routed_search, build_vector_storage, exact_factory,
+                        hnsw_factory)
+from repro.baselines import SieveIndex, HoneyBeePartitioner
+
+SA_SWEEP = (1.0, 1.1, 1.3, 1.5, 2.0, 3.0)
+
+
+# --------------------------------------------------------------- Exp 1-4
+def exp01_build_time(bc: BenchConfig):
+    """Fig 5a: partitioning time vs SA budget (per method)."""
+    ds = dataset(bc)
+    cm = cost_model(bc)
+    for beta in SA_SWEEP:
+        for name, build in [
+                ("veda", lambda: build_veda(ds.policy, cm, beta=beta)),
+                ("effveda", lambda: build_effveda(ds.policy, cm, beta=beta)),
+                ("sieve", lambda: SieveIndex(ds.policy, cm, beta=beta)),
+                ("honeybee", lambda: HoneyBeePartitioner(ds.policy, cm,
+                                                         beta=beta))]:
+            t0 = time.perf_counter()
+            build()
+            dt = (time.perf_counter() - t0) * 1e6
+            emit(f"exp01_build_time/{name}/sa{beta}", dt,
+                 "partition_time_only")
+
+
+def exp02_indexed_vs_leftover(bc: BenchConfig):
+    """Fig 5b: #indexed vs #leftover vectors (VEDA, EffVEDA)."""
+    ds = dataset(bc)
+    cm = cost_model(bc)
+    for beta in SA_SWEEP:
+        for name, build in [("veda", build_veda), ("effveda",
+                                                   build_effveda)]:
+            t0 = time.perf_counter()
+            res = build(ds.policy, cm, beta=beta)
+            dt = (time.perf_counter() - t0) * 1e6
+            emit(f"exp02_indexed_leftover/{name}/sa{beta}", dt,
+                 f"indexed={res.indexed_vectors()};"
+                 f"leftover={res.leftover_vectors()}")
+
+
+def exp03_n_indices(bc: BenchConfig):
+    """Fig 5c: number of indices vs SA (all partitioning methods)."""
+    ds = dataset(bc)
+    cm = cost_model(bc)
+    for beta in SA_SWEEP:
+        rows = {
+            "veda": len(build_veda(ds.policy, cm, beta=beta).lattice.nodes),
+            "effveda": len(build_effveda(ds.policy, cm,
+                                         beta=beta).lattice.nodes),
+            "sieve": SieveIndex(ds.policy, cm, beta=beta).n_indices(),
+            "honeybee": HoneyBeePartitioner(ds.policy, cm,
+                                            beta=beta).n_indices(),
+        }
+        for name, n in rows.items():
+            emit(f"exp03_n_indices/{name}/sa{beta}", 0.0, f"n_indices={n}")
+
+
+def exp04_desired_vs_achieved_sa(bc: BenchConfig):
+    """Fig 5d: achieved SA must track the requested budget."""
+    ds = dataset(bc)
+    cm = cost_model(bc)
+    for beta in SA_SWEEP:
+        rows = {
+            "veda": build_veda(ds.policy, cm, beta=beta).sa,
+            "effveda": build_effveda(ds.policy, cm, beta=beta).sa,
+            "sieve": SieveIndex(ds.policy, cm, beta=beta).sa,
+            "honeybee": HoneyBeePartitioner(ds.policy, cm, beta=beta).sa,
+        }
+        for name, sa in rows.items():
+            emit(f"exp04_achieved_sa/{name}/desired{beta}", 0.0,
+                 f"achieved={sa:.4f}")
+
+
+# ----------------------------------------------------------------- Exp 5-7
+def exp05_qa_vs_sa(bc: BenchConfig):
+    """Fig 6a: QA (cost normalized to oracle) vs SA."""
+    ds = dataset(bc)
+    cm = cost_model(bc)
+    for beta in SA_SWEEP:
+        va = metrics.query_amplification(
+            build_veda(ds.policy, cm, beta=beta), cm, bc.k)
+        ea = metrics.query_amplification(
+            build_effveda(ds.policy, cm, beta=beta), cm, bc.k)
+        # baselines via their own predicted per-role costs
+        sieve = SieveIndex(ds.policy, cm, beta=beta)
+        hb = HoneyBeePartitioner(ds.policy, cm, beta=beta)
+        roles = [r for r in ds.policy.roles()
+                 if len(ds.policy.d_of_role(r))]
+        oracle = np.mean([cm.oracle_cost(len(ds.policy.d_of_role(r)), bc.k)
+                          for r in roles])
+        sa_q = np.mean([sieve.query_cost(r, bc.k) for r in roles]) / oracle
+        hb_q = np.mean([hb.query_cost(r, bc.k) for r in roles]) / oracle
+        for name, qa in [("veda", va), ("effveda", ea), ("sieve", sa_q),
+                         ("honeybee", hb_q)]:
+            emit(f"exp05_qa/{name}/sa{beta}", 0.0, f"qa={qa:.4f}")
+
+
+def exp06_purity(bc: BenchConfig, suite: MethodSuite):
+    """Fig 6b: fraction of touched data authorized for the querying role."""
+    ds = suite.ds
+    for name, store in [("veda", suite.veda_store),
+                        ("effveda", suite.eff_store)]:
+        stats = SearchStats()
+        for q, r in zip(ds.queries, ds.query_roles):
+            coordinated_search(store, q, int(r), bc.k, bc.efs, stats=stats)
+        emit(f"exp06_purity/{name}", 0.0, f"purity={stats.purity:.4f}")
+    # honeybee purity from its partition contents
+    hb = suite.honeybee
+    touched, auth = 0, 0
+    for q, r in zip(ds.queries, ds.query_roles):
+        pid = hb.role_partition[int(r)]
+        ids = hb._group_ids(hb.partitions[pid])
+        mask = ds.policy.authorized_mask(int(r))
+        touched += len(ids)
+        auth += int(mask[ids].sum())
+    emit("exp06_purity/honeybee", 0.0, f"purity={auth / max(touched,1):.4f}")
+
+
+def exp07_indices_per_query(bc: BenchConfig):
+    """Table 3: avg #HNSW indices per query vs SA."""
+    ds = dataset(bc)
+    cm = cost_model(bc)
+    for beta in SA_SWEEP:
+        for name, build in [("veda", build_veda), ("effveda",
+                                                   build_effveda)]:
+            res = build(ds.policy, cm, beta=beta)
+            emit(f"exp07_indices_per_query/{name}/sa{beta}", 0.0,
+                 f"avg_indices={metrics.avg_indices_per_query(res):.2f}")
+
+
+# ----------------------------------------------------------------- Exp 8-10
+def exp08_lambda_sensitivity(bc: BenchConfig):
+    """Table 4: QPS robustness to the indexability threshold Lambda."""
+    ds = dataset(bc)
+    from repro.core import HNSWCostModel
+    for lam in (200, 300, 400, 600):
+        cm = HNSWCostModel(lam_threshold=lam)
+        for name, build in [("veda", build_veda), ("effveda",
+                                                   build_effveda)]:
+            res = build(ds.policy, cm, beta=1.1, k=bc.k)
+            store = build_vector_storage(res, ds.vectors,
+                                         engine_factory=exact_factory())
+            qps, rec = measure_qps(
+                lambda q, r: coordinated_search(store, q, r, bc.k, bc.efs),
+                ds, bc.k, 1)
+            emit(f"exp08_lambda/{name}/lam{lam}", 1e6 / qps,
+                 f"qps={qps:.0f};recall={rec:.3f}")
+
+
+def exp09_coordinated_effect(bc: BenchConfig):
+    """Tables 5/6: phase-2 skip rate + efs savings on impure nodes."""
+    ds = dataset(bc)
+    cm = cost_model(bc)
+    for beta in (1.0, 1.1, 1.5):
+        for name, build in [("veda", build_veda), ("effveda",
+                                                   build_effveda)]:
+            res = build(ds.policy, cm, beta=beta, k=bc.k)
+            store = build_vector_storage(
+                res, ds.vectors, engine_factory=hnsw_factory(M=bc.M,
+                                                             efc=bc.efc))
+            stats = SearchStats()
+            for q, r in zip(ds.queries, ds.query_roles):
+                coordinated_search(store, q, int(r), bc.k, bc.efs,
+                                   stats=stats)
+            emit(f"exp09_skiprate/{name}/sa{beta}", 0.0,
+                 f"skip_rate={stats.skip_rate:.4f};"
+                 f"efs_savings={stats.efs_savings:.4f};"
+                 f"impure_visits={stats.impure_visits}")
+
+
+def exp10_efs_sweep(bc: BenchConfig, suite: MethodSuite):
+    """Fig 6c: QPS vs efs for every method."""
+    ds = suite.ds
+    for efs in (10, 50, 100, 300):
+        for name, fn in suite.searchers(efs=efs).items():
+            qps, rec = measure_qps(fn, ds, bc.k, 1)
+            emit(f"exp10_qps_vs_efs/{name}/efs{efs}", 1e6 / qps,
+                 f"qps={qps:.0f};recall={rec:.3f}")
+
+
+# ---------------------------------------------------------------- Exp 11-14
+def exp11_qps_recall_datasets(bc: BenchConfig):
+    """Figs 6d/7a/7b: QPS vs recall@10 across dataset profiles."""
+    for prof in ("sift-like", "paper-like", "amzn-like"):
+        ds = dataset(bc, name=prof)
+        suite = MethodSuite(bc, ds)
+        for efs in (10, 50, 100):
+            for name, fn in suite.searchers(efs=efs).items():
+                qps, rec = measure_qps(fn, ds, bc.k, 1)
+                emit(f"exp11_{prof}/{name}/efs{efs}", 1e6 / qps,
+                     f"qps={qps:.0f};recall={rec:.3f}")
+
+
+def exp12_sensitivity(bc: BenchConfig):
+    """Fig 7c: recall vs query sensitivity (in/out of D(r))."""
+    for sens in (0.0, 0.5, 1.0):
+        ds = dataset(bc, sensitivity=sens)
+        suite = MethodSuite(bc, ds)
+        for name, fn in suite.searchers().items():
+            qps, rec = measure_qps(fn, ds, bc.k, 1)
+            emit(f"exp12_sensitivity/{name}/s{sens}", 1e6 / qps,
+                 f"recall={rec:.3f}")
+
+
+def exp13_weighted_workload(bc: BenchConfig, suite: MethodSuite):
+    """Fig 7d: weighted single-role queries (role ∝ |D(r)|)."""
+    ds = suite.ds
+    rng = np.random.default_rng(5)
+    sizes = np.array([len(ds.policy.d_of_role(r))
+                      for r in ds.policy.roles()], float)
+    probs = sizes / sizes.sum()
+    roles = rng.choice(ds.policy.n_roles, size=len(ds.queries), p=probs)
+    import dataclasses as dc
+    wds = dc.replace(ds, query_roles=roles.astype(np.int64))
+    for name, fn in suite.searchers().items():
+        qps, rec = measure_qps(fn, wds, bc.k, 1)
+        emit(f"exp13_weighted/{name}", 1e6 / qps,
+             f"qps={qps:.0f};recall={rec:.3f}")
+
+
+def exp14_multirole(bc: BenchConfig, suite: MethodSuite):
+    """Figs 8a/8b: multi-role queries + global-fallback routing (the
+    partitioning ↔ filtered-global crossover)."""
+    ds = suite.ds
+    rng = np.random.default_rng(7)
+    k = bc.k
+    for nr, tag in [(2, "narrow"), (max(2, ds.policy.n_roles - 1),
+                                    "broad")]:
+        roleset = [sorted(rng.choice(ds.policy.n_roles, size=nr,
+                                     replace=False).tolist())
+                   for _ in ds.queries]
+        t0 = time.perf_counter()
+        recalls = []
+        fallbacks = 0
+        for q, roles in zip(ds.queries, roleset):
+            stats = SearchStats()
+            res = routed_search(suite.eff_store, q, roles, k, bc.efs,
+                                stats=stats)
+            if stats.indices_visited == 1 and stats.impure_visits == 1:
+                fallbacks += 1
+            mask = suite.eff_store.authorized_mask_multi(roles)
+            truth = metrics.brute_force_topk(ds.vectors, mask, q, k)
+            recalls.append(metrics.recall_at_k(
+                [i for _, i in res], [i for _, i in truth], k))
+        dt = time.perf_counter() - t0
+        emit(f"exp14_multirole/routed/{tag}", dt / len(ds.queries) * 1e6,
+             f"recall={np.mean(recalls):.3f};"
+             f"global_fallbacks={fallbacks}/{len(ds.queries)}")

@@ -1,0 +1,85 @@
+"""Kernel micro-benchmarks: Pallas (interpret) validated + timed vs jnp ref.
+
+Wall-clock on this CPU container reflects interpret-mode overhead, NOT TPU
+performance — the derived column carries the analytic TPU roofline time for
+the same shape (DESIGN.md §3 cost model) so §Perf can track both.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import emit
+
+from repro.kernels.l2_topk import l2_topk, l2_topk_ref, L2TopKConfig
+from repro.kernels.flash_attention import (flash_attention, attention_ref,
+                                           FlashConfig)
+
+
+def _time(fn, n=3):
+    fn()                                     # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_l2_topk():
+    rng = np.random.default_rng(0)
+    for (B, N, d, k) in [(8, 4096, 64, 10), (16, 16384, 128, 10)]:
+        q = jnp.array(rng.standard_normal((B, d)), jnp.float32)
+        db = jnp.array(rng.standard_normal((N, d)), jnp.float32)
+        auth = jnp.array(rng.integers(1, 2 ** 16, N), jnp.uint32)
+        role = np.uint32(1)
+        us_k = _time(lambda: l2_topk(q, db, auth, role, k))
+        us_r = _time(lambda: l2_topk_ref(q, db, auth, jnp.uint32(role),
+                                         jnp.float32(np.inf), k))
+        # analytic v5e time: bytes-bound scan
+        tpu_us = N * (d * 2 + 8) / 819e9 * 1e6
+        emit(f"kern_l2topk/pallas_interp/B{B}_N{N}_d{d}", us_k,
+             f"ref_us={us_r:.1f};tpu_roofline_us={tpu_us:.2f}")
+
+
+def bench_flash_attention():
+    rng = np.random.default_rng(1)
+    for (B, H, S, D) in [(1, 4, 256, 64), (1, 8, 512, 64)]:
+        q = jnp.array(rng.standard_normal((B, H, S, D)), jnp.float32)
+        k = jnp.array(rng.standard_normal((B, H, S, D)), jnp.float32)
+        v = jnp.array(rng.standard_normal((B, H, S, D)), jnp.float32)
+        cfg = FlashConfig(bq=128, bk=128)
+        us_k = _time(lambda: flash_attention(q, k, v, causal=True,
+                                             config=cfg), n=1)
+        us_r = _time(lambda: attention_ref(q, k, v, causal=True), n=1)
+        flops = 4 * B * H * S * S * D
+        tpu_us = flops / 197e12 * 1e6
+        emit(f"kern_flash/pallas_interp/B{B}_H{H}_S{S}_D{D}", us_k,
+             f"ref_us={us_r:.1f};tpu_roofline_us={tpu_us:.2f}")
+
+
+def bench_scorescan_vs_hnsw():
+    """The TPU-adaptation crossover (paper Fig 2 analogue): modeled scan
+    time vs measured HNSW time across index sizes."""
+    from repro.ann import HNSWIndex
+    from repro.core import ScanCostModel
+    rng = np.random.default_rng(2)
+    sm = ScanCostModel(dim=64)
+    for n in (1000, 4000):
+        data = rng.standard_normal((n, 64)).astype(np.float32)
+        idx = HNSWIndex(data, M=10, efc=50)
+        qs = rng.standard_normal((20, 64)).astype(np.float32)
+        t0 = time.perf_counter()
+        for qq in qs:
+            idx.search(qq, 10, 50)
+        hnsw_us = (time.perf_counter() - t0) / len(qs) * 1e6
+        emit(f"kern_scan_crossover/n{n}", hnsw_us,
+             f"cpu_hnsw_us={hnsw_us:.0f};"
+             f"tpu_scan_us={sm.role_query_cost(n, n, 10):.1f}")
+
+
+def run_all():
+    bench_l2_topk()
+    bench_flash_attention()
+    bench_scorescan_vs_hnsw()

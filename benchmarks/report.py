@@ -1,0 +1,80 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report dryrun_1pod.json dryrun_2pod.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def _gb(x) -> str:
+    return f"{x / 2**30:.2f}"
+
+
+def dryrun_table(records: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | status | compile_s | args_GiB/chip | "
+            "temp_GiB/chip | dominant | notes |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r.get("method") == "extrapolated":
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"SKIP | — | — | — | — | {r['reason'][:60]} |")
+            continue
+        if r["status"] == "failed":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAILED | — | — | — | — | {r['error'][:60]} |")
+            continue
+        mem = r.get("memory", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+            f"{r.get('compile_s', 0)} | "
+            f"{_gb(mem.get('argument_size_in_bytes', 0))} | "
+            f"{_gb(mem.get('temp_size_in_bytes', 0))} | "
+            f"{r.get('dominant', '—')} | |")
+    return "\n".join(rows)
+
+
+def roofline_table(records: List[Dict]) -> str:
+    rows = ["| arch | shape | flops/chip | bytes/chip | coll/chip | "
+            "compute_t | memory_t | coll_t | dominant | useful | "
+            "roofline_frac |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r.get("method") != "extrapolated" or r["status"] != "ok":
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['flops_per_chip']:.3e} | "
+            f"{r['bytes_per_chip']:.3e} | {r['coll_bytes_per_chip']:.3e} | "
+            f"{r['compute_t_s']:.3e} | {r['memory_t_s']:.3e} | "
+            f"{r['collective_t_s']:.3e} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def summary(records: List[Dict]) -> str:
+    ok = sum(1 for r in records if r["status"] == "ok"
+             and r.get("method") != "extrapolated")
+    skip = sum(1 for r in records if r["status"] == "skipped")
+    fail = sum(1 for r in records if r["status"] == "failed")
+    return f"{ok} compiled OK, {skip} skipped (documented), {fail} failed"
+
+
+def main():
+    for path in sys.argv[1:]:
+        records = json.load(open(path))
+        print(f"\n## {path} — {summary(records)}\n")
+        print("### Dry-run (full-depth compile)\n")
+        print(dryrun_table(records))
+        rl = roofline_table(records)
+        if rl.count("\n") > 1:
+            print("\n### Roofline (L-extrapolated exact counting)\n")
+            print(rl)
+
+
+if __name__ == "__main__":
+    main()

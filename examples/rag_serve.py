@@ -1,0 +1,35 @@
+"""End-to-end driver: access-controlled RAG serving with batched requests.
+
+Retrieval (EffVEDA lattice + coordinated search) feeds a generator LM
+(reduced smollm config) that prefllls retrieved passages and decodes new
+tokens — the paper's deployment shape, runnable on CPU.
+
+    PYTHONPATH=src python examples/rag_serve.py
+"""
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import SearchStats
+from repro.launch.serve import build_demo_server
+
+server, ds = build_demo_server(arch="smollm-360m", n_vectors=4000, dim=24,
+                               n_roles=8, beta=1.1)
+print(f"corpus: {len(ds.vectors)} passages, {ds.policy.n_roles} roles; "
+      f"store SA={server.store.sa():.3f}")
+
+stats = SearchStats()
+batch = 6
+out = server.serve_batch(ds.queries[:batch], ds.query_roles[:batch],
+                         k=4, efs=50, decode_tokens=8, stats=stats)
+for i in range(batch):
+    r = int(ds.query_roles[i])
+    print(f"request {i} (role {r}): retrieved {out['retrieved'][i]} "
+          f"→ generated {out['tokens'][i].tolist()}")
+    mask = ds.policy.authorized_mask(r)
+    assert all(mask[p] for p in out["retrieved"][i]), "leak!"
+print(f"retrieval {out['t_retrieval_s']*1e3:.1f} ms for {batch} requests "
+      f"(purity {stats.purity:.2f}); generation {out['t_generate_s']:.1f} s")
+print("isolation verified: every retrieved passage authorized for its role")

@@ -1,0 +1,53 @@
+"""Train a reduced smollm-family model for a few hundred steps on CPU.
+
+Uses the full substrate: deterministic data pipeline (learnable LCG rule so
+the loss actually falls), AdamW + cosine schedule, checkpointing with
+auto-resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data import SyntheticLMDataset
+from repro.launch.sharding import NO_RULES
+from repro.launch.train import make_train_step
+from repro.optim import AdamW, OptConfig, cosine_schedule
+from repro.models.model import init_params
+from repro.ckpt import CheckpointManager
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+args = ap.parse_args()
+
+cfg = get_smoke_config("smollm-360m")
+data = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=64,
+                          global_batch=8, seed=0, pattern="lcg")
+opt = AdamW(OptConfig(schedule=cosine_schedule(3e-3, 20, args.steps),
+                      weight_decay=0.01))
+params = init_params(cfg, jax.random.PRNGKey(0))
+state = opt.init(params)
+mgr = CheckpointManager(args.ckpt, keep=2)
+start = 0
+got = mgr.restore_latest((params, state))
+if got:
+    start, (params, state), _ = got
+    print(f"resumed from step {start}")
+step_fn = make_train_step(cfg, NO_RULES, opt)
+resid = {"none": jnp.zeros(())}
+for step in range(start, args.steps):
+    batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+    params, state, resid, m = step_fn(params, state, resid, batch)
+    if step % 25 == 0 or step == args.steps - 1:
+        print(f"step {step:4d}  loss {float(m['loss']):.4f}")
+    if (step + 1) % 100 == 0:
+        mgr.save(step + 1, (params, state))
+mgr.save(args.steps, (params, state))
+print("done — CE falls toward 0 as the model learns the next-token rule")

@@ -1,0 +1,77 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Per-op bytes/flops profile of a roofline variant's HLO — the §Perf
+'profiler' for a dry-run-only environment.
+
+    PYTHONPATH=src python scripts/hlo_profile.py --arch qwen3-8b \
+        --shape decode_32k --flags bf16_attn_compute --top 15
+"""
+import argparse
+import dataclasses
+import re
+import sys
+from collections import defaultdict
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.models.config import SHAPES_BY_NAME
+from repro.launch.dryrun import dryrun_cell, _variant
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as RL
+
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def profile(hlo: str, top: int):
+    by_kind_bytes = defaultdict(int)
+    rows = []
+    for line in hlo.splitlines():
+        m = OP_RE.match(line)
+        if not m:
+            continue
+        rest = m.group(2)
+        km = re.search(r"\)?\s*([a-z][\w\-]*)\(", rest)
+        if not km:
+            continue
+        kind = km.group(1)
+        if kind in ("parameter", "constant", "tuple", "get-tuple-element"):
+            continue
+        out_bytes = RL._shape_bytes(rest.split(km.group(1) + "(")[0])
+        by_kind_bytes[kind] += out_bytes
+        rows.append((out_bytes, kind, line.strip()[:150]))
+    rows.sort(reverse=True)
+    print("== top ops by result bytes ==")
+    for b, kind, line in rows[:top]:
+        print(f"  {b/2**30:8.3f} GiB  {kind:22s} {line[:110]}")
+    print("== result bytes by op kind (GiB) ==")
+    for kind, b in sorted(by_kind_bytes.items(), key=lambda t: -t[1])[:top]:
+        print(f"  {b/2**30:10.3f}  {kind}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--flags", default=None)
+    ap.add_argument("--units", type=int, default=1, help="L variant units")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.flags:
+        cfg = dataclasses.replace(
+            cfg, **{f: True for f in args.flags.split(",")})
+    shape = SHAPES_BY_NAME[args.shape]
+    cfg = _variant(cfg, shape, args.units)
+    mesh = make_production_mesh(multi_pod=False)
+    rec = dryrun_cell(cfg, shape, mesh, verbose=True,
+                      save_hlo="/tmp/profile.hlo")
+    profile(open("/tmp/profile.hlo").read(), args.top)
+
+
+if __name__ == "__main__":
+    main()

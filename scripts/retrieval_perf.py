@@ -1,0 +1,79 @@
+"""Retrieval-plane §Perf: bytes-scanned amplification on the ScoreScan path.
+
+The TPU engine's cost is bytes streamed through the MXU pipeline, so the
+QA analogue is  bytes_scanned / oracle_bytes  (oracle = |D(r)|·d — scanning
+exactly the authorized data).  Measures four ladders:
+
+  global      — scan everything, post-filter           (Baseline 1)
+  lattice     — EffVEDA plan, no pruning               (paper's contribution)
+  +pruning    — centroid-radius node skips             (beyond-paper)
+  oracle      — |D(r)| exactly                         (lower bound = 1.0)
+
+    PYTHONPATH=src python scripts/retrieval_perf.py
+"""
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import json
+import numpy as np
+
+from repro.core import (HNSWCostModel, build_effveda, build_vector_storage,
+                        metrics, SearchStats)
+from repro.core.coordinated import _TopK, _scan_leftovers
+from repro.data import make_retrieval_dataset
+from repro.ann.scorescan import scorescan_factory
+
+
+def run(n_vectors=20000, dim=32, n_roles=12, n_permissions=40, beta=1.1,
+        n_queries=60, k=10, seed=0, clustered=True):
+    ds = make_retrieval_dataset(n_vectors=n_vectors, dim=dim,
+                                n_roles=n_roles, n_permissions=n_permissions,
+                                n_queries=n_queries, seed=seed)
+    cm = HNSWCostModel(lam_threshold=800)
+    res = build_effveda(ds.policy, cm, beta=beta, k=k)
+    store = build_vector_storage(res, ds.vectors,
+                                 engine_factory=scorescan_factory(ds.policy))
+    rows = {"global": 0, "lattice": 0, "pruned": 0, "oracle": 0}
+    for q, r in zip(ds.queries, ds.query_roles):
+        r = int(r)
+        mask = ds.policy.authorized_mask(r)
+        rows["global"] += n_vectors
+        rows["oracle"] += int(mask.sum())
+        plan = store.plans[r]
+        plan_bytes = sum(len(store.engines[nk]) for nk in plan.nodes
+                         if nk in store.engines)
+        plan_bytes += sum(len(store.leftover_ids[b])
+                          for b in plan.leftover_blocks)
+        rows["lattice"] += plan_bytes
+        # pruning: emulate coordinated_scan_search order, count scanned rows
+        rs = _TopK(k)
+        stats = SearchStats()
+        _scan_leftovers(store, plan, np.asarray(q, np.float32), rs, stats)
+        scanned = stats.leftover_vectors_scanned
+        nodes = [(store.engines[nk], store.is_pure(nk, mask))
+                 for nk in plan.nodes if nk in store.engines]
+        nodes.sort(key=lambda t: (not t[1], t[0].lower_bound(q)))
+        role_mask = np.uint32(1 << (r % 32))
+        for eng, pure in nodes:
+            if eng.lower_bound(q) > rs.kth_dist():
+                continue
+            scanned += len(eng)
+            for dd, vid in eng.search_masked(q, k, role_mask,
+                                             bound=rs.kth_dist()):
+                if mask[vid]:
+                    rs.push(dd, vid)
+        rows["pruned"] += scanned
+    oracle = rows["oracle"]
+    out = {name: rows[name] / oracle for name in rows}
+    return out, res.sa
+
+
+if __name__ == "__main__":
+    for tag, kw in [("clustered", {}),
+                    ("beta1.0", dict(beta=1.0)),
+                    ("beta1.5", dict(beta=1.5))]:
+        amp, sa = run(**kw)
+        print(f"[{tag}] SA={sa:.3f} bytes-scanned amplification "
+              f"(1.0 = oracle): " +
+              " ".join(f"{k}={v:.2f}" for k, v in amp.items()))

@@ -1,0 +1,4 @@
+from .hnsw import HNSWIndex, SearchState
+from .exact import ExactIndex
+
+__all__ = ["HNSWIndex", "SearchState", "ExactIndex"]

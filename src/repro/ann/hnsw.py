@@ -1,0 +1,238 @@
+"""Numpy HNSW (Malkov & Yashunin) with *resumable* base-layer search.
+
+Faithful to the paper's engine (§2.1 / Appendix A):
+  * geometric level assignment with mL = 1/ln(M),
+  * efc-bounded layer searches during insertion, neighbor-diversity pruning,
+  * M links per upper-layer node, M0 = 2M at the base layer,
+  * query = greedy upper-layer descent + base-layer beam search (capacity efs).
+
+Coordinated search (paper Algorithm 17) needs to *resume* a base-layer search
+with a larger beam after comparing against the global top-k bound, without
+rescanning: ``begin_search`` returns a :class:`SearchState` holding the
+candidate heap + visited set, and ``resume_search`` continues from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SearchState:
+    """Resumable base-layer beam state (candidate heap C, result heap W)."""
+
+    candidates: List[Tuple[float, int]]          # min-heap of (dist, id)
+    results: List[Tuple[float, int]]             # max-heap [(-dist, id)]
+    visited: set
+    expansions: int = 0                          # nodes expanded so far
+
+    def top_k(self, k: int) -> List[Tuple[float, int]]:
+        out = sorted([(-d, i) for d, i in self.results])
+        return out[:k]
+
+    def kth_dist(self, k: int) -> float:
+        out = self.top_k(k)
+        return out[k - 1][0] if len(out) >= k else float("inf")
+
+
+class HNSWIndex:
+    """HNSW over an ``(n, d)`` float32 array of vectors with external ids."""
+
+    def __init__(self, data: np.ndarray, ids: Optional[np.ndarray] = None,
+                 M: int = 16, efc: int = 100, seed: int = 0):
+        assert data.ndim == 2
+        self.data = np.ascontiguousarray(data, dtype=np.float32)
+        self.ids = (np.arange(len(data), dtype=np.int64) if ids is None
+                    else np.asarray(ids, dtype=np.int64))
+        self.M = int(M)
+        self.M0 = 2 * int(M)
+        self.efc = int(efc)
+        self.mL = 1.0 / math.log(self.M)
+        self._rng = np.random.default_rng(seed)
+        self.levels = np.zeros(len(data), dtype=np.int32)
+        # neighbors[layer][node] -> list of internal ids
+        self.neighbors: List[Dict[int, List[int]]] = []
+        self.entry: int = -1
+        self.max_level: int = -1
+        self._distance_computations = 0
+        for i in range(len(data)):
+            self._insert(i)
+
+    # ------------------------------------------------------------- distances
+    def _dist(self, q: np.ndarray, idx: Sequence[int]) -> np.ndarray:
+        idx = np.asarray(idx, dtype=np.int64)
+        self._distance_computations += len(idx)
+        diff = self.data[idx] - q
+        return np.einsum("nd,nd->n", diff, diff)
+
+    def _dist1(self, q: np.ndarray, i: int) -> float:
+        self._distance_computations += 1
+        d = self.data[i] - q
+        return float(d @ d)
+
+    # -------------------------------------------------------------- building
+    def _insert(self, i: int) -> None:
+        level = int(-math.log(max(self._rng.random(), 1e-12)) * self.mL)
+        self.levels[i] = level
+        while len(self.neighbors) <= level:
+            self.neighbors.append({})
+        for l in range(level + 1):
+            self.neighbors[l][i] = []
+        if self.entry < 0:
+            self.entry = i
+            self.max_level = level
+            return
+        q = self.data[i]
+        ep = self.entry
+        # greedy descent above the insertion level
+        for l in range(self.max_level, level, -1):
+            ep = self._greedy_step(q, ep, l)
+        # efc beam search + connect at each layer from min(level, max) down
+        for l in range(min(level, self.max_level), -1, -1):
+            w = self._search_layer(q, [ep], self.efc, l)
+            mmax = self.M0 if l == 0 else self.M
+            chosen = self._select_neighbors(q, [c for _, c in w], self.M)
+            self.neighbors[l][i] = list(chosen)
+            for c in chosen:
+                nb = self.neighbors[l][c]
+                nb.append(i)
+                if len(nb) > mmax:
+                    ds = self._dist(self.data[c], nb)
+                    keep = self._select_neighbors(self.data[c], list(nb), mmax,
+                                                  dists=ds)
+                    self.neighbors[l][c] = list(keep)
+            ep = w[0][1] if w else ep
+        if level > self.max_level:
+            self.max_level = level
+            self.entry = i
+
+    def _select_neighbors(self, q: np.ndarray, cand: List[int], m: int,
+                          dists: Optional[np.ndarray] = None) -> List[int]:
+        """Diversity-preserving heuristic (SELECT-NEIGHBORS-HEURISTIC)."""
+        if dists is None:
+            dists = self._dist(q, cand)
+        order = np.argsort(dists)
+        chosen: List[int] = []
+        chosen_d: List[float] = []
+        for j in order:
+            c = cand[int(j)]
+            if len(chosen) >= m:
+                break
+            dc = float(dists[int(j)])
+            ok = True
+            for cc in chosen:
+                if self._dist1(self.data[c], cc) < dc:
+                    ok = False
+                    break
+            if ok:
+                chosen.append(c)
+                chosen_d.append(dc)
+        if not chosen and len(cand):
+            chosen = [cand[int(order[0])]]
+        return chosen
+
+    def _greedy_step(self, q: np.ndarray, ep: int, layer: int) -> int:
+        cur = ep
+        cur_d = self._dist1(q, cur)
+        improved = True
+        while improved:
+            improved = False
+            nbrs = self.neighbors[layer].get(cur, [])
+            if not nbrs:
+                break
+            ds = self._dist(q, nbrs)
+            j = int(np.argmin(ds))
+            if ds[j] < cur_d:
+                cur, cur_d = nbrs[j], float(ds[j])
+                improved = True
+        return cur
+
+    def _search_layer(self, q: np.ndarray, eps: Sequence[int], ef: int,
+                      layer: int) -> List[Tuple[float, int]]:
+        state = self._init_state(q, eps)
+        self._expand(q, state, ef, layer, max_expansions=None)
+        return sorted([(-d, i) for d, i in state.results])[:ef]
+
+    # ------------------------------------------------------------- searching
+    def _init_state(self, q: np.ndarray, eps: Sequence[int]) -> SearchState:
+        ds = self._dist(q, list(eps))
+        cand = [(float(d), int(e)) for d, e in zip(ds, eps)]
+        heapq.heapify(cand)
+        results = [(-d, i) for d, i in cand]
+        heapq.heapify(results)
+        return SearchState(candidates=cand, results=results,
+                           visited=set(int(e) for e in eps))
+
+    def _expand(self, q: np.ndarray, state: SearchState, ef: int, layer: int,
+                max_expansions: Optional[int]) -> None:
+        """Beam-expand until exhaustion/termination; W capacity = ``ef``."""
+        C, W = state.candidates, state.results
+        while C:
+            d, v = C[0]
+            worst = -W[0][0] if len(W) >= ef else float("inf")
+            if d > worst and len(W) >= ef:
+                break
+            if max_expansions is not None and state.expansions >= max_expansions:
+                break
+            heapq.heappop(C)
+            state.expansions += 1
+            nbrs = [u for u in self.neighbors[layer].get(v, [])
+                    if u not in state.visited]
+            if not nbrs:
+                continue
+            state.visited.update(nbrs)
+            ds = self._dist(q, nbrs)
+            worst = -W[0][0] if len(W) >= ef else float("inf")
+            for du, u in zip(ds, nbrs):
+                du = float(du)
+                if len(W) < ef or du < worst:
+                    heapq.heappush(C, (du, u))
+                    heapq.heappush(W, (-du, u))
+                    if len(W) > ef:
+                        heapq.heappop(W)
+                    worst = -W[0][0] if len(W) >= ef else float("inf")
+
+    def _descend(self, q: np.ndarray) -> int:
+        ep = self.entry
+        for l in range(self.max_level, 0, -1):
+            ep = self._greedy_step(q, ep, l)
+        return ep
+
+    def search(self, q: np.ndarray, k: int, efs: int) -> List[Tuple[float, np.int64]]:
+        """Standard top-k: returns [(dist, external_id)] sorted ascending."""
+        res, _ = self.begin_search(q, max(efs, k))
+        return [(d, self.ids[i]) for d, i in res[:k]]
+
+    def begin_search(self, q: np.ndarray, efs: int
+                     ) -> Tuple[List[Tuple[float, int]], SearchState]:
+        """Phase-1 (uninflated) search; state allows resumption (Alg. 17)."""
+        q = np.asarray(q, dtype=np.float32)
+        if self.entry < 0:
+            return [], SearchState([], [], set())
+        ep = self._descend(q)
+        state = self._init_state(q, [ep])
+        self._expand(q, state, int(efs), 0, max_expansions=None)
+        res = sorted([(-d, i) for d, i in state.results])[:efs]
+        return [(d, int(i)) for d, i in res], state
+
+    def resume_search(self, q: np.ndarray, state: SearchState, efs: int
+                      ) -> List[Tuple[float, int]]:
+        """Continue the base-layer beam with an inflated capacity ``efs``.
+
+        Re-seeds the candidate heap from the current result set so expansion
+        can widen beyond the previous beam's frontier, then expands under the
+        larger capacity.  Returns the (unfiltered) result list.
+        """
+        q = np.asarray(q, dtype=np.float32)
+        for negd, i in state.results:
+            heapq.heappush(state.candidates, (-negd, i))
+        self._expand(q, state, int(efs), 0, max_expansions=None)
+        res = sorted([(-d, i) for d, i in state.results])[:efs]
+        return [(d, int(i)) for d, i in res]
+
+    def __len__(self) -> int:
+        return len(self.data)

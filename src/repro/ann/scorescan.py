@@ -1,0 +1,154 @@
+"""ScoreScan — the TPU-native retrieval engine (DESIGN.md §3).
+
+Each lattice node's vectors are packed densely; queries are scored by the
+Pallas ``l2_topk`` kernel (MXU-tiled distances + in-kernel authorization
+bitmask + coordinated-search bound).  Node-level pruning replaces HNSW's
+beam bound: every node stores its centroid ``c`` and radius ``rho``; for a
+query ``q`` the triangle inequality gives ``dist(q, v) >= (|q-c| - rho)^2``
+for all members, so a node whose lower bound exceeds the global k-th
+distance is skipped without touching HBM.
+
+On this CPU container the kernel runs in interpret mode; on TPU the same
+call sites compile to the real kernel (config.interpret=False).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..kernels.l2_topk import l2_topk, L2TopKConfig
+
+
+@dataclasses.dataclass
+class ScoreScanIndex:
+    """Engine-compatible dense scan index over one lattice node."""
+
+    data: np.ndarray                 # (n, d) float32
+    ids: np.ndarray                  # (n,) int64 external ids
+    auth_bits: np.ndarray            # (n,) uint32 role bitmask
+    config: L2TopKConfig = dataclasses.field(default_factory=L2TopKConfig)
+
+    def __post_init__(self):
+        self.data = np.ascontiguousarray(self.data, dtype=np.float32)
+        self.centroid = self.data.mean(axis=0) if len(self.data) else None
+        if self.centroid is not None:
+            d = self.data - self.centroid
+            self.radius = float(np.sqrt((d * d).sum(axis=1).max()))
+            # store node-centered vectors: the ||q||^2+||v||^2-2qv norm trick
+            # cancels catastrophically when magnitudes dwarf distances;
+            # distances are translation-invariant, so centering at the node
+            # centroid keeps the kernel's f32 math well-conditioned.
+            self._centered = np.ascontiguousarray(d, dtype=np.float32)
+        else:
+            self.radius = 0.0
+            self._centered = self.data
+        self._distance_computations = 0
+
+    def __len__(self) -> int:
+        return len(self.data)
+
+    # ---------------------------------------------------------------- bounds
+    def lower_bound(self, q: np.ndarray) -> float:
+        """min possible squared distance from q to any member (triangle)."""
+        if self.centroid is None:
+            return float("inf")
+        dc = float(np.linalg.norm(q - self.centroid))
+        return max(0.0, dc - self.radius) ** 2
+
+    # ---------------------------------------------------------------- search
+    def search_masked(self, q: np.ndarray, k: int, role_mask: int,
+                      bound: Optional[float] = None
+                      ) -> List[Tuple[float, int]]:
+        """Exact authorized top-k via the Pallas kernel; ids are external."""
+        if not len(self.data):
+            return []
+        self._distance_computations += len(self.data)
+        qc = (q - self.centroid).astype(np.float32)
+        d, i = l2_topk(qc[None, :], self._centered, self.auth_bits,
+                       np.uint32(role_mask), k, bound=bound,
+                       config=self.config)
+        d = np.asarray(d)[0]
+        i = np.asarray(i)[0]
+        keep = i >= 0
+        return [(float(dd), int(self.ids[ii]))
+                for dd, ii in zip(d[keep], i[keep])]
+
+    # engine-interface parity (used when plugged into the generic store)
+    def search(self, q: np.ndarray, k: int, efs: int = 0):
+        return self.search_masked(q, k, role_mask=0xFFFFFFFF)
+
+    def begin_search(self, q: np.ndarray, efs: int):
+        res = self.search_masked(q, max(efs, 1), role_mask=0xFFFFFFFF)
+        internal = {int(e): j for j, e in enumerate(self.ids)}
+        out = [(dd, internal[vid]) for dd, vid in res]
+        return out, ("scorescan", out)
+
+    def resume_search(self, q: np.ndarray, state, efs: int):
+        res = self.search_masked(q, max(efs, 1), role_mask=0xFFFFFFFF)
+        internal = {int(e): j for j, e in enumerate(self.ids)}
+        return [(dd, internal[vid]) for dd, vid in res]
+
+
+def scorescan_factory(policy, max_roles: int = 32,
+                      config: Optional[L2TopKConfig] = None):
+    """Engine factory wiring the per-vector role bitmask from the policy."""
+    bits = policy.role_bitmask(max_roles=max_roles).astype(np.uint32)
+    cfg = config or L2TopKConfig()
+
+    def make(data: np.ndarray, ids: np.ndarray) -> ScoreScanIndex:
+        return ScoreScanIndex(data=data, ids=ids,
+                              auth_bits=bits[ids], config=cfg)
+    return make
+
+
+def coordinated_scan_search(store, q: np.ndarray, role: int, k: int,
+                            stats=None) -> List[Tuple[float, int]]:
+    """Coordinated search specialised for ScoreScan engines.
+
+    Pure nodes first (tightens the global k-th bound), then impure / distant
+    nodes in ascending lower-bound order; a node is skipped entirely when
+    its centroid-radius lower bound exceeds the current global bound — the
+    TPU analogue of the paper's phase-2 skip (DESIGN.md §3).
+    """
+    import heapq
+    from ..core.coordinated import SearchStats, _TopK, _scan_leftovers
+
+    stats = stats if stats is not None else SearchStats()
+    q = np.asarray(q, dtype=np.float32)
+    plan = store.plans[role]
+    mask = store.authorized_mask(role)
+    role_mask = np.uint32(1 << (role % 32))
+    rs = _TopK(k)
+    _scan_leftovers(store, plan, q, rs, stats)
+    pure, impure = [], []
+    for key in plan.nodes:
+        eng = store.engines.get(key)
+        if eng is None:
+            continue
+        (pure if store.is_pure(key, mask) else impure).append((key, eng))
+    stats.indices_visited += len(pure) + len(impure)
+    for key, eng in sorted(pure, key=lambda t: t[1].lower_bound(q)):
+        stats.data_touched += len(eng)
+        stats.data_authorized_touched += len(eng)
+        if eng.lower_bound(q) > rs.kth_dist():
+            stats.phase2_skipped += 1
+            stats.impure_visits += 1   # counted as a bound-skip opportunity
+            continue
+        for dd, vid in eng.search_masked(q, k, role_mask,
+                                         bound=rs.kth_dist()):
+            rs.push(dd, vid)
+    for key, eng in sorted(impure, key=lambda t: t[1].lower_bound(q)):
+        total, auth = store.node_total_and_auth(key, mask)
+        stats.impure_visits += 1
+        stats.data_touched += total
+        stats.data_authorized_touched += auth
+        if eng.lower_bound(q) > rs.kth_dist():
+            stats.phase2_skipped += 1
+            continue
+        for dd, vid in eng.search_masked(q, k, role_mask,
+                                         bound=rs.kth_dist()):
+            if mask[vid]:
+                rs.push(dd, vid)
+    return rs.items()

@@ -1,0 +1,5 @@
+from .acorn import FilteredHNSW
+from .sieve import SieveIndex
+from .honeybee import HoneyBeePartitioner
+
+__all__ = ["FilteredHNSW", "SieveIndex", "HoneyBeePartitioner"]

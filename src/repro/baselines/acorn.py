@@ -1,0 +1,83 @@
+"""ACORN-style in-search filtering on HNSW (Patel et al., 2024) — simplified.
+
+ACORN-1: predicate-agnostic construction (standard HNSW); at query time the
+predicate-passing subgraph is traversed by expanding each visited node's
+neighbors (and, when blocked, their neighbors — two-hop) while only allowed
+vectors enter the result heap.
+
+ACORN-gamma: construction widens neighbor lists by a factor gamma (M*gamma
+with predicate-agnostic pruning) so the induced subgraph stays navigable;
+traversal then restricts candidates to allowed nodes directly.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..ann.hnsw import HNSWIndex
+
+
+class FilteredHNSW:
+    """Wraps an HNSW graph with predicate-filtered traversal."""
+
+    def __init__(self, data: np.ndarray, M: int = 16, efc: int = 100,
+                 gamma: int = 1, seed: int = 0):
+        self.gamma = int(gamma)
+        self.index = HNSWIndex(data, M=M * max(1, int(gamma)), efc=efc,
+                               seed=seed)
+        self.data = self.index.data
+
+    def __len__(self):
+        return len(self.data)
+
+    def search(self, q: np.ndarray, k: int, efs: int,
+               allowed: Optional[np.ndarray] = None
+               ) -> List[Tuple[float, int]]:
+        idx = self.index
+        q = np.asarray(q, dtype=np.float32)
+        if idx.entry < 0:
+            return []
+        ep = idx._descend(q)
+        visited = {ep}
+        d0 = idx._dist1(q, ep)
+        C = [(d0, ep)]                                     # candidate min-heap
+        W: List[Tuple[float, int]] = []                    # max-heap (allowed)
+        if allowed is None or allowed[idx.ids[ep]]:
+            W.append((-d0, ep))
+        two_hop = self.gamma == 1
+        while C:
+            d, v = heapq.heappop(C)
+            worst = -W[0][0] if len(W) >= efs else float("inf")
+            if d > worst and len(W) >= efs:
+                break
+            nbrs = [u for u in idx.neighbors[0].get(v, [])
+                    if u not in visited]
+            if two_hop and allowed is not None:
+                # ACORN-1: expand blocked neighbors one extra hop
+                extra = []
+                for u in nbrs:
+                    if not allowed[idx.ids[u]]:
+                        extra.extend(w for w in idx.neighbors[0].get(u, [])
+                                     if w not in visited)
+                nbrs = nbrs + extra
+            if not nbrs:
+                continue
+            nbrs = list(dict.fromkeys(nbrs))
+            visited.update(nbrs)
+            ds = idx._dist(q, nbrs)
+            for du, u in zip(ds, nbrs):
+                du = float(du)
+                ok = allowed is None or bool(allowed[idx.ids[u]])
+                worst = -W[0][0] if len(W) >= efs else float("inf")
+                if du < worst or len(W) < efs:
+                    if self.gamma > 1 and allowed is not None and not ok:
+                        continue          # gamma-variant: stay on subgraph
+                    heapq.heappush(C, (du, u))
+                    if ok:
+                        heapq.heappush(W, (-du, u))
+                        if len(W) > efs:
+                            heapq.heappop(W)
+        out = sorted([(-d, int(idx.ids[i])) for d, i in W])[:k]
+        return [(float(d), i) for d, i in out]

@@ -1,0 +1,91 @@
+"""SIEVE-style workload-aware sub-index selection (Li et al., 2025) —
+simplified to the RBAC setting.
+
+Given a historical workload (role frequencies), greedily materialize pure
+per-role sub-indexes with the largest cost-reduction per memory unit under a
+storage budget (always keeping the global index I_inf), and route each query
+to the cheapest subsuming index — its own role's sub-index if materialized,
+otherwise the global index with post-filtering.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.policy import AccessPolicy, Role
+from ..core.costmodel import HNSWCostModel
+
+
+class SieveIndex:
+    def __init__(self, policy: AccessPolicy, cost_model: HNSWCostModel,
+                 beta: float = 1.1,
+                 workload: Optional[Dict[Role, float]] = None):
+        self.policy = policy
+        self.cm = cost_model
+        self.beta = float(beta)
+        n = policy.n_vectors
+        freq = workload or {r: 1.0 for r in policy.roles()}
+        budget = (self.beta - 1.0) * n          # global index always kept
+        # marginal gain per memory unit of materializing role r's pure index
+        cands = []
+        for r in policy.roles():
+            nr = len(policy.d_of_role(r))
+            if nr == 0:
+                continue
+            global_cost = cost_model.role_query_cost(n, nr, 10)
+            own_cost = cost_model.oracle_cost(nr, 10)
+            gain = freq.get(r, 0.0) * max(global_cost - own_cost, 0.0)
+            cands.append((gain / max(nr, 1), nr, r))
+        cands.sort(reverse=True)
+        self.materialized: List[Role] = []
+        used = 0
+        for _, nr, r in cands:
+            if used + nr <= budget:
+                self.materialized.append(r)
+                used += nr
+        self.used_storage = used
+        self.engines: Dict[Role, object] = {}
+        self.global_engine: Optional[object] = None
+
+    @property
+    def sa(self) -> float:
+        return 1.0 + self.used_storage / max(1, self.policy.n_vectors)
+
+    def n_indices(self) -> int:
+        return 1 + len(self.materialized)
+
+    def build_engines(self, data: np.ndarray, factory: Callable) -> None:
+        self.global_engine = factory(data, np.arange(len(data),
+                                                     dtype=np.int64))
+        for r in self.materialized:
+            ids = self.policy.d_of_role(r)
+            self.engines[r] = factory(data[ids], ids)
+
+    def route(self, r: Role) -> str:
+        return "own" if r in self.engines else "global"
+
+    def search(self, q: np.ndarray, r: Role, k: int, efs: int
+               ) -> List[Tuple[float, int]]:
+        if r in self.engines:
+            return self.engines[r].search(q, k, efs)[:k]
+        mask = self.policy.authorized_mask(r)
+        n = len(mask)
+        lam = math.ceil(n / max(int(mask.sum()), 1))
+        kk, effs = lam * k, min(lam * efs, n)
+        out = [(d, int(i)) for d, i in
+               self.global_engine.search(q, max(kk, k), max(effs, efs))
+               if mask[int(i)]]
+        return out[:k]
+
+    def query_cost(self, r: Role, k: int) -> float:
+        n = self.policy.n_vectors
+        nr = len(self.policy.d_of_role(r))
+        if r in self.materialized or (not self.engines and
+                                      r in self.materialized):
+            return self.cm.oracle_cost(nr, k)
+        if self.route(r) == "own":
+            return self.cm.oracle_cost(nr, k)
+        return self.cm.role_query_cost(n, nr, k)

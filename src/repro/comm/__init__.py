@@ -1,0 +1,4 @@
+from .compress import CompressionState, compress_grads, decompress_grads, ef_compress_update
+
+__all__ = ["CompressionState", "compress_grads", "decompress_grads",
+           "ef_compress_update"]

@@ -1,0 +1,52 @@
+"""Error-feedback int8 gradient compression for cross-pod all-reduce.
+
+The pod axis rides DCN (slow) in a real multi-pod deployment; compressing
+the data-parallel gradient exchange 4x (f32→int8, per-tensor absmax scale)
+with error feedback (residual carried into the next step) preserves
+convergence while quartering DCN bytes — the standard 1-bit-Adam-family
+trick, here in its int8 flavour.
+
+Usage inside the (jitted, sharded) train step:
+    q, scales, new_resid = compress_grads(grads, resid)
+    # all-reduce/mean q over the pod axis happens as int32/int8 math, then
+    g = decompress_grads(q, scales)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CompressionState = Dict   # residual pytree
+
+
+def _c(g, r):
+    x = g.astype(jnp.float32) + r
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-20
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    resid = x - q.astype(jnp.float32) * scale     # error feedback
+    return q, scale.astype(jnp.float32), resid
+
+
+def compress_grads(grads, resid=None):
+    if resid is None:
+        resid = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    triples = jax.tree.map(_c, grads, resid)
+    is3 = lambda x: isinstance(x, tuple)
+    q = jax.tree.map(lambda t: t[0], triples, is_leaf=is3)
+    scales = jax.tree.map(lambda t: t[1], triples, is_leaf=is3)
+    new_resid = jax.tree.map(lambda t: t[2], triples, is_leaf=is3)
+    return q, scales, new_resid
+
+
+def decompress_grads(q, scales):
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)
+
+
+def ef_compress_update(grads, resid):
+    """Round-trip (compress → decompress) with error feedback — models the
+    quantized exchange on a single pod; tests assert the residual shrinks
+    the long-run bias to zero."""
+    q, scales, new_resid = compress_grads(grads, resid)
+    return decompress_grads(q, scales), new_resid

@@ -1,0 +1,57 @@
+"""Assigned-architecture registry: ``get_config(arch_id)`` / ``--arch`` flag.
+
+Each module defines ``CONFIG`` (the exact published configuration) and
+``smoke_config()`` (a reduced same-family config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from ..models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "kimi_k2_1t_a32b",
+    "phi35_moe_42b_a66b",
+    "internvl2_76b",
+    "minicpm_2b",
+    "qwen3_8b",
+    "smollm_360m",
+    "qwen2_72b",
+    "zamba2_27b",
+    "hubert_xlarge",
+    "mamba2_370m",
+]
+
+# canonical hyphenated ids from the assignment → module names
+ALIASES: Dict[str, str] = {
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b_a66b",
+    "internvl2-76b": "internvl2_76b",
+    "minicpm-2b": "minicpm_2b",
+    "qwen3-8b": "qwen3_8b",
+    "smollm-360m": "smollm_360m",
+    "qwen2-72b": "qwen2_72b",
+    "zamba2-2.7b": "zamba2_27b",
+    "hubert-xlarge": "hubert_xlarge",
+    "mamba2-370m": "mamba2_370m",
+}
+
+
+def _module(arch: str):
+    name = ALIASES.get(arch, arch).replace("-", "_").replace(".", "")
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()
+
+
+def all_archs() -> List[str]:
+    return list(ALIASES)

@@ -1,0 +1,21 @@
+"""HuBERT-XLarge — encoder-only audio [arXiv:2106.07447; unverified].
+
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 (cluster targets).
+The audio frontend (CNN feature extractor) is a STUB: input_specs()
+provides precomputed frame embeddings (B, S, d_model). No decode step.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="encoder",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+    d_ff=5120, vocab_size=504, causal=False, frontend="audio",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=64,
+        loss_chunk=32, attn_chunk=64, dtype="float32", remat=False)

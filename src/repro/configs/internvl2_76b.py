@@ -1,0 +1,21 @@
+"""InternVL2-76B — InternViT + LLM backbone [arXiv:2404.16821; unverified].
+
+Backbone only: 80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+The vision frontend is a STUB: input_specs() provides precomputed patch
+embeddings (B, S, d_model).
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab_size=128256, frontend="vision",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab_size=256,
+        loss_chunk=32, attn_chunk=64, dtype="float32", remat=False)

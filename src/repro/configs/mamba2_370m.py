@@ -1,0 +1,20 @@
+"""Mamba2-370M — SSD (state-space duality) [arXiv:2405.21060; unverified].
+
+48L d_model=1024 (attention-free) vocab=50280, ssm_state=128.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=3, d_model=64, vocab_size=256,
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=16,
+        loss_chunk=32, dtype="float32", remat=False)

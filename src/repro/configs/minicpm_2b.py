@@ -1,0 +1,19 @@
+"""MiniCPM-2B — llama-like with WSD schedule [arXiv:2404.06395; hf].
+
+40L d_model=2304 36H (MHA kv=36) d_ff=5760 vocab=122753.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b", family="dense",
+    n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+    d_ff=5760, vocab_size=122753,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=72, n_heads=6, n_kv_heads=6,
+        d_ff=128, vocab_size=256,
+        loss_chunk=32, attn_chunk=64, dtype="float32", remat=False)

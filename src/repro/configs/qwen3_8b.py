@@ -1,0 +1,19 @@
+"""Qwen3-8B — qk_norm, GQA [hf:Qwen/Qwen3-8B; hf].
+
+36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936, head_dim=128.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=12288, vocab_size=151936, head_dim=128, qk_norm=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256,
+        loss_chunk=32, attn_chunk=64, dtype="float32", remat=False)

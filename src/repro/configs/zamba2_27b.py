@@ -1,0 +1,24 @@
+"""Zamba2-2.7B — Mamba2 backbone + shared attention [arXiv:2411.15242; hf].
+
+54L d_model=2560 32H (kv=32) d_ff=10240 vocab=32000, ssm_state=64.
+Shared attention+MLP block applied every 6 Mamba2 layers (9 invocations,
+parameters shared) — simplified from the published concat-input variant
+(DESIGN.md §Arch-applicability).
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=10240, vocab_size=32000,
+    ssm_state=64, ssm_expand=2, ssm_head_dim=64, attn_every=6,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=256, ssm_state=16, ssm_head_dim=16,
+        attn_every=2, ssm_chunk=16,
+        loss_chunk=32, attn_chunk=64, dtype="float32", remat=False)

@@ -1,0 +1,36 @@
+"""repro.core — the paper's contribution: access-aware lattice indexing.
+
+Public API:
+  generate_policy / AccessPolicy     — RBAC datasets (§3.1)
+  Lattice                            — exclusive lattice + copy/merge (§3.2)
+  HNSWCostModel / ScanCostModel      — Def 2.2 + App. B calibration
+  build_veda / build_effveda         — §4 / §5 optimizers → BuildResult
+  build_vector_storage               — physical engines per node
+  coordinated_search / independent_search / routed_search — §6.2
+  metrics                            — SA / QA / recall / purity
+"""
+from .policy import AccessPolicy, generate_policy
+from .lattice import Lattice, Node
+from .costmodel import HNSWCostModel, ScanCostModel, calibrate
+from .queryplan import Plan, build_all_plans, greedy_plan, plan_cost, avg_cost
+from .veda import BuildResult, VedaBuilder, build_veda
+from .effveda import EffVedaBuilder, build_effveda
+from .store import (VectorStore, build_vector_storage, build_oracle_store,
+                    hnsw_factory, exact_factory)
+from .coordinated import (SearchStats, coordinated_search, independent_search,
+                          global_filtered_search, routed_search)
+from .dynamic import DynamicStore
+from . import metrics
+
+__all__ = [
+    "AccessPolicy", "generate_policy", "Lattice", "Node",
+    "HNSWCostModel", "ScanCostModel", "calibrate",
+    "Plan", "build_all_plans", "greedy_plan", "plan_cost", "avg_cost",
+    "BuildResult", "VedaBuilder", "build_veda",
+    "EffVedaBuilder", "build_effveda",
+    "VectorStore", "build_vector_storage", "build_oracle_store",
+    "hnsw_factory", "exact_factory",
+    "SearchStats", "coordinated_search", "independent_search",
+    "global_filtered_search", "routed_search", "metrics",
+    "DynamicStore",
+]

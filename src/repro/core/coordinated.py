@@ -1,0 +1,273 @@
+"""Coordinated top-k execution across a role's plan (paper §6.2, Alg. 7/16/17).
+
+Order of operations (Algorithm 7):
+  1. linear-scan leftovers → seed the global top-k heap RS,
+  2. pure indices: standard HNSW top-k, merge (all results authorized),
+  3. impure indices: *uninflated* probe first; if the local unfiltered k-th
+     distance already exceeds the global k-th authorized distance, phase 2 is
+     skipped (the HNSW search-accuracy assumption says nothing unseen there
+     can improve RS); otherwise resume the base-layer beam with efs inflated
+     by the impurity factor lambda (Eq. 1) and merge authorized survivors.
+
+``independent_search`` is the baseline (Algorithm 16): every impure index is
+searched with fully inflated k' = ceil(lambda*k), efs' = ceil(lambda*efs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .policy import Role
+from .queryplan import Plan
+from .store import VectorStore
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """Per-query accounting used by Exp 9 (skip rate, efs savings)."""
+
+    impure_visits: int = 0
+    phase2_skipped: int = 0
+    efs_used: float = 0.0
+    efs_worst_case: float = 0.0
+    indices_visited: int = 0
+    leftover_vectors_scanned: int = 0
+    data_touched: int = 0
+    data_authorized_touched: int = 0
+
+    def merge(self, o: "SearchStats") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(o, f.name))
+
+    @property
+    def skip_rate(self) -> float:
+        return (self.phase2_skipped / self.impure_visits
+                if self.impure_visits else 1.0)
+
+    @property
+    def efs_savings(self) -> float:
+        if self.efs_worst_case <= 0:
+            return 0.0
+        return 1.0 - self.efs_used / self.efs_worst_case
+
+    @property
+    def purity(self) -> float:
+        if self.data_touched == 0:
+            return 1.0
+        return self.data_authorized_touched / self.data_touched
+
+
+class _TopK:
+    """Bounded max-heap over (dist, id): keeps the k smallest distances."""
+
+    def __init__(self, k: int):
+        self.k = k
+        self._h: List[Tuple[float, int]] = []   # (-dist, id)
+        self._seen: set = set()
+
+    def push(self, dist: float, vid: int) -> None:
+        if vid in self._seen:
+            return
+        if len(self._h) < self.k:
+            heapq.heappush(self._h, (-dist, vid))
+            self._seen.add(vid)
+        elif dist < -self._h[0][0]:
+            _, old = heapq.heapreplace(self._h, (-dist, vid))
+            self._seen.discard(old)
+            self._seen.add(vid)
+
+    def kth_dist(self) -> float:
+        if len(self._h) < self.k:
+            return float("inf")
+        return -self._h[0][0]
+
+    def items(self) -> List[Tuple[float, int]]:
+        return sorted([(-d, i) for d, i in self._h])
+
+
+def _scan_leftovers(store: VectorStore, plan: Plan, x: np.ndarray,
+                    rs: _TopK, stats: SearchStats) -> None:
+    for b in plan.leftover_blocks:
+        vecs = store.leftover_vectors.get(b)
+        if vecs is None or not len(vecs):
+            continue
+        ids = store.leftover_ids[b]
+        diff = vecs - x
+        d = np.einsum("nd,nd->n", diff, diff)
+        stats.leftover_vectors_scanned += len(vecs)
+        stats.data_touched += len(vecs)
+        stats.data_authorized_touched += len(vecs)
+        m = min(rs.k, len(d))
+        part = np.argpartition(d, m - 1)[:m] if m < len(d) else np.arange(len(d))
+        for i in part:
+            rs.push(float(d[i]), int(ids[i]))
+
+
+def _split_plan(store: VectorStore, plan: Plan, mask: np.ndarray):
+    pure, impure = [], []
+    for key in plan.nodes:
+        if key not in store.engines:
+            continue
+        (pure if store.is_pure(key, mask) else impure).append(key)
+    return pure, impure
+
+
+def coordinated_search(store: VectorStore, x: np.ndarray, role: Role, k: int,
+                       efs: int, stats: Optional[SearchStats] = None,
+                       roles: Optional[Sequence[Role]] = None,
+                       ) -> List[Tuple[float, int]]:
+    """Algorithm 7. ``roles`` switches to multi-role union semantics."""
+    stats = stats if stats is not None else SearchStats()
+    x = np.asarray(x, dtype=np.float32)
+    if roles is None:
+        roles = [role]
+        mask = store.authorized_mask(role)
+        plan = store.plans[role]
+    else:
+        mask = store.authorized_mask_multi(roles)
+        plan = _union_plan(store, roles)
+    rs = _TopK(k)
+    _scan_leftovers(store, plan, x, rs, stats)
+    pure, impure = _split_plan(store, plan, mask)
+    stats.indices_visited += len(pure) + len(impure)
+    # ---- pure indices ------------------------------------------------------
+    for key in pure:
+        eng = store.engines[key]
+        stats.data_touched += len(eng)
+        stats.data_authorized_touched += len(eng)
+        for d, vid in eng.search(x, k, efs):
+            rs.push(float(d), int(vid))
+    # ---- impure indices (bound-pruned, resumable) --------------------------
+    for key in impure:
+        eng = store.engines[key]
+        total, auth = store.node_total_and_auth(key, mask)
+        stats.data_touched += total
+        stats.data_authorized_touched += auth
+        lam = math.ceil(total / max(auth, 1))
+        stats.impure_visits += 1
+        stats.efs_worst_case += min(lam * efs, total)
+        local, state = eng.begin_search(x, efs)
+        stats.efs_used += min(efs, total)
+        for d, internal in local:
+            vid = int(eng.ids[internal])
+            if mask[vid]:
+                rs.push(float(d), vid)
+        if len(local) >= k and rs.kth_dist() <= local[k - 1][0]:
+            stats.phase2_skipped += 1          # global bound dominates: stop
+            continue
+        inflated = min(int(lam * efs), total)
+        if inflated > efs:
+            resumed = eng.resume_search(x, state, inflated)
+            stats.efs_used += inflated - efs
+            for d, internal in resumed:
+                if d > rs.kth_dist():
+                    break
+                vid = int(eng.ids[internal])
+                if mask[vid]:
+                    rs.push(float(d), vid)
+    return rs.items()
+
+
+def independent_search(store: VectorStore, x: np.ndarray, role: Role, k: int,
+                       efs: int, stats: Optional[SearchStats] = None,
+                       roles: Optional[Sequence[Role]] = None,
+                       ) -> List[Tuple[float, int]]:
+    """Algorithm 16: per-index inflated search, merge afterwards."""
+    stats = stats if stats is not None else SearchStats()
+    x = np.asarray(x, dtype=np.float32)
+    if roles is None:
+        roles = [role]
+        mask = store.authorized_mask(role)
+        plan = store.plans[role]
+    else:
+        mask = store.authorized_mask_multi(roles)
+        plan = _union_plan(store, roles)
+    rs = _TopK(k)
+    _scan_leftovers(store, plan, x, rs, stats)
+    pure, impure = _split_plan(store, plan, mask)
+    stats.indices_visited += len(pure) + len(impure)
+    for key in pure:
+        eng = store.engines[key]
+        stats.data_touched += len(eng)
+        stats.data_authorized_touched += len(eng)
+        for d, vid in eng.search(x, k, efs):
+            rs.push(float(d), int(vid))
+    for key in impure:
+        eng = store.engines[key]
+        total, auth = store.node_total_and_auth(key, mask)
+        stats.data_touched += total
+        stats.data_authorized_touched += auth
+        lam = math.ceil(total / max(auth, 1))
+        stats.impure_visits += 1
+        kk = int(math.ceil(lam * k))
+        effs = min(int(lam * efs), total)
+        stats.efs_worst_case += effs
+        stats.efs_used += effs
+        for d, vid in eng.search(x, max(kk, k), max(effs, efs)):
+            if mask[int(vid)]:
+                rs.push(float(d), int(vid))
+    return rs.items()
+
+
+def global_filtered_search(store: VectorStore, x: np.ndarray,
+                           roles: Sequence[Role], k: int, efs: int,
+                           stats: Optional[SearchStats] = None
+                           ) -> List[Tuple[float, int]]:
+    """Baseline 1 / Exp-14 fallback: search the global index, post-filter."""
+    assert store.global_engine is not None, "store built without global index"
+    stats = stats if stats is not None else SearchStats()
+    x = np.asarray(x, dtype=np.float32)
+    mask = store.authorized_mask_multi(roles)
+    n = len(store.data)
+    n_auth = int(mask.sum())
+    lam = math.ceil(n / max(n_auth, 1))
+    kk = int(math.ceil(lam * k))
+    effs = min(int(lam * efs), n)
+    stats.indices_visited += 1
+    stats.impure_visits += 1
+    stats.efs_worst_case += effs
+    stats.efs_used += effs
+    stats.data_touched += n
+    stats.data_authorized_touched += n_auth
+    rs = _TopK(k)
+    for d, vid in store.global_engine.search(x, max(kk, k), max(effs, efs)):
+        if mask[int(vid)]:
+            rs.push(float(d), int(vid))
+    return rs.items()
+
+
+def routed_search(store: VectorStore, x: np.ndarray, roles: Sequence[Role],
+                  k: int, efs: int, broad_threshold: float = 0.8,
+                  stats: Optional[SearchStats] = None
+                  ) -> List[Tuple[float, int]]:
+    """Exp-14 router: partition plan for selective queries, filtered global
+    search when the authorized region exceeds ``broad_threshold * |D|``."""
+    mask = store.authorized_mask_multi(roles)
+    frac = mask.sum() / max(len(store.data), 1)
+    if store.global_engine is not None and frac > broad_threshold:
+        return global_filtered_search(store, x, roles, k, efs, stats=stats)
+    return coordinated_search(store, x, roles[0], k, efs, stats=stats,
+                              roles=roles)
+
+
+def _union_plan(store: VectorStore, roles: Sequence[Role]) -> Plan:
+    nodes: List = []
+    seen = set()
+    left: set = set()
+    covered_blocks: set = set()
+    for r in roles:
+        p = store.plans[r]
+        for nk in p.nodes:
+            if nk not in seen:
+                seen.add(nk)
+                nodes.append(nk)
+        left |= set(p.leftover_blocks)
+    # drop leftover blocks already covered by a selected node
+    for nk in nodes:
+        covered_blocks |= store.lattice.nodes[nk].blocks
+    left -= covered_blocks
+    return Plan(nodes=tuple(nodes), leftover_blocks=tuple(sorted(left)))

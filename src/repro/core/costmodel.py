@@ -1,0 +1,193 @@
+"""Query-cost models (paper Def. 2.2 and Appendix B) + calibration.
+
+The paper's deployment-calibrated HNSW latency model is
+
+    C_theta(idx, efs) = a * log2(|idx|) + b * efs + c
+
+(linear in efs — each base-layer expansion is dominated by M*d FLOPs and M
+cache-missing fetches, constant in efs).  Role-based query cost (Def. 2.2):
+
+    pure:                      C(|idx|, efs)
+    impure, lam*efs <= |idx|:  C(|idx|, ceil(lam*efs))
+    impure, lam*efs  > |idx|:  C(|idx|, |idx|)          (degenerates to scan)
+
+Small nodes (< Lambda) are linear-scanned: cost = scan_per_vec * n + scan_c.
+
+``ScanCostModel`` is the TPU-native analogue used by the ScoreScan engine: a
+two-term roofline (compute + HBM bytes) per scanned vector; purity/bounds lower
+*bytes scanned* instead of efs (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HNSWCostModel:
+    """Calibrated latency model; units are arbitrary (microseconds when fit)."""
+
+    a: float = 0.0821     # upper-layer descent coefficient (per log2 |idx|)
+    b: float = 0.1159     # base-layer beam coefficient (per efs unit)
+    c: float = 2.3110     # fixed per-query overhead
+    alpha: int = 5        # efs = alpha * k  (paper: 5..10)
+    lam_threshold: int = 2900   # Lambda: below this, linear scan wins (Fig. 2)
+    scan_per_vec: float = 0.004  # linear-scan cost per vector
+    scan_c: float = 0.5          # linear-scan fixed overhead
+
+    # ------------------------------------------------------------- primitives
+    def hnsw_cost(self, n: int, efs: float) -> float:
+        n = max(int(n), 2)
+        return self.a * math.log2(n) + self.b * float(efs) + self.c
+
+    def scan_cost(self, n: int) -> float:
+        return self.scan_per_vec * float(n) + self.scan_c
+
+    # ------------------------------------------------------- Def 2.2 (Cost_H)
+    def role_query_cost(self, n: int, n_auth: int, k: int) -> float:
+        """Cost of a top-k query by a role authorized for ``n_auth`` of ``n``.
+
+        Applies Def. 2.2 for indexable nodes and the linear-scan model below
+        the indexability threshold Lambda.  ``n_auth == 0`` → the node would
+        never be in this role's plan; return 0.
+        """
+        if n_auth <= 0:
+            return 0.0
+        if n < self.lam_threshold:
+            return self.scan_cost(n)
+        efs = self.alpha * k
+        if n_auth >= n:                       # pure
+            return self.hnsw_cost(n, efs)
+        lam = math.ceil(n / n_auth)           # Eq. (1)
+        inflated = lam * efs
+        if inflated <= n:                     # impure, inflate the beam
+            return self.hnsw_cost(n, math.ceil(inflated))
+        return self.hnsw_cost(n, n)           # degenerate full traversal
+
+    def oracle_cost(self, n_auth: int, k: int) -> float:
+        """Cost of the oracle index for a role with |D(r)| = n_auth."""
+        if n_auth <= 0:
+            return 0.0
+        if n_auth < self.lam_threshold:
+            return self.scan_cost(n_auth)
+        return self.hnsw_cost(n_auth, self.alpha * k)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanCostModel:
+    """TPU ScoreScan roofline cost: per-vector compute + bytes terms.
+
+    cost(n) = n*d*2/peak_flops + n*(d*bytes_per_el + 8)/hbm_bw  [+ fixed]
+    Expressed in microseconds for v5e defaults.
+    """
+
+    dim: int = 128
+    bytes_per_el: int = 2                    # bf16 vectors
+    peak_flops: float = 197e12               # v5e bf16
+    hbm_bw: float = 819e9                    # bytes/s
+    fixed_us: float = 3.0                    # kernel launch / plan overhead
+    lam_threshold: int = 0                   # scan path has no HNSW crossover
+
+    def role_query_cost(self, n: int, n_auth: int, k: int) -> float:
+        if n_auth <= 0:
+            return 0.0
+        flop_t = n * self.dim * 2 / self.peak_flops
+        mem_t = n * (self.dim * self.bytes_per_el + 8) / self.hbm_bw
+        return (max(flop_t, mem_t)) * 1e6 + self.fixed_us
+
+    def oracle_cost(self, n_auth: int, k: int) -> float:
+        return self.role_query_cost(n_auth, n_auth, k)
+
+    def hnsw_cost(self, n: int, efs: float) -> float:  # API parity
+        return self.role_query_cost(n, n, 10)
+
+    def scan_cost(self, n: int) -> float:
+        return self.role_query_cost(n, n, 10)
+
+
+CostModel = HNSWCostModel  # default model type used across core/
+
+
+# --------------------------------------------------------------------------
+# Appendix B calibration (Algorithm 8): two one-dimensional sweeps.
+# --------------------------------------------------------------------------
+def _fit_linear(x: np.ndarray, y: np.ndarray) -> Tuple[float, float, float]:
+    """Least squares y = m*x + c; returns (m, c, R^2)."""
+    A = np.stack([x, np.ones_like(x)], axis=1)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    pred = A @ coef
+    ss_res = float(((y - pred) ** 2).sum())
+    ss_tot = float(((y - y.mean()) ** 2).sum()) or 1.0
+    return float(coef[0]), float(coef[1]), 1.0 - ss_res / ss_tot
+
+
+def calibrate(
+    build_index: Callable[[np.ndarray], object],
+    search: Callable[[object, np.ndarray, int, int], object],
+    dim: int = 32,
+    size_sweep: Sequence[int] = (2_000, 4_000, 8_000, 16_000),
+    efs_sweep: Sequence[int] = (8, 16, 32, 64, 128, 256),
+    idx0_size: int = 8_000,
+    n_queries: int = 30,
+    seed: int = 0,
+    alpha: int = 5,
+    lam_threshold: int = 2900,
+) -> Tuple[HNSWCostModel, Dict[str, float]]:
+    """Fit (a, b, c) on the deployment machine (paper Algorithm 8).
+
+    ``build_index(data) -> idx`` and ``search(idx, q, k, efs)`` abstract the
+    engine so tests can calibrate a mock.  Returns the fitted model and a
+    report containing both candidate fits' R^2 (linear vs efs*log(efs)).
+    """
+    rng = np.random.default_rng(seed)
+
+    def median_latency(idx, qs, k, efs) -> float:
+        ts = []
+        for q in qs:
+            t0 = time.perf_counter()
+            search(idx, q, k, efs)
+            ts.append((time.perf_counter() - t0) * 1e6)
+        return float(np.median(ts))
+
+    # upper-layer sweep: efs = 1, k = 1, vary |idx|
+    sizes, lat_sz = [], []
+    for n in size_sweep:
+        data = rng.standard_normal((n, dim)).astype(np.float32)
+        idx = build_index(data)
+        qs = rng.standard_normal((n_queries, dim)).astype(np.float32)
+        sizes.append(n)
+        lat_sz.append(median_latency(idx, qs, 1, 1))
+    a, c1, r2_size = _fit_linear(np.log2(np.array(sizes, dtype=np.float64)),
+                                 np.array(lat_sz))
+
+    # base-layer sweep: fixed |idx0|, vary efs
+    data = rng.standard_normal((idx0_size, dim)).astype(np.float32)
+    idx0 = build_index(data)
+    qs = rng.standard_normal((n_queries, dim)).astype(np.float32)
+    efs_v, lat_efs = [], []
+    for efs in efs_sweep:
+        efs_v.append(float(efs))
+        lat_efs.append(median_latency(idx0, qs, 1, int(efs)))
+    efs_arr = np.array(efs_v)
+    lat_arr = np.array(lat_efs)
+    b_lin, c2_lin, r2_lin = _fit_linear(efs_arr, lat_arr)
+    b_log, c2_log, r2_log = _fit_linear(efs_arr * np.log2(np.maximum(efs_arr, 2.0)),
+                                        lat_arr)
+    if r2_lin >= r2_log:
+        b, c2 = b_lin, c2_lin
+        chosen = "linear"
+    else:  # pragma: no cover - hardware dependent
+        b, c2 = b_log, c2_log
+        chosen = "efs_log_efs"
+    # combine intercepts (App. B.2): strip each sweep's held-term contribution
+    c = 0.5 * ((c1 - b * 1.0) + (c2 - a * math.log2(idx0_size)))
+    model = HNSWCostModel(a=a, b=b, c=c, alpha=alpha,
+                          lam_threshold=lam_threshold)
+    report = {"a": a, "b": b, "c": c, "r2_size": r2_size,
+              "r2_efs_linear": r2_lin, "r2_efs_log": r2_log,
+              "chosen_base_layer_form": chosen}
+    return model, report

@@ -1,0 +1,209 @@
+"""Dynamic workloads (paper Appendix I): inserts, deletes, policy updates.
+
+Every vector belongs to exactly one exclusive block; the container map Φ
+records which lattice nodes (and the leftover pool) physically hold that
+block. Updates touch only Φ(block):
+
+  insert(v, tau)      — append v to each container of N^ex(tau); a new tau
+                        creates a fresh leftover block (metadata only).
+  delete(v)           — tombstone v in each container.
+  grant/revoke(v, r)  — move v between blocks tau → tau∪{r} / tau∖{r};
+                        only the symmetric difference of containers changes.
+
+Engines: ExactIndex/ScoreScan rebuild their (small) node arrays on change;
+HNSW uses native incremental insert + tombstones (delete marks, filtered at
+query). Correctness (every authorized vector reachable; no leaks) is
+preserved immediately; *optimality* drifts and is restored lazily — when a
+node's size or impurity drifts past ``slack``, re-run copy/merge locally
+(here: flag the node for rebuild; full EffVEDA re-run on large policy
+changes per Appendix I).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+import numpy as np
+
+from .policy import AccessPolicy, Role, RoleSet
+from .queryplan import Plan, build_all_plans
+from .store import VectorStore
+from .costmodel import HNSWCostModel
+from ..ann.exact import ExactIndex
+
+
+class DynamicStore:
+    """Mutable wrapper over a built VectorStore (Appendix I semantics)."""
+
+    def __init__(self, store: VectorStore, cost_model: HNSWCostModel,
+                 k: int = 10, slack: float = 0.3):
+        self.store = store
+        self.cm = cost_model
+        self.k = k
+        self.slack = slack
+        policy = store.policy
+        # mutable policy state
+        self.block_roles: List[RoleSet] = list(policy.block_roles)
+        self.block_members: List[List[int]] = [list(m) for m in
+                                               policy.block_members]
+        self.vec_block: Dict[int, int] = {}
+        for b, members in enumerate(self.block_members):
+            for v in members:
+                self.vec_block[int(v)] = b
+        self.data: List[np.ndarray] = [row for row in store.data]
+        self.tombstones: Set[int] = set()
+        self.dirty_nodes: Set = set()
+        self._base_sizes = {key: len(store.engines[key].ids)
+                            for key in store.engines}
+
+    # ------------------------------------------------------------- internals
+    def _block_key(self, tau: RoleSet) -> int:
+        for b, t in enumerate(self.block_roles):
+            if t == tau:
+                return b
+        # previously unseen combination: fresh leftover block (App. I)
+        self.block_roles.append(tau)
+        self.block_members.append([])
+        b = len(self.block_roles) - 1
+        self.store.leftover_ids[b] = np.empty(0, np.int64)
+        self.store.leftover_vectors[b] = np.empty(
+            (0, self.store.data.shape[1]), np.float32)
+        for r in tau:
+            plan = self.store.plans[r]
+            self.store.plans[r] = Plan(
+                nodes=plan.nodes,
+                leftover_blocks=tuple(sorted(set(plan.leftover_blocks)
+                                             | {b})))
+        return b
+
+    def _containers(self, b: int):
+        nodes = [key for key, node in self.store.lattice.nodes.items()
+                 if b in node.blocks]
+        in_leftover = b in self.store.leftover_ids
+        return nodes, in_leftover
+
+    def _append_leftover(self, b: int, vid: int, vec: np.ndarray) -> None:
+        self.store.leftover_ids[b] = np.append(
+            self.store.leftover_ids.get(b, np.empty(0, np.int64)), vid)
+        lv = self.store.leftover_vectors.get(
+            b, np.empty((0, len(vec)), np.float32))
+        self.store.leftover_vectors[b] = np.vstack([lv, vec[None]])
+
+    def _drop_leftover(self, b: int, vid: int) -> None:
+        ids = self.store.leftover_ids[b]
+        keep = ids != vid
+        self.store.leftover_ids[b] = ids[keep]
+        self.store.leftover_vectors[b] = self.store.leftover_vectors[b][keep]
+
+    # ------------------------------------------------------------ operations
+    def insert(self, vec: np.ndarray, tau: RoleSet) -> int:
+        vid = len(self.data)
+        vec = np.asarray(vec, np.float32)
+        self.data.append(vec)
+        self.store.data = np.vstack([self.store.data, vec[None]])
+        self.store._auth_cache.clear()
+        b = self._block_key(frozenset(tau))
+        self.block_members[b].append(vid)
+        self.vec_block[vid] = b
+        nodes, in_left = self._containers(b)
+        for key in nodes:
+            eng = self.store.engines[key]
+            if hasattr(eng, "_insert"):            # HNSW native incremental
+                eng.data = np.vstack([eng.data, vec[None]])
+                eng.ids = np.append(eng.ids, vid)
+                eng.levels = np.append(eng.levels, 0)
+                eng._insert(len(eng.data) - 1)
+            else:                                   # exact/scan: rebuild
+                ids = np.append(eng.ids, vid)
+                self.store.engines[key] = type(eng)(
+                    np.vstack([eng.data, vec[None]]), ids=ids)
+            self.dirty_nodes.add(key)
+        if in_left or not nodes:
+            self._append_leftover(b, vid, vec)
+        # membership bookkeeping for impurity/purity checks
+        self.store.policy = dataclasses.replace(
+            self.store.policy,
+            block_roles=tuple(self.block_roles),
+            block_members=tuple(np.asarray(m, np.int64)
+                                for m in self.block_members))
+        self.store.lattice.policy = self.store.policy
+        self.store.lattice.block_sizes = self.store.policy.block_sizes
+        return vid
+
+    def delete(self, vid: int) -> None:
+        self.tombstones.add(int(vid))
+        b = self.vec_block[int(vid)]
+        self.block_members[b] = [v for v in self.block_members[b]
+                                 if v != vid]
+        nodes, in_left = self._containers(b)
+        if in_left:
+            self._drop_leftover(b, vid)
+        # engines keep the row; queries filter tombstones (cheap), nodes
+        # marked dirty for lazy re-optimization
+        self.dirty_nodes.update(nodes)
+        self.store.policy = dataclasses.replace(
+            self.store.policy,
+            block_members=tuple(np.asarray(m, np.int64)
+                                for m in self.block_members))
+        self.store.lattice.policy = self.store.policy
+        self.store.lattice.block_sizes = self.store.policy.block_sizes
+        self.store._auth_cache.clear()
+
+    def grant(self, vid: int, r: Role) -> None:
+        self._move(vid, lambda tau: frozenset(tau | {r}))
+
+    def revoke(self, vid: int, r: Role) -> None:
+        self._move(vid, lambda tau: frozenset(tau - {r}))
+
+    def _move(self, vid: int, fn) -> None:
+        vec = self.data[int(vid)]
+        old_tau = self.block_roles[self.vec_block[int(vid)]]
+        new_tau = fn(old_tau)
+        if new_tau == old_tau:
+            return
+        assert new_tau, "revoking the last role would orphan the vector"
+        self.delete(int(vid))
+        self.tombstones.discard(int(vid))
+        # re-insert under the new combination, reusing the same id
+        b = self._block_key(new_tau)
+        self.block_members[b].append(int(vid))
+        self.vec_block[int(vid)] = b
+        nodes, in_left = self._containers(b)
+        for key in nodes:
+            eng = self.store.engines[key]
+            if int(vid) not in set(int(i) for i in eng.ids):
+                ids = np.append(eng.ids, int(vid))
+                self.store.engines[key] = type(eng)(
+                    np.vstack([eng.data, vec[None]]), ids=ids)
+            self.dirty_nodes.add(key)
+        if in_left or not nodes:
+            self._append_leftover(b, int(vid), vec)
+        self.store.policy = dataclasses.replace(
+            self.store.policy,
+            block_roles=tuple(self.block_roles),
+            block_members=tuple(np.asarray(m, np.int64)
+                                for m in self.block_members))
+        self.store.lattice.policy = self.store.policy
+        self.store.lattice.block_sizes = self.store.policy.block_sizes
+        self.store._auth_cache.clear()
+
+    # ---------------------------------------------------------------- search
+    def search(self, x: np.ndarray, role: Role, k: Optional[int] = None,
+               efs: int = 50):
+        from .coordinated import coordinated_search
+        k = k or self.k
+        res = coordinated_search(self.store, x, role, k + len(self.tombstones),
+                                 efs)
+        out = [(d, v) for d, v in res if v not in self.tombstones][:k]
+        return out
+
+    # --------------------------------------------------------- lazy re-optim
+    def needs_reoptimization(self) -> List:
+        """Nodes whose size drifted past slack — re-run copy/merge locally."""
+        out = []
+        for key, eng in self.store.engines.items():
+            base = self._base_sizes.get(key, len(eng.ids))
+            live = len(set(int(i) for i in eng.ids) - self.tombstones)
+            if base and abs(live - base) / base > self.slack:
+                out.append(key)
+        return out

@@ -1,0 +1,61 @@
+"""Evaluation metrics: SA, QA, recall@k, purity (paper §1/§7.1)."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .costmodel import HNSWCostModel
+from .policy import AccessPolicy, Role
+from .queryplan import Plan, plan_cost
+from .veda import BuildResult
+
+
+def storage_amplification(result: BuildResult) -> float:
+    return result.sa
+
+
+def query_amplification(result: BuildResult, cm: HNSWCostModel, k: int,
+                        weights: Optional[Dict[Role, float]] = None) -> float:
+    """QA = avg plan cost / avg oracle cost (oracle indexing attains QA=1)."""
+    lat = result.lattice
+    policy = lat.policy
+    roles = list(policy.roles())
+    if weights is None:
+        weights = {r: 1.0 for r in roles}
+    tot_w = sum(weights.values()) or 1.0
+    cost = 0.0
+    oracle = 0.0
+    for r in roles:
+        w = weights.get(r, 0.0) / tot_w
+        cost += w * plan_cost(lat, result.plans[r], r, cm, k)
+        oracle += w * cm.oracle_cost(len(policy.d_of_role(r)), k)
+    return cost / max(oracle, 1e-12)
+
+
+def brute_force_topk(data: np.ndarray, mask: np.ndarray, x: np.ndarray,
+                     k: int) -> List[Tuple[float, int]]:
+    ids = np.flatnonzero(mask)
+    if not len(ids):
+        return []
+    diff = data[ids] - np.asarray(x, dtype=np.float32)
+    d = np.einsum("nd,nd->n", diff, diff)
+    m = min(k, len(d))
+    part = np.argpartition(d, m - 1)[:m] if m < len(d) else np.arange(len(d))
+    order = part[np.argsort(d[part])]
+    return [(float(d[i]), int(ids[i])) for i in order]
+
+
+def recall_at_k(result_ids: Sequence[int], truth_ids: Sequence[int],
+                k: int) -> float:
+    truth = set(list(truth_ids)[:k])
+    if not truth:
+        return 1.0
+    got = set(list(result_ids)[:k])
+    return len(got & truth) / len(truth)
+
+
+def avg_indices_per_query(result: BuildResult,
+                          roles: Optional[Sequence[Role]] = None) -> float:
+    roles = list(result.plans) if roles is None else list(roles)
+    return float(np.mean([len(result.plans[r].nodes) for r in roles]))

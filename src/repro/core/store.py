@@ -1,0 +1,119 @@
+"""Physical vector storage built from an optimized lattice (Alg. 1 line 12).
+
+``build_vector_storage`` materializes one ANN engine per indexable lattice
+node plus packed leftover arrays, and retains the per-role query plans.  The
+engine is pluggable: the paper-faithful numpy HNSW, the exact scan oracle, or
+the TPU ScoreScan engine (kernels/l2_topk through ann/exact host fallback).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..ann.exact import ExactIndex
+from ..ann.hnsw import HNSWIndex
+from .lattice import Lattice, NodeKey
+from .policy import AccessPolicy, Role
+from .queryplan import Plan
+from .veda import BuildResult
+
+EngineFactory = Callable[[np.ndarray, np.ndarray], object]
+
+
+def hnsw_factory(M: int = 16, efc: int = 100, seed: int = 0) -> EngineFactory:
+    return lambda data, ids: HNSWIndex(data, ids=ids, M=M, efc=efc, seed=seed)
+
+
+def exact_factory() -> EngineFactory:
+    return lambda data, ids: ExactIndex(data, ids=ids)
+
+
+@dataclasses.dataclass
+class VectorStore:
+    """Built storage: engines per node, leftover arrays, plans, policy."""
+
+    data: np.ndarray
+    policy: AccessPolicy
+    lattice: Lattice
+    plans: Dict[Role, Plan]
+    engines: Dict[NodeKey, object]
+    leftover_vectors: Dict[int, np.ndarray]        # block id → (m, d) array
+    leftover_ids: Dict[int, np.ndarray]            # block id → vector ids
+    global_engine: Optional[object] = None         # Exp-14 fallback / Baseline1
+    _auth_cache: Dict[Role, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    def authorized_mask(self, r: Role) -> np.ndarray:
+        if r not in self._auth_cache:
+            self._auth_cache[r] = self.policy.authorized_mask(r)
+        return self._auth_cache[r]
+
+    def authorized_mask_multi(self, roles: Sequence[Role]) -> np.ndarray:
+        mask = np.zeros(len(self.data), dtype=bool)
+        for r in roles:
+            mask |= self.authorized_mask(r)
+        return mask
+
+    def node_total_and_auth(self, key: NodeKey, mask: np.ndarray
+                            ) -> Tuple[int, int]:
+        node = self.lattice.nodes[key]
+        total, auth = 0, 0
+        for b in node.blocks:
+            members = self.policy.block_members[b]
+            total += len(members)
+            if mask[members[0]]:
+                auth += len(members)
+        return total, auth
+
+    def is_pure(self, key: NodeKey, mask: np.ndarray) -> bool:
+        total, auth = self.node_total_and_auth(key, mask)
+        return auth == total
+
+    def stored_vectors(self) -> int:
+        n = sum(len(e.ids) for e in self.engines.values())
+        n += sum(len(v) for v in self.leftover_vectors.values())
+        return int(n)
+
+    def sa(self) -> float:
+        return self.stored_vectors() / max(1, len(self.data))
+
+
+def build_vector_storage(result: BuildResult, data: np.ndarray,
+                         engine_factory: Optional[EngineFactory] = None,
+                         with_global: bool = False,
+                         global_factory: Optional[EngineFactory] = None
+                         ) -> VectorStore:
+    lat = result.lattice
+    policy = lat.policy
+    factory = engine_factory or exact_factory()
+    engines: Dict[NodeKey, object] = {}
+    for key, node in lat.nodes.items():
+        ids = np.concatenate([policy.block_members[b]
+                              for b in sorted(node.blocks)])
+        engines[key] = factory(data[ids], ids)
+    leftover_vectors, leftover_ids = {}, {}
+    for b in result.leftovers:
+        ids = policy.block_members[b]
+        leftover_ids[b] = ids
+        leftover_vectors[b] = np.ascontiguousarray(data[ids], dtype=np.float32)
+    g = None
+    if with_global:
+        gf = global_factory or factory
+        g = gf(data, np.arange(len(data), dtype=np.int64))
+    return VectorStore(data=np.ascontiguousarray(data, dtype=np.float32),
+                       policy=policy, lattice=lat, plans=dict(result.plans),
+                       engines=engines, leftover_vectors=leftover_vectors,
+                       leftover_ids=leftover_ids, global_engine=g)
+
+
+def build_oracle_store(policy: AccessPolicy, data: np.ndarray,
+                       engine_factory: Optional[EngineFactory] = None
+                       ) -> Dict[Role, object]:
+    """Baseline 2: one pure index over exactly D(r) per role."""
+    factory = engine_factory or exact_factory()
+    out = {}
+    for r in policy.roles():
+        ids = policy.d_of_role(r)
+        out[r] = factory(data[ids], ids)
+    return out

@@ -1,0 +1,4 @@
+from .pipeline import (SyntheticLMDataset, RetrievalDataset,
+                       make_retrieval_dataset)
+
+__all__ = ["SyntheticLMDataset", "RetrievalDataset", "make_retrieval_dataset"]

@@ -1,0 +1,6 @@
+from .straggler import StragglerMonitor
+from .elastic import ElasticPlan, plan_mesh
+from .preempt import PreemptionHandler
+
+__all__ = ["StragglerMonitor", "ElasticPlan", "plan_mesh",
+           "PreemptionHandler"]

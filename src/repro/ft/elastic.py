@@ -1,0 +1,41 @@
+"""Elastic mesh re-planning after node loss / scale changes.
+
+Checkpoints store global logical arrays (repro.ckpt), so resuming on a
+different device count is a pure placement problem: pick the largest
+well-shaped (data, model) mesh that fits the surviving hosts, keep the model
+axis (TP needs full shards on fast links) and shrink the data axis, then
+scale gradient-accumulation steps to preserve the global batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    grad_accum: int
+    dropped_devices: int
+
+
+def plan_mesh(n_devices: int, model_parallel: int = 16,
+              global_batch: int = 256, per_device_batch: int = 8,
+              multi_pod_threshold: int = 512) -> ElasticPlan:
+    """Largest usable mesh for ``n_devices`` with a fixed model axis."""
+    if n_devices < model_parallel:
+        # degrade TP last: halve until it fits
+        while model_parallel > 1 and n_devices < model_parallel:
+            model_parallel //= 2
+    data = max(1, n_devices // model_parallel)
+    used = data * model_parallel
+    # keep per-device batch by accumulating to the global batch
+    rows = data * per_device_batch
+    grad_accum = max(1, -(-global_batch // rows))
+    if used >= multi_pod_threshold and data % 2 == 0:
+        return ElasticPlan((2, data // 2, model_parallel),
+                           ("pod", "data", "model"), grad_accum,
+                           n_devices - used)
+    return ElasticPlan((data, model_parallel), ("data", "model"),
+                       grad_accum, n_devices - used)

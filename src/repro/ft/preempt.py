@@ -1,0 +1,32 @@
+"""Preemption handling: SIGTERM → checkpoint-then-exit.
+
+Cloud TPU/TRN fleets deliver an eviction signal shortly before teardown;
+``PreemptionHandler`` latches it so the training loop can finish the current
+step, write a checkpoint and exit cleanly (tested via direct signal
+delivery).
+"""
+from __future__ import annotations
+
+import signal
+from typing import Callable, Optional
+
+
+class PreemptionHandler:
+    def __init__(self, sig=signal.SIGTERM,
+                 on_preempt: Optional[Callable[[], None]] = None):
+        self._requested = False
+        self._on_preempt = on_preempt
+        self._prev = signal.signal(sig, self._handler)
+        self._sig = sig
+
+    def _handler(self, signum, frame):
+        self._requested = True
+        if self._on_preempt is not None:
+            self._on_preempt()
+
+    @property
+    def preempted(self) -> bool:
+        return self._requested
+
+    def restore(self) -> None:
+        signal.signal(self._sig, self._prev)

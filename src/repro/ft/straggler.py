@@ -1,0 +1,53 @@
+"""Straggler detection from per-host step heartbeats.
+
+At fleet scale, a slow host throttles every synchronous collective.  The
+monitor keeps an EMA of each host's step time and flags hosts whose latency
+exceeds ``threshold``× the fleet median for ``patience`` consecutive steps —
+the controller then drains and replaces them (hook) or re-plans the mesh
+(repro.ft.elastic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    n_hosts: int
+    threshold: float = 1.5        # x median
+    patience: int = 3
+    ema: float = 0.7
+
+    def __post_init__(self):
+        self._lat = np.zeros(self.n_hosts)
+        self._strikes = np.zeros(self.n_hosts, dtype=int)
+        self._seen = np.zeros(self.n_hosts, dtype=bool)
+
+    def observe(self, host: int, step_time: float) -> None:
+        if not self._seen[host]:
+            self._lat[host] = step_time
+            self._seen[host] = True
+        else:
+            self._lat[host] = (self.ema * self._lat[host]
+                               + (1 - self.ema) * step_time)
+
+    def stragglers(self) -> List[int]:
+        if not self._seen.any():
+            return []
+        med = float(np.median(self._lat[self._seen]))
+        out = []
+        for h in range(self.n_hosts):
+            if self._seen[h] and self._lat[h] > self.threshold * med:
+                self._strikes[h] += 1
+            else:
+                self._strikes[h] = 0
+            if self._strikes[h] >= self.patience:
+                out.append(h)
+        return out
+
+    def fleet_median(self) -> float:
+        seen = self._lat[self._seen]
+        return float(np.median(seen)) if len(seen) else 0.0

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+l2_topk          — authorized L2 distance scan + running top-k (the ScoreScan
+                   engine's inner loop; auth bitmask + coordinated-search
+                   bound applied in-kernel).
+flash_attention  — blocked online-softmax attention fwd (LM serving path).
+
+Each kernel ships ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle);
+tests sweep shapes/dtypes and assert allclose in interpret mode.
+"""
+from . import l2_topk
+from . import flash_attention
+
+__all__ = ["l2_topk", "flash_attention"]

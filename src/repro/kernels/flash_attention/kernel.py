@@ -1,0 +1,117 @@
+"""Pallas TPU flash attention (forward) with online softmax.
+
+Blocked over (batch*heads, q tiles, kv tiles); the kv dimension is the
+innermost sequential grid axis, accumulating into VMEM scratch (running max
+``m``, normalizer ``l`` and weighted-value accumulator ``acc``), written back
+on the final kv tile.  Causal masking and a runtime kv-length bound are
+applied in-kernel so padded sequences stay exact.
+
+VMEM per step (defaults bq=bk=128, D<=128): q 64 KiB + k 64 KiB + v 64 KiB +
+acc 64 KiB + s 64 KiB — ~0.4 MiB, comfortably inside VMEM; raise bk to trade
+occupancy for fewer grid steps on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu only needed for scratch memory spaces
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, nk: int, causal: bool, offset: int,
+                  sm_scale: float):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, dtype=jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, dtype=jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, dtype=jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, D)
+    k = k_ref[0].astype(jnp.float32)            # (bk, D)
+    v = v_ref[0].astype(jnp.float32)            # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                            # (bq, bk); true-head-dim scale
+
+    col = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = col < kvlen_ref[0, 0]
+    if causal:
+        row = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        valid &= col <= row + offset            # last-position alignment
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (bq, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    # fully-masked tiles keep m at -inf; exp(-inf - -inf) guarded below
+    safe_m = jnp.where(jnp.isfinite(m_cur), m_cur, 0.0)
+    p = jnp.exp(jnp.where(valid, s - safe_m, NEG_INF))
+    alpha = jnp.where(jnp.isfinite(m_prev),
+                      jnp.exp(m_prev - safe_m), 0.0)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "offset",
+                                             "sm_scale", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           kv_len: jax.Array, causal: bool = True,
+                           bq: int = 128, bk: int = 128, offset: int = 0,
+                           sm_scale: float | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """q,k,v: (BH, S, D) padded to tile multiples; kv_len: scalar int32.
+
+    ``offset``: causal diagonal shift (unpadded Sk - Sq), so the last real
+    query row attends up to the last real kv position.
+    """
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    nq, nk = sq // bq, sk // bk
+    if sm_scale is None:
+        sm_scale = float(1.0 / (d ** 0.5))
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, nk=nk,
+                               causal=causal, offset=offset,
+                               sm_scale=sm_scale)
+    if _VMEM is None:  # pragma: no cover
+        raise RuntimeError("pallas TPU scratch unavailable")
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),       # kv_len
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            _VMEM((bq, 1), jnp.float32),
+            _VMEM((bq, 1), jnp.float32),
+            _VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(kv_len, jnp.int32).reshape(1, 1), q, k, v)

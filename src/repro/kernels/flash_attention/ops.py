@@ -1,0 +1,61 @@
+"""jit'd public wrapper: GQA broadcast, padding, reshaping for the kernel."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashConfig:
+    bq: int = 128
+    bk: int = 128
+    lane: int = 128          # head-dim padding multiple
+    interpret: bool = True   # CPU container default; False on real TPU
+
+
+def _pad_axis(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, kv_len: Optional[int] = None,
+                    config: FlashConfig = FlashConfig()) -> jax.Array:
+    """Flash attention over (B, Hq, Sq, D) with GQA (B, Hkv, Sk, D) k/v.
+
+    ``kv_len``: number of valid kv positions (rest masked) — decode paths
+    pass the current cache fill; defaults to Sk.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    kv_len = sk if kv_len is None else kv_len
+    qp = _pad_axis(_pad_axis(q, config.bq, 2), config.lane, 3)
+    kp = _pad_axis(_pad_axis(k, config.bk, 2), config.lane, 3)
+    vp = _pad_axis(_pad_axis(v, config.bk, 2), config.lane, 3)
+    sq_p, sk_p, dp = qp.shape[2], kp.shape[2], qp.shape[3]
+    qf = qp.reshape(b * hq, sq_p, dp)
+    kf = kp.reshape(b * hq, sk_p, dp)
+    vf = vp.reshape(b * hq, sk_p, dp)
+    # note: causal alignment uses *unpadded* lengths; padding extends kv with
+    # masked columns (kv_len) and q with extra rows sliced off below.
+    out = flash_attention_pallas(qf, kf, vf, jnp.int32(kv_len),
+                                 causal=causal, bq=config.bq, bk=config.bk,
+                                 offset=sk - sq, sm_scale=float(d ** -0.5),
+                                 interpret=config.interpret)
+    out = out.reshape(b, hq, sq_p, dp)[:, :, :sq, :d]
+    return out

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for blocked flash attention (fwd)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, kv_len: int | None = None
+                  ) -> jax.Array:
+    """Softmax attention. q,k,v: (B, H, S, D) float32 (kv heads == q heads)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(d))
+    sq, sk = q.shape[2], k.shape[2]
+    if causal:
+        row = jnp.arange(sq)[:, None] + (sk - sq)   # align last positions
+        col = jnp.arange(sk)[None, :]
+        s = jnp.where(col <= row, s, -jnp.inf)
+    if kv_len is not None:
+        s = jnp.where(jnp.arange(sk)[None, :] < kv_len, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))

@@ -1,0 +1,4 @@
+from .ops import l2_topk, L2TopKConfig
+from .ref import l2_topk_ref
+
+__all__ = ["l2_topk", "L2TopKConfig", "l2_topk_ref"]

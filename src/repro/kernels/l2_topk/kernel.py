@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: authorized L2 distance scan + running top-k.
+
+This is the compute hot-spot of the TPU-native ScoreScan engine (DESIGN.md
+§3): each lattice node's vectors are streamed HBM→VMEM in (BN, d) tiles, the
+MXU computes the query-tile × db-tile distance block, authorization and the
+coordinated-search global bound are applied *in-kernel*, and a per-query
+running top-k is maintained across the sequential db-tile grid dimension in
+the revisited output block (classic Pallas reduction pattern).
+
+Top-k extraction uses only elementwise ops + row reductions (min / masked
+min) — no gathers — so it lowers cleanly to the TPU vector unit:
+  for t in range(k):
+      m   = row-min(dist)
+      sel = row-min(where(dist == m, id, INT_MAX))       # smallest id wins
+      emit (m, sel); dist = where(id == sel, +inf, dist)
+The same trick merges the tile's sorted k with the running sorted k.
+
+VMEM budget per grid step (defaults BQ=8, BN=512, d=128, KPAD=128):
+  q tile 8*128*4 = 4 KiB, db tile 512*128*4 = 256 KiB, dist 8*512*4 = 16 KiB,
+  running top-k 2*8*128*4 = 8 KiB  → well under the ~16 MiB VMEM/core.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = float("inf")          # python scalars: jnp constants would be captured
+IMAX = 2 ** 31 - 1          # as traced kernel constants, which pallas rejects
+
+
+def _extract_topk(dist, ids, k: int, kpad: int):
+    """Row-wise smallest-k of (dist, ids) without gathers. Returns sorted
+    (BQ, kpad) arrays (slots past k stay +inf / -1)."""
+    bq = dist.shape[0]
+    out_d = jnp.full((bq, kpad), INF, dtype=jnp.float32)
+    out_i = jnp.full((bq, kpad), -1, dtype=jnp.int32)
+    for t in range(k):
+        m = jnp.min(dist, axis=1)                                  # (BQ,)
+        sel = jnp.min(jnp.where(dist == m[:, None], ids,
+                                jnp.int32(IMAX)), axis=1)
+        alive = jnp.isfinite(m)
+        out_d = out_d.at[:, t].set(jnp.where(alive, m, jnp.float32(INF)))
+        out_i = out_i.at[:, t].set(jnp.where(alive, sel, jnp.int32(-1)))
+        dist = jnp.where(ids == sel[:, None], jnp.float32(INF), dist)
+    return out_d, out_i
+
+
+def _l2_topk_kernel(role_mask_ref, bound_ref, n_total_ref,
+                    q_ref, qn_ref, db_ref, dbn_ref, auth_ref,
+                    out_d_ref, out_i_ref, *, k: int, kpad: int, bn: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_d_ref[...] = jnp.full(out_d_ref.shape, INF, dtype=jnp.float32)
+        out_i_ref[...] = jnp.full(out_i_ref.shape, -1, dtype=jnp.int32)
+
+    q = q_ref[...]                                   # (BQ, d)
+    db = db_ref[...]                                 # (BN, d)
+    qn = qn_ref[...]                                 # (BQ, 1)
+    dbn = dbn_ref[...]                               # (1, BN)
+    dist = qn + dbn - 2.0 * jax.lax.dot_general(
+        q, db, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (BQ, BN) via MXU
+
+    bq = q.shape[0]
+    col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+    auth = (auth_ref[...] & role_mask_ref[0, 0]) != 0          # (1, BN)
+    valid = auth & (col < n_total_ref[0, 0]) & (dist < bound_ref[0, 0])
+    dist = jnp.where(valid, dist, INF)
+
+    tile_d, tile_i = _extract_topk(dist, col, k, kpad)
+    cand_d = jnp.concatenate([out_d_ref[...], tile_d], axis=1)   # (BQ, 2*kpad)
+    cand_i = jnp.concatenate([out_i_ref[...], tile_i], axis=1)
+    # merge: ids may be -1 (empty) — remap to IMAX for the smallest-id rule
+    merge_ids = jnp.where(cand_i < 0, IMAX, cand_i)
+    new_d, new_i = _extract_topk(cand_d, merge_ids, k, kpad)
+    new_i = jnp.where(new_i == IMAX, -1, new_i)
+    out_d_ref[...] = new_d
+    out_i_ref[...] = new_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "kpad", "bq", "bn",
+                                             "interpret"))
+def l2_topk_pallas(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
+                   role_mask: jax.Array, bound: jax.Array, n_total: int,
+                   k: int, kpad: int = 128, bq: int = 8, bn: int = 512,
+                   interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Launch the kernel on padded operands (see ops.l2_topk for padding)."""
+    b, d = queries.shape
+    n = db.shape[0]
+    assert b % bq == 0 and n % bn == 0, (b, n, bq, bn)
+    qn = jnp.sum(queries * queries, axis=1, keepdims=True)       # (B, 1)
+    dbn = jnp.sum(db * db, axis=1)[None, :]                      # (1, N)
+    auth2 = auth_bits[None, :]                                   # (1, N)
+    scalars = [
+        jnp.asarray(role_mask, jnp.uint32).reshape(1, 1),
+        jnp.asarray(bound, jnp.float32).reshape(1, 1),
+        jnp.asarray(n_total, jnp.int32).reshape(1, 1),
+    ]
+    grid = (b // bq, n // bn)
+    kernel = functools.partial(_l2_topk_kernel, k=k, kpad=kpad, bn=bn)
+    out_d, out_i = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),           # role_mask
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),           # bound
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),           # n_total
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),          # queries
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),          # |q|^2
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),          # db tile
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),          # |v|^2 tile
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),          # auth tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, kpad), lambda i, j: (i, 0)),       # revisited
+            pl.BlockSpec((bq, kpad), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kpad), jnp.float32),
+            jax.ShapeDtypeStruct((b, kpad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*scalars, queries, qn, db, dbn, auth2)
+    return out_d[:, :k], out_i[:, :k]

@@ -1,0 +1,76 @@
+"""jit'd public wrapper for the authorized L2 top-k scan kernel.
+
+Handles padding (queries to BQ, db to BN, d to 128 lanes), masks padded
+database rows via the in-kernel validity predicate (auth bit 0), and exposes
+an ``interpret`` switch so the kernel body runs in Python on CPU for
+validation while targeting TPU VMEM tiling in production.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import l2_topk_pallas
+from .ref import l2_topk_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class L2TopKConfig:
+    bq: int = 8            # query tile rows
+    bn: int = 512          # database tile rows (VMEM-resident)
+    kpad: int = 128        # running top-k storage width (lane aligned)
+    lane: int = 128        # feature padding multiple (MXU alignment)
+    interpret: bool = True  # CPU container default; False on real TPU
+
+
+def _pad_to(x: jax.Array, m: int, axis: int, value=0):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def l2_topk(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
+            role_mask, k: int, bound=None,
+            config: L2TopKConfig = L2TopKConfig()
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Authorized top-k nearest neighbours of each query under L2.
+
+    Args:
+      queries: (B, d) float32.
+      db: (N, d) float32 node shard.
+      auth_bits: (N,) uint32 role bitmask per vector.
+      role_mask: scalar uint32 bitmask of the querying role(s).
+      k: neighbours to return (k <= config.kpad).
+      bound: optional scalar float32 — coordinated-search global k-th
+        distance; candidates at or beyond it are pruned in-kernel.
+
+    Returns:
+      (dists (B, k) float32, ids (B, k) int32); empty slots are +inf / -1.
+    """
+    assert k <= config.kpad, (k, config.kpad)
+    b, d = queries.shape
+    n = db.shape[0]
+    bound = jnp.float32(jnp.inf) if bound is None else jnp.float32(bound)
+    qp = _pad_to(queries.astype(jnp.float32), config.bq, 0)
+    qp = _pad_to(qp, config.lane, 1)
+    dbp = _pad_to(db.astype(jnp.float32), config.bn, 0)
+    dbp = _pad_to(dbp, config.lane, 1)
+    ap = _pad_to(auth_bits.astype(jnp.uint32), config.bn, 0)  # pad rows: bit 0
+    out_d, out_i = l2_topk_pallas(
+        qp, dbp, ap, jnp.uint32(role_mask), bound, n, k,
+        kpad=config.kpad, bq=config.bq, bn=config.bn,
+        interpret=config.interpret)
+    return out_d[:b], out_i[:b]
+
+
+def l2_topk_oracle(queries, db, auth_bits, role_mask, k, bound=None):
+    bound = jnp.float32(jnp.inf) if bound is None else jnp.float32(bound)
+    return l2_topk_ref(queries, db, auth_bits, jnp.uint32(role_mask), bound, k)

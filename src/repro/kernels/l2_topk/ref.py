@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the authorized L2 top-k scan kernel.
+
+Semantics (shared with the Pallas kernel):
+  * distance = ||q - v||^2 over the database,
+  * a vector is a candidate iff (auth_bits & role_mask) != 0 AND its distance
+    is strictly below ``bound`` (the coordinated-search global k-th distance;
+    +inf disables the bound),
+  * non-candidates get distance +inf and id -1,
+  * ties broken toward the smaller database id (deterministic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+def l2_topk_ref(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
+                role_mask: jax.Array, bound: jax.Array, k: int):
+    """Reference top-k.
+
+    Args:
+      queries: (B, d) float32.
+      db: (N, d) float32.
+      auth_bits: (N,) uint32 per-vector role bitmask.
+      role_mask: scalar uint32 — the querying role's bit(s).
+      bound: scalar float32 — global k-th distance bound (inf = no bound).
+      k: number of neighbours.
+
+    Returns:
+      dists (B, k) float32 (+inf for empty slots), ids (B, k) int32 (-1).
+    """
+    queries = queries.astype(jnp.float32)
+    db = db.astype(jnp.float32)
+    qn = jnp.sum(queries * queries, axis=1, keepdims=True)      # (B, 1)
+    dn = jnp.sum(db * db, axis=1)[None, :]                      # (1, N)
+    dist = qn + dn - 2.0 * queries @ db.T                       # (B, N)
+    ok = (auth_bits & role_mask.astype(jnp.uint32)) != 0
+    dist = jnp.where(ok[None, :], dist, INF)
+    dist = jnp.where(dist < bound, dist, INF)
+    # tie-break toward smaller id: sort by (dist, id) lexicographically
+    n = db.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    order = jnp.argsort(dist + ids[None, :] * 0.0, axis=1, stable=True)
+    top = order[:, :k]
+    top_d = jnp.take_along_axis(dist, top, axis=1)
+    top_i = jnp.where(jnp.isinf(top_d), -1, top.astype(jnp.int32))
+    return top_d, top_i

@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (tests may shrink the placeholder device count — must happen pre-jax-import)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the production mesh from placeholder host devices,
+lowers the train/prefill/decode step with ShapeDtypeStruct inputs (no device
+allocation), compiles it, and records memory_analysis / cost_analysis plus
+the parsed collective schedule for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out dryrun_results.json
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import all_archs, get_config
+from ..models.config import (ModelConfig, SHAPES, SHAPES_BY_NAME, ShapeConfig,
+                             shape_skip_reason)
+from ..models.model import (init_params, param_axes, train_step_fn,
+                            prefill_fn, decode_fn, cache_axes)
+from ..optim import AdamW, OptConfig, cosine_schedule
+from . import roofline as RL
+from .mesh import make_production_mesh, make_mesh
+from .sharding import Rules, make_rules
+from .specs import input_specs
+
+
+def shardings_for(rules: Rules, axes_tree, shape_tree):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda ax, sh: NamedSharding(rules.mesh, rules.spec(ax, sh.shape)),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _mem_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    if ma is not None and not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def dryrun_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                quantized_opt: bool = True, verbose: bool = True,
+                save_hlo: Optional[str] = None) -> Dict:
+    n_chips = mesh.devices.size
+    kind = {"train": "train", "prefill": "prefill",
+            "decode": "long" if shape.name == "long_500k" else "decode"
+            }[shape.kind]
+    rules = make_rules(mesh, kind)
+    t0 = time.time()
+    args, arg_axes = input_specs(cfg, shape)
+    params_shapes = jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+    p_axes = param_axes(cfg)
+    p_sh = shardings_for(rules, p_axes, params_shapes)
+    arg_sh = jax.tree.map(
+        lambda ax, sh: rules.sharding(ax, sh.shape),
+        arg_axes, args, is_leaf=lambda x: isinstance(x, tuple))
+
+    if shape.kind == "train":
+        opt = AdamW(OptConfig(schedule=cosine_schedule(3e-4, 100, 10_000),
+                              quantized=quantized_opt))
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        o_sh = shardings_for(rules, opt.state_axes(p_axes), opt_shapes)
+
+        def step(p, o, batch):
+            return train_step_fn(p, cfg, rules, batch, opt, o)
+
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, arg_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_shapes, opt_shapes, args)
+    elif shape.kind == "prefill":
+        def step(p, inputs):
+            return prefill_fn(p, cfg, rules, **inputs)
+        jitted = jax.jit(step, in_shardings=(p_sh, arg_sh))
+        lowered = jitted.lower(params_shapes, args)
+    else:
+        cache_sh = arg_sh["cache"]
+
+        def step(p, tokens, cache, cache_pos):
+            return decode_fn(p, cfg, rules, tokens, cache, cache_pos)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, arg_sh["tokens"], cache_sh,
+                          arg_sh["cache_pos"]),
+            out_shardings=(None, cache_sh), donate_argnums=(2,))
+        lowered = jitted.lower(params_shapes, args["tokens"], args["cache"],
+                               args["cache_pos"])
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    mem = _mem_dict(compiled)
+    rl = RL.analyze(compiled, RL.model_flops(cfg, shape), n_chips,
+                    hlo_text=hlo)
+    rec = {
+        "arch": cfg.name, "shape": shape.name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_chips": int(n_chips), "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem, **{k: (round(v, 6) if isinstance(v, float) else v)
+                          for k, v in rl.row().items()},
+        "coll_bytes_by_op": rl.coll_bytes,
+    }
+    if verbose:
+        print(f"[{cfg.name} x {shape.name} x {rec['mesh']}] OK "
+              f"compile={t_compile:.0f}s dominant={rl.dominant} "
+              f"terms(c/m/coll)=({rl.compute_t:.3e},{rl.memory_t:.3e},"
+              f"{rl.collective_t:.3e})s useful={rl.useful_flops_ratio:.2f}")
+        print("  memory_analysis:", json.dumps(mem))
+        print("  cost_analysis: flops/chip=%.3e bytes/chip=%.3e coll/chip=%.3e"
+              % (rl.flops, rl.bytes_accessed, rl.total_coll_bytes))
+    return rec
+
+
+def _variant(cfg: ModelConfig, shape: ShapeConfig, n_units: int
+             ) -> ModelConfig:
+    """Small-L model used for per-layer cost extrapolation.
+
+    XLA's cost_analysis counts while-loop bodies once, so the real (rolled)
+    compile under-reports flops/bytes by ~L.  We lower L=1 and L=2 variants
+    with ALL scans unrolled (layers, attention kv chunks, loss chunks, SSD
+    chunk-state recurrence) — exact counting — and extrapolate
+    ``total = X(1) + (L-1)·(X(2)-X(1))``.
+    """
+    import dataclasses
+    kw = dict(unroll_layers=True, unroll_inner=True)
+    if shape.kind == "decode":
+        # single-chunk attention: exact, and the q side is one token anyway
+        kw["attn_chunk"] = shape.seq_len
+    else:
+        # cap attention-chunk trips at 4: totals are chunking-invariant
+        # (n_chunks × per-chunk bytes/flops == single-pass totals) but
+        # unrolling 32 chunk bodies explodes SPMD compile time
+        kw["attn_chunk"] = max(cfg.attn_chunk, shape.seq_len // 4)
+    if cfg.family == "hybrid":
+        kw["n_layers"] = cfg.attn_every * n_units
+    else:
+        kw["n_layers"] = n_units
+    return dataclasses.replace(cfg, **kw)
+
+
+def roofline_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  quantized_opt: bool = True, verbose: bool = True) -> Dict:
+    """Extrapolated roofline terms for the full-depth model (see _variant)."""
+    n_units = cfg.n_super if cfg.family == "hybrid" else cfg.n_layers
+    recs = []
+    for nu in (1, 2):
+        r = dryrun_cell(_variant(cfg, shape, nu), shape, mesh,
+                        quantized_opt=quantized_opt, verbose=False)
+        recs.append(r)
+    x1, x2 = recs
+
+    def extrap(key):
+        a, b = float(x1[key]), float(x2[key])
+        return a + (n_units - 1) * max(b - a, 0.0)
+
+    flops = extrap("flops_per_chip")
+    nbytes = extrap("bytes_per_chip")
+    coll = {op: (x1["coll_bytes_by_op"][op]
+                 + (n_units - 1) * max(x2["coll_bytes_by_op"][op]
+                                       - x1["coll_bytes_by_op"][op], 0))
+            for op in x1["coll_bytes_by_op"]}
+    n_chips = mesh.devices.size
+    rl = RL.Roofline(
+        flops=flops, bytes_accessed=nbytes, coll_bytes=coll,
+        compute_t=flops / RL.PEAK_FLOPS,
+        memory_t=nbytes / RL.HBM_BW,
+        collective_t=sum(coll.values()) / RL.ICI_BW,
+        model_flops=RL.model_flops(cfg, shape) / n_chips)
+    rec = {
+        "arch": cfg.name, "shape": shape.name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_chips": int(n_chips), "status": "ok", "method": "extrapolated",
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in rl.row().items()},
+        "coll_bytes_by_op": coll,
+        "variant_compile_s": [x1["compile_s"], x2["compile_s"]],
+    }
+    if verbose:
+        print(f"[roofline {cfg.name} x {shape.name}] dominant={rl.dominant} "
+              f"terms(c/m/coll)=({rl.compute_t:.3e},{rl.memory_t:.3e},"
+              f"{rl.collective_t:.3e})s useful={rl.useful_flops_ratio:.3f} "
+              f"roofline_frac={rl.roofline_fraction:.3f}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--small-mesh", action="store_true",
+                    help="use (2,4)/(2,2,2) for fast local iteration")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--fp32-opt", action="store_true",
+                    help="disable int8 optimizer state")
+    ap.add_argument("--roofline", action="store_true",
+                    help="also compute extrapolated roofline terms per cell")
+    ap.add_argument("--roofline-only", action="store_true",
+                    help="skip the full-depth compile (roofline terms only)")
+    ap.add_argument("--flags", default=None,
+                    help="comma-separated ModelConfig bool flags to enable "
+                         "(§Perf hillclimb), e.g. bf16_attn_compute")
+    args = ap.parse_args()
+
+    def get_mesh(multi_pod: bool):
+        if args.small_mesh:
+            return make_mesh((2, 2, 2) if multi_pod else (2, 4))
+        return make_production_mesh(multi_pod=multi_pod)
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    archs = all_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = ([SHAPES_BY_NAME[args.shape]] if args.shape else list(SHAPES))
+    records = []
+    overrides = {}
+    if args.flags:
+        import dataclasses as _dc
+        overrides = {f.strip(): True for f in args.flags.split(",") if f}
+
+    def apply_flags(cfg):
+        if not overrides:
+            return cfg
+        import dataclasses as _dc
+        return _dc.replace(cfg, **overrides)
+
+    def flush():
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(records, f, indent=1)
+    for arch in archs:
+        cfg = apply_flags(get_config(arch))
+        for shape in shapes:
+            skip = shape_skip_reason(cfg, shape)
+            for mp in meshes:
+                mesh = get_mesh(mp)
+                mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+                if skip:
+                    records.append({"arch": cfg.name, "shape": shape.name,
+                                    "mesh": mesh_name, "status": "skipped",
+                                    "reason": skip})
+                    print(f"[{cfg.name} x {shape.name} x {mesh_name}] "
+                          f"SKIP: {skip}")
+                    continue
+                try:
+                    if not args.roofline_only:
+                        records.append(dryrun_cell(
+                            cfg, shape, mesh,
+                            quantized_opt=not args.fp32_opt,
+                            save_hlo=args.save_hlo))
+                    if args.roofline or args.roofline_only:
+                        records.append(roofline_cell(
+                            cfg, shape, mesh,
+                            quantized_opt=not args.fp32_opt))
+                except Exception as e:  # a failure here is a sharding bug
+                    traceback.print_exc()
+                    records.append({"arch": cfg.name, "shape": shape.name,
+                                    "mesh": mesh_name, "status": "failed",
+                                    "error": f"{type(e).__name__}: {e}"})
+                flush()
+    flush()
+    if args.out:
+        print(f"wrote {len(records)} records to {args.out}")
+    n_fail = sum(1 for r in records if r["status"] == "failed")
+    print(f"dry-run complete: {len(records)} cells, {n_fail} failures")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""GPipe-style pipeline parallelism over a ``stage`` mesh axis (optional).
+
+The production mesh maps pods to data parallelism, but clusters with slow
+inter-pod links can instead pipeline layers across pods.  This module
+implements the classic GPipe schedule with ``shard_map`` + ``ppermute``:
+layer stacks are sharded over the ``stage`` axis, microbatches stream
+through stages, and activations hop stage→stage via collective-permute.
+
+Bubble fraction = (S-1)/(M+S-1) for S stages × M microbatches — callers
+pick M ≥ 4·S.  Used by tests and available to the train driver via
+``pipeline_apply``; the default multi-pod configuration remains DP over
+pods (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_apply(layer_fn: Callable, params_stacked, x_microbatches,
+                   mesh: Mesh, stage_axis: str = "stage"):
+    """Run ``layer_fn(params, x) -> x`` over stage-sharded layer stacks.
+
+    Args:
+      layer_fn: one pipeline stage's computation (applied per microbatch).
+      params_stacked: pytree stacked over layers' leading dim = n_stages
+        (each stage holds one layer here; stack deeper layers inside
+        ``layer_fn`` for multi-layer stages).
+      x_microbatches: (M, mb, ...) microbatched inputs.
+      mesh: mesh containing ``stage_axis`` of size S.
+
+    Returns (M, mb, ...) outputs after all S stages.
+    """
+    n_stages = mesh.shape[stage_axis]
+    m = x_microbatches.shape[0]
+    steps = m + n_stages - 1
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def stage_body(params, xs):
+        params = jax.tree.map(lambda p: p[0], params)   # this stage's layer
+        xs = xs[0]                                      # (M, mb, ...) local
+        idx = jax.lax.axis_index(stage_axis)
+        buf = jnp.zeros_like(xs[0])
+        outs = jnp.zeros_like(xs)
+
+        def step(carry, t):
+            buf, outs = carry
+            # stage 0 injects microbatch t (if any remain); others use the
+            # activation that arrived from the previous stage
+            feed = jnp.where(t < m, t, 0)
+            inject = xs[feed]
+            cur = jnp.where(idx == 0, inject, buf)
+            y = layer_fn(params, cur)
+            # emit from the last stage once its first input has arrived
+            out_t = t - (n_stages - 1)
+            ok = (idx == n_stages - 1) & (out_t >= 0)
+            slot = jnp.where(out_t >= 0, out_t, 0)
+            outs = jnp.where(
+                ok,
+                outs.at[slot].set(y.astype(outs.dtype)),
+                outs)
+            nxt = jax.lax.ppermute(y, stage_axis, perm)
+            return (nxt, outs), None
+
+        (_, outs), _ = jax.lax.scan(step, (buf, outs),
+                                    jnp.arange(steps))
+        return outs[None]
+
+    specs_p = jax.tree.map(lambda _: P(stage_axis), params_stacked)
+    fn = shard_map(stage_body, mesh=mesh,
+                   in_specs=(specs_p, P(stage_axis)),
+                   out_specs=P(stage_axis), check_rep=False)
+    # replicate microbatches to every stage (each stage consumes per GPipe)
+    xs_bcast = jnp.broadcast_to(x_microbatches[None],
+                                (n_stages,) + x_microbatches.shape)
+    outs = fn(params_stacked, xs_bcast)
+    # the final outputs live on the last stage's shard
+    return outs[-1]

@@ -1,0 +1,163 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  The compiled module is the per-device SPMD program, so
+``cost_analysis()`` FLOPs/bytes and the parsed collective bytes are already
+per-chip; the three terms are therefore computed per chip:
+
+    compute_t    = flops_per_chip / PEAK_FLOPS
+    memory_t     = bytes_per_chip / HBM_BW
+    collective_t = collective_bytes_per_chip / ICI_BW
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g.  bf16[8,2048,7168]{2,1,0}  or  f32[]  or tuples thereof
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the (per-device) HLO.
+
+    Result shapes are the natural 'bytes that cross the interconnect' proxy:
+    all-gather results are the gathered (larger) tensors; all-reduce moves
+    ~2x operand on a ring but its result==operand, so we charge 2x there.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)", line)
+        if not m:
+            continue
+        rest = m.group(1)
+        opm = re.search(r"\b(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(",
+                        rest)
+        if not opm:
+            continue
+        op = opm.group(1)
+        if "-done(" in rest:       # avoid double-counting start/done pairs
+            continue
+        result_text = rest.split(opm.group(0))[0]
+        nbytes = _shape_bytes(result_text)
+        if op == "all-reduce":
+            nbytes *= 2
+        out[op] += nbytes
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: Dict[str, int]
+    compute_t: float
+    memory_t: float
+    collective_t: float
+    model_flops: float = 0.0
+
+    @property
+    def total_coll_bytes(self) -> int:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_t, "memory": self.memory_t,
+                 "collective": self.collective_t}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.compute_t, self.memory_t, self.collective_t)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        if self.flops <= 0:
+            return 0.0
+        return self.model_flops / self.flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / dominant-term time (1.0 = at the roofline)."""
+        if self.bound_time <= 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.bound_time
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "flops_per_chip": self.flops,
+            "bytes_per_chip": self.bytes_accessed,
+            "coll_bytes_per_chip": self.total_coll_bytes,
+            "compute_t_s": self.compute_t,
+            "memory_t_s": self.memory_t,
+            "collective_t_s": self.collective_t,
+            "dominant": self.dominant,
+            "model_flops_per_chip": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(compiled, model_flops_global: float, n_chips: int,
+            hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):           # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    return Roofline(
+        flops=flops,
+        bytes_accessed=nbytes,
+        coll_bytes=coll,
+        compute_t=flops / PEAK_FLOPS,
+        memory_t=nbytes / HBM_BW,
+        collective_t=sum(coll.values()) / ICI_BW,
+        model_flops=model_flops_global / max(n_chips, 1),
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); D = tokens.
+
+    decode steps process one token per sequence (D = global_batch); prefill
+    and train process B*S tokens; train includes the 3x backward factor via
+    the standard 6·N·D (fwd 2·N·D + bwd 4·N·D).
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 6.0 * n * tokens

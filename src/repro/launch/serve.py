@@ -1,0 +1,106 @@
+"""Access-controlled RAG serving driver — the paper's deployment shape.
+
+Pipeline per batched request (role r, query text → embedding stub):
+  1. VEDA/EffVEDA retrieval: coordinated search over the role's query plan
+     returns the top-k *authorized* passages (repro.core);
+  2. the generator LM prefills [passage tokens ++ query tokens] and decodes
+     a fixed number of new tokens with its KV/SSM cache.
+
+Everything here is CPU-runnable at smoke scale (examples/rag_serve.py) and
+the LM side is exactly the path the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_smoke_config
+from ..core import (HNSWCostModel, build_effveda, build_vector_storage,
+                    coordinated_search, exact_factory, SearchStats)
+from ..data import make_retrieval_dataset
+from ..models.config import ModelConfig
+from ..models.model import init_params, prefill_fn, decode_fn, init_cache
+from .sharding import Rules, NO_RULES
+import repro.models.layers as L
+
+
+@dataclasses.dataclass
+class RAGServer:
+    cfg: ModelConfig
+    params: Dict
+    store: object                  # repro.core.VectorStore
+    rules: Rules = dataclasses.field(default_factory=lambda: NO_RULES)
+    passage_tokens: int = 8        # tokens per retrieved passage (stub map)
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._prefill = jax.jit(
+            lambda p, toks, cache: prefill_fn(p, self.cfg, self.rules,
+                                              tokens=toks, cache=cache))
+        self._decode = jax.jit(
+            lambda p, tok, cache, pos: decode_fn(p, self.cfg, self.rules,
+                                                 tok, cache, pos))
+
+    # stub detokenizer: passage id → deterministic pseudo tokens
+    def _passage_to_tokens(self, pid: int) -> np.ndarray:
+        rng = np.random.default_rng(pid + 17)
+        return rng.integers(0, self.cfg.vocab_size,
+                            self.passage_tokens).astype(np.int32)
+
+    def serve_batch(self, queries: np.ndarray, roles: Sequence[int],
+                    k: int = 4, efs: int = 50, decode_tokens: int = 8,
+                    stats: Optional[SearchStats] = None) -> Dict:
+        t0 = time.time()
+        retrieved: List[List[int]] = []
+        for q, r in zip(queries, roles):
+            res = coordinated_search(self.store, q, int(r), k, efs,
+                                     stats=stats)
+            retrieved.append([vid for _, vid in res])
+        t_retrieval = time.time() - t0
+        # build prompts: retrieved passages then a query stub token
+        b = len(queries)
+        prompt_len = k * self.passage_tokens + 1
+        prompts = np.zeros((b, prompt_len), np.int32)
+        for i, pids in enumerate(retrieved):
+            toks = [self._passage_to_tokens(pid) for pid in pids]
+            while len(toks) < k:
+                toks.append(np.zeros(self.passage_tokens, np.int32))
+            prompts[i, :-1] = np.concatenate(toks)[:prompt_len - 1]
+            prompts[i, -1] = 1   # query sentinel
+        t0 = time.time()
+        max_seq = prompt_len + decode_tokens
+        cache = init_cache(self.cfg, b, max_seq, dtype=L._dtype(self.cfg))
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      cache)
+        out_tokens = np.zeros((b, decode_tokens), np.int32)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        for t in range(decode_tokens):
+            out_tokens[:, t] = np.asarray(tok)[:, 0]
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.int32(prompt_len + t))
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        t_generate = time.time() - t0
+        return {"retrieved": retrieved, "tokens": out_tokens,
+                "t_retrieval_s": t_retrieval, "t_generate_s": t_generate}
+
+
+def build_demo_server(arch: str = "smollm-360m", n_vectors: int = 4000,
+                      dim: int = 24, n_roles: int = 8, beta: float = 1.1,
+                      seed: int = 0) -> Tuple[RAGServer, object]:
+    """Small end-to-end server: synthetic corpus + EffVEDA store + smoke LM."""
+    ds = make_retrieval_dataset(n_vectors=n_vectors, dim=dim,
+                                n_roles=n_roles, n_permissions=3 * n_roles,
+                                seed=seed)
+    cm = HNSWCostModel(lam_threshold=400)
+    result = build_effveda(ds.policy, cm, beta=beta, k=10)
+    store = build_vector_storage(result, ds.vectors,
+                                 engine_factory=exact_factory())
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    return RAGServer(cfg=cfg, params=params, store=store), ds

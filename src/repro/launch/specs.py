@@ -1,0 +1,47 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns (args, logical_axes) for the step function
+of the shape's kind:
+  train   → {tokens|embeds, labels}
+  prefill → {tokens|embeds}
+  decode  → {tokens, cache, cache_pos}
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, ShapeConfig
+from ..models.model import init_cache_shapes, cache_axes
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig
+                ) -> Tuple[Dict, Dict]:
+    b, s = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.frontend is not None:
+            args = {"embeds": sd((b, s, cfg.d_model), jnp.bfloat16),
+                    "labels": sd((b, s), jnp.int32)}
+            axes = {"embeds": ("batch", "seq", "embed"),
+                    "labels": ("batch", "seq")}
+        else:
+            args = {"tokens": sd((b, s), jnp.int32),
+                    "labels": sd((b, s), jnp.int32)}
+            axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        return args, axes
+    if shape.kind == "prefill":
+        if cfg.frontend is not None:
+            return ({"embeds": sd((b, s, cfg.d_model), jnp.bfloat16)},
+                    {"embeds": ("batch", "seq", "embed")})
+        return ({"tokens": sd((b, s), jnp.int32)},
+                {"tokens": ("batch", "seq")})
+    # decode: one new token against a seq_len-deep cache
+    cache = init_cache_shapes(cfg, b, s, dtype=jnp.bfloat16)
+    args = {"tokens": sd((b, 1), jnp.int32), "cache": cache,
+            "cache_pos": sd((), jnp.int32)}
+    axes = {"tokens": ("batch", None), "cache": cache_axes(cfg),
+            "cache_pos": ()}
+    return args, axes

@@ -1,0 +1,7 @@
+from .config import ModelConfig, ShapeConfig, SHAPES
+from .model import (init_params, param_axes, forward, train_step_fn,
+                    prefill_fn, decode_fn, init_cache_shapes, loss_fn)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "init_params",
+           "param_axes", "forward", "train_step_fn", "prefill_fn",
+           "decode_fn", "init_cache_shapes", "loss_fn"]

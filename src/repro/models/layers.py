@@ -1,0 +1,475 @@
+"""Model layers: GQA attention, SwiGLU MLP, capacity-routed MoE, Mamba2 SSD.
+
+Functional style: ``init_*`` returns a param dict; ``*_apply`` is pure.
+Every layer takes a :class:`repro.launch.sharding.Rules` for logical-axis
+sharding constraints (no-op when rules.mesh is None, e.g. CPU tests).
+
+Numerics: parameters in ``cfg.dtype`` (bf16 default); norms, softmax, router
+and SSD state math in f32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import Rules, NO_RULES
+from .config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale
+            ).astype(dtype)
+
+
+# =============================================================== norms / rope
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) *
+                    jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ============================================================= attention (GQA)
+def init_attention(cfg: ModelConfig, key) -> Dict:
+    dt = _dtype(cfg)
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": _init(ks[0], (d, h * hd), s, dt),
+        "wk": _init(ks[1], (d, hkv * hd), s, dt),
+        "wv": _init(ks[2], (d, hkv * hd), s, dt),
+        "wo": _init(ks[3], (h * hd, d), (h * hd) ** -0.5, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def attention_axes(cfg: ModelConfig) -> Dict:
+    a = {"wq": ("fsdp", "heads"), "wk": ("fsdp", "kv_heads"),
+         "wv": ("fsdp", "kv_heads"), "wo": ("heads", "fsdp")}
+    if cfg.qkv_bias:
+        a.update({"bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",)})
+    if cfg.qk_norm:
+        a.update({"q_norm": (None,), "k_norm": (None,)})
+    return a
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_offset, kv_len,
+                       chunk: int, unroll: bool = False,
+                       bf16_compute: bool = False) -> jax.Array:
+    """Online-softmax attention, scanning kv in chunks (jnp flash).
+
+    q: (B, Sq, H, hd); k,v: (B, Sk, Hkv, hd). q_offset: scalar — global
+    position of q[0] (decode: cache fill). kv_len: valid kv prefix length.
+    Returns (B, Sq, H, hd) f32.
+
+    ``bf16_compute`` (§Perf): keep q/k/v (and the probability matrix) in
+    bf16 with f32 accumulation via preferred_element_type — avoids
+    materializing f32 copies of the KV stream (2x attention-path bytes).
+    """
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = hd ** -0.5
+    qg = q.reshape(b, sq, hkv, rep, hd)
+    if not bf16_compute:
+        qg = qg.astype(jnp.float32)
+    chunk = min(chunk, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, hkv, hd)
+    vc = v.reshape(b, n_chunks, chunk, hkv, hd)
+    rows = jnp.arange(sq)[:, None] + q_offset                # (Sq, 1) global
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        j, kj, vj = inputs
+        if bf16_compute:
+            s = jnp.einsum("bqgrd,bcgd->bqgrc", qg, kj,
+                           preferred_element_type=jnp.float32) * scale
+        else:
+            s = jnp.einsum("bqgrd,bcgd->bqgrc", qg,
+                           kj.astype(jnp.float32)) * scale   # (B,Sq,G,R,C)
+        cols = j * chunk + jnp.arange(chunk)                 # (C,)
+        valid = (cols[None, :] < kv_len)
+        if causal:
+            valid = valid & (cols[None, :] <= rows)
+        s = jnp.where(valid[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - safe[..., None])
+        p = jnp.where(valid[None, :, None, None, :], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        if bf16_compute:
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqgrc,bcgd->bqgrd", p.astype(jnp.bfloat16), vj,
+                preferred_element_type=jnp.float32)
+        else:
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqgrc,bcgd->bqgrd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, hkv, rep), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, rep), jnp.float32)
+    a0 = jnp.zeros((b, sq, hkv, rep, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+        unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, hq, hd)
+
+
+def attention_apply(p: Dict, x: jax.Array, cfg: ModelConfig, rules: Rules,
+                    positions: jax.Array,
+                    cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    cache_pos: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, Optional[Tuple]]:
+    """x: (B, S, D). cache: (k,v) each (B, Smax, Hkv, hd) when decoding."""
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = x.dtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    n_model = rules._axis_size(rules.table.get("heads")) if rules.mesh else 1
+    if cfg.attn_sp_fallback and h % max(n_model, 1) != 0:
+        # §Perf: unshardable heads (e.g. 15 on a 16-way axis) — keep the
+        # sequence sharded through attention instead of replicating it
+        q = rules.constrain(q, ("batch", "seq", None, None))
+        k = rules.constrain(k, ("batch", "seq", None, None))
+    else:
+        q = rules.constrain(q, ("batch", None, "heads", None))
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_pos, axis=1)
+        new_cache = (ck, cv)
+        out = _chunked_attention(q, ck, cv, causal=cfg.causal,
+                                 q_offset=cache_pos, kv_len=cache_pos + s,
+                                 chunk=cfg.attn_chunk,
+                                 unroll=cfg.unroll_inner,
+                                 bf16_compute=cfg.bf16_attn_compute)
+    else:
+        out = _chunked_attention(q, k, v, causal=cfg.causal, q_offset=0,
+                                 kv_len=s, chunk=cfg.attn_chunk,
+                                 unroll=cfg.unroll_inner,
+                                 bf16_compute=cfg.bf16_attn_compute)
+    out = jnp.einsum("bsk,kd->bsd",
+                     out.reshape(b, s, h * hd).astype(dt), p["wo"])
+    return out, new_cache
+
+
+# ================================================================ SwiGLU MLP
+def init_mlp(cfg: ModelConfig, key) -> Dict:
+    dt = _dtype(cfg)
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(ks[0], (d, f), d ** -0.5, dt),
+        "w_up": _init(ks[1], (d, f), d ** -0.5, dt),
+        "w_down": _init(ks[2], (f, d), f ** -0.5, dt),
+    }
+
+
+def mlp_axes(cfg: ModelConfig) -> Dict:
+    return {"w_gate": ("fsdp", "ff"), "w_up": ("fsdp", "ff"),
+            "w_down": ("ff", "fsdp")}
+
+
+def mlp_apply(p: Dict, x: jax.Array, rules: Rules) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    g = rules.constrain(g, ("batch", None, "ff"))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ===================================================================== MoE
+def init_moe(cfg: ModelConfig, key) -> Dict:
+    dt = _dtype(cfg)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _init(ks[0], (d, e), d ** -0.5, jnp.float32),
+        "w_gate": _init(ks[1], (e, d, f), d ** -0.5, dt),
+        "w_up": _init(ks[2], (e, d, f), d ** -0.5, dt),
+        "w_down": _init(ks[3], (e, f, d), f ** -0.5, dt),
+    }
+
+
+def moe_axes(cfg: ModelConfig) -> Dict:
+    return {"router": ("embed", None),
+            "w_gate": ("experts", "fsdp", None),
+            "w_up": ("experts", "fsdp", None),
+            "w_down": ("experts", None, "fsdp")}
+
+
+def _moe_groups(t: int, target: int = 512) -> int:
+    g = 1
+    while g * 2 <= target and t % (g * 2) == 0:
+        g *= 2
+    return g
+
+
+def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig, rules: Rules
+              ) -> jax.Array:
+    """Capacity-based top-k routing with gather/scatter dispatch.
+
+    Avoids the (T, E, C) one-hot dispatch *einsum* (whose dense FLOPs would
+    dwarf the expert FFN): slot assignment is a small int32 scatter, data
+    movement is two gathers. Groups shard over all mesh axes; the expert FFN
+    re-shards groups→(pod,data) × experts→model (the EP all-to-all).
+    """
+    b, s, d = x.shape
+    e, k_top, f = cfg.n_experts, cfg.experts_per_token, cfg.d_ff
+    t = b * s
+    g = _moe_groups(t)
+    tg = t // g
+    cap = max(1, int(math.ceil(tg * k_top / e * cfg.capacity_factor)))
+    xf = x.reshape(g, tg, d)
+    xf = rules.constrain(xf, ("expert_groups" if cfg.moe_direct_groups
+                              else "moe_all", None, None))
+    logits = jnp.einsum("gtd,de->gte", xf.astype(jnp.float32), p["router"])
+    gates, eidx = jax.lax.top_k(logits, k_top)               # (G,Tg,K)
+    gates = jax.nn.softmax(gates, axis=-1)
+    sk = tg * k_top
+    e_sl = eidx.reshape(g, sk)                               # (G,SK)
+    gate_sl = gates.reshape(g, sk)
+    # position of each slot within its expert (inclusive rank)
+    oh = jax.nn.one_hot(e_sl, e, dtype=jnp.float32)          # (G,SK,E)
+    pos = jnp.cumsum(oh, axis=1)
+    pos_sl = jnp.take_along_axis(pos, e_sl[..., None],
+                                 axis=-1)[..., 0].astype(jnp.int32)  # (G,SK)
+    keep = pos_sl <= cap
+    # slot_token[g, e, c] = flat slot index s that fills it (-1 empty)
+    gi = jnp.broadcast_to(jnp.arange(g)[:, None], (g, sk))
+    si = jnp.broadcast_to(jnp.arange(sk)[None, :], (g, sk))
+    slot_token = jnp.full((g, e, cap), -1, jnp.int32)
+    slot_token = slot_token.at[
+        gi, e_sl, jnp.where(keep, pos_sl - 1, cap)].set(si, mode="drop")
+    # dispatch gather: token index = slot // K
+    tok_for_slot = jnp.where(slot_token >= 0, slot_token // k_top, 0)
+    if cfg.moe_batched_gather:
+        flat = tok_for_slot.reshape(g, e * cap)
+        xe = jnp.take_along_axis(xf, flat[..., None], axis=1)
+        xe = xe.reshape(g, e, cap, d)
+    else:
+        gi3 = jnp.arange(g)[:, None, None]
+        xe = xf[gi3, tok_for_slot]                           # (G,E,C,D)
+    xe = xe * (slot_token >= 0)[..., None].astype(xe.dtype)
+    xe = rules.constrain(xe, ("expert_groups", "experts", None, None))
+    hg = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    hu = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    hh = jax.nn.silu(hg.astype(jnp.float32)).astype(xe.dtype) * hu
+    ye = jnp.einsum("gecf,efd->gecd", hh, p["w_down"])
+    ye = rules.constrain(ye, ("expert_groups" if cfg.moe_direct_groups
+                              else "moe_all", None, None, None))
+    # combine gather: each kept slot reads its expert output
+    if cfg.moe_batched_gather:
+        comb = e_sl * cap + jnp.clip(pos_sl - 1, 0, cap - 1)  # (G,SK)
+        y_sl = jnp.take_along_axis(ye.reshape(g, e * cap, d),
+                                   comb[..., None], axis=1)   # (G,SK,D)
+    else:
+        gi2 = jnp.broadcast_to(jnp.arange(g)[:, None], (g, sk))
+        y_sl = ye[gi2, e_sl, jnp.clip(pos_sl - 1, 0, cap - 1)]  # (G,SK,D)
+    y_sl = y_sl * (keep[..., None] & True).astype(y_sl.dtype)
+    y_sl = y_sl * gate_sl[..., None].astype(y_sl.dtype)
+    y = y_sl.reshape(g, tg, k_top, d).sum(axis=2)
+    return y.reshape(b, s, d).astype(x.dtype)
+
+
+# ================================================================ Mamba2 SSD
+def init_mamba(cfg: ModelConfig, key) -> Dict:
+    dt = _dtype(cfg)
+    d, di, n, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di + 2 * n + nh), d ** -0.5, dt),
+        "conv_w": _init(ks[1], (cfg.conv_width, conv_ch), 0.5, dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((di,), dt),
+        "out_proj": _init(ks[4], (di, d), di ** -0.5, dt),
+    }
+
+
+def mamba_axes(cfg: ModelConfig) -> Dict:
+    return {"in_proj": ("fsdp", "ff"), "conv_w": (None, "ff"),
+            "conv_b": ("ff",), "a_log": (None,), "dt_bias": (None,),
+            "d_skip": (None,), "norm_w": ("ff",), "out_proj": ("ff", "embed")}
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv via shifted adds. x: (B,S,C); w: (W,C)."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                 # (B, S+W-1, C)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for i in range(width):
+        out = out + xp[:, i:i + s].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_state = xp[:, -(width - 1):] if width > 1 else state
+    return jax.nn.silu(out).astype(x.dtype), new_state
+
+
+def _segsum_decay(da_c: jax.Array) -> jax.Array:
+    """da_c: (..., Q) log-decay per step → (..., Q, Q) decay matrix
+    exp(sum_{k<j<=q} da_j) for q >= k, else 0."""
+    q = da_c.shape[-1]
+    cs = jnp.cumsum(da_c, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]               # (..., Q, Q)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def mamba_apply(p: Dict, x: jax.Array, cfg: ModelConfig, rules: Rules,
+                state: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Mamba2 SSD block. x: (B, S, D).
+
+    ``state`` (decode): {"conv": (B,W-1,C), "ssm": (B,H,P,N)} → single-step
+    recurrence; otherwise chunked SSD over the sequence.
+    """
+    b, s, d = x.shape
+    di, n, nh, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [di + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                 # (H,) negative
+    if state is not None:
+        xbc_conv, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                            state["conv"])
+    else:
+        xbc_conv, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, b_in, c_in = jnp.split(xbc_conv, [di, di + n], axis=-1)
+    xh = xs.reshape(b, s, nh, pd).astype(jnp.float32)
+    bf = b_in.astype(jnp.float32)                            # (B,S,N)
+    cf = c_in.astype(jnp.float32)
+    da = dt * a                                              # (B,S,H) log decay
+    xdt = xh * dt[..., None]                                 # (B,S,H,P)
+
+    if state is not None and s == 1:                          # decode step
+        ssm = state["ssm"].astype(jnp.float32)               # (B,H,P,N)
+        dec = jnp.exp(da[:, 0])                              # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xdt[:, 0], bf[:, 0])
+        ssm_new = ssm * dec[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", ssm_new, cf[:, 0])[:, None]  # (B,1,H,P)
+        new_state = {"conv": conv_state,
+                     "ssm": ssm_new.astype(state["ssm"].dtype)}
+    else:                                                     # chunked SSD
+        q = min(cfg.ssm_chunk, s)
+        pad = (-s) % q
+        sp = s + pad
+        if pad:
+            # padded steps must be identity on the state: x→0 (no input) and
+            # dt→0 (decay exp(0)=1)
+            xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            bf = jnp.pad(bf, ((0, 0), (0, pad), (0, 0)))
+            cf = jnp.pad(cf, ((0, 0), (0, pad), (0, 0)))
+            da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        nc = sp // q
+        xc = xdt.reshape(b, nc, q, nh, pd)
+        bc = bf.reshape(b, nc, q, n)
+        cc = cf.reshape(b, nc, q, n)
+        dac = da.reshape(b, nc, q, nh).transpose(0, 1, 3, 2)  # (B,NC,H,Q)
+        decay = _segsum_decay(dac)                            # (B,NC,H,Q,Q)
+        att = jnp.einsum("bcqn,bckn->bcqk", cc, bc)           # (B,NC,Q,Q)
+        y_intra = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", att, decay, xc)
+        cs = jnp.cumsum(dac, axis=-1)                         # (B,NC,H,Q)
+        dec_to_end = jnp.exp(cs[..., -1:] - cs)               # (B,NC,H,Q)
+        chunk_state = jnp.einsum("bckn,bchk,bckhp->bchpn",
+                                 bc, dec_to_end, xc)          # (B,NC,H,P,N)
+        chunk_decay = jnp.exp(cs[..., -1])                    # (B,NC,H)
+
+        def scan_fn(carry, inp):
+            st = carry                                        # (B,H,P,N)
+            cstate, cdecay = inp
+            out = st
+            st_new = st * cdecay[..., None, None] + cstate
+            return st_new, out
+
+        if state is not None:
+            init = state["ssm"].astype(jnp.float32)
+        else:
+            init = jnp.zeros((b, nh, pd, n), jnp.float32)
+        # bounded unroll: the state recurrence has negligible flops, and
+        # unrolling hundreds of chunks explodes compile time (its rolled
+        # bytes undercount is documented in EXPERIMENTS.md §Roofline)
+        final, states_in = jax.lax.scan(
+            scan_fn, init,
+            (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+            unroll=nc if (cfg.unroll_inner and nc <= 16) else 1)
+        states_in = jnp.moveaxis(states_in, 0, 1)             # (B,NC,H,P,N)
+        dec_from_start = jnp.exp(cs)                          # (B,NC,H,Q)
+        y_inter = jnp.einsum("bcqn,bchq,bchpn->bcqhp",
+                             cc, dec_from_start, states_in)
+        y = (y_intra + y_inter).reshape(b, sp, nh, pd)[:, :s]
+        new_state = None
+        if state is not None:
+            new_state = {"conv": conv_state,
+                         "ssm": final.astype(state["ssm"].dtype)}
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm((y * zf).astype(x.dtype), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out.astype(x.dtype), new_state

@@ -1,0 +1,386 @@
+"""Composable LM covering all assigned architecture families.
+
+Layer stacks are scanned (``jax.lax.scan`` over stacked params) with optional
+remat so HLO size and activation memory stay bounded at 80-layer scale.
+Families:
+  dense / vlm / encoder — pre-norm GQA attention + SwiGLU MLP
+  moe                   — attention + capacity-routed MoE FFN
+  ssm                   — Mamba2 SSD blocks (attention-free)
+  hybrid                — Mamba2 backbone + one *shared* attention+MLP block
+                          applied every ``attn_every`` layers (zamba2-style)
+
+The LM loss streams over sequence chunks so the (B, S, V) logits tensor is
+never materialized (vocab stays TP-sharded; each chunk's CE reduces with a
+cross-``model`` collective).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import Rules, NO_RULES
+from .config import ModelConfig
+from . import layers as L
+
+
+# ================================================================ init / axes
+def _layer_init(cfg: ModelConfig, key) -> Dict:
+    ks = jax.random.split(key, 4)
+    dt = L._dtype(cfg)
+    d = cfg.d_model
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        return {"ln": jnp.ones((d,), dt), "mamba": L.init_mamba(cfg, ks[0])}
+    p = {"ln1": jnp.ones((d,), dt), "attn": L.init_attention(cfg, ks[0]),
+         "ln2": jnp.ones((d,), dt)}
+    if cfg.is_moe:
+        p["moe"] = L.init_moe(cfg, ks[1])
+    else:
+        p["mlp"] = L.init_mlp(cfg, ks[1])
+    return p
+
+
+def _layer_axes(cfg: ModelConfig) -> Dict:
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        return {"ln": (None,), "mamba": L.mamba_axes(cfg)}
+    a = {"ln1": (None,), "attn": L.attention_axes(cfg), "ln2": (None,)}
+    if cfg.is_moe:
+        a["moe"] = L.moe_axes(cfg)
+    else:
+        a["mlp"] = L.mlp_axes(cfg)
+    return a
+
+
+def _stack_axes(axes: Dict) -> Dict:
+    return jax.tree.map(lambda t: ("layers",) + t, axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dt = L._dtype(cfg)
+    d, vp = cfg.d_model, cfg.padded_vocab
+    k_embed, k_head, k_layers, k_shared, k_fe = jax.random.split(key, 5)
+    params: Dict = {
+        "embed": L._init(k_embed, (vp, d), d ** -0.5, dt),
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": L._init(k_head, (d, vp), d ** -0.5, dt),
+    }
+    if cfg.family == "hybrid":
+        n_sup, per = cfg.n_super, cfg.attn_every
+        keys = jax.random.split(k_layers, n_sup * per).reshape(n_sup, per, 2)
+        params["layers"] = jax.vmap(jax.vmap(
+            lambda k: _layer_init(cfg, k)))(keys)
+        ks = jax.random.split(k_shared, 2)
+        params["shared"] = {
+            "ln1": jnp.ones((d,), dt),
+            "attn": L.init_attention(cfg, ks[0]),
+            "ln2": jnp.ones((d,), dt),
+            "mlp": L.init_mlp(cfg, ks[1]),
+        }
+    else:
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _layer_init(cfg, k))(keys)
+    if cfg.frontend is not None:
+        params["frontend"] = L._init(k_fe, (d, d), d ** -0.5, dt)
+    return params
+
+
+def param_axes(cfg: ModelConfig) -> Dict:
+    axes: Dict = {
+        "embed": ("vocab", "fsdp"),
+        "final_norm": (None,),
+        "lm_head": ("fsdp", "vocab"),
+    }
+    la = _layer_axes(cfg)
+    if cfg.family == "hybrid":
+        axes["layers"] = jax.tree.map(lambda t: ("layers", "layers2") + t, la,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        axes["shared"] = {"ln1": (None,), "attn": L.attention_axes(cfg),
+                          "ln2": (None,), "mlp": L.mlp_axes(cfg)}
+    else:
+        axes["layers"] = _stack_axes(la)
+    if cfg.frontend is not None:
+        axes["frontend"] = ("fsdp", None)
+    return axes
+
+
+# ================================================================== caches
+def init_cache_shapes(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16) -> Dict:
+    """ShapeDtypeStructs for the serve cache (dry-run) — mirrors real init."""
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    sd = jax.ShapeDtypeStruct
+    if cfg.family == "ssm":
+        ch = cfg.d_inner + 2 * cfg.ssm_state
+        return {
+            "conv": sd((cfg.n_layers, batch, cfg.conv_width - 1, ch), dtype),
+            "ssm": sd((cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state), jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        ch = cfg.d_inner + 2 * cfg.ssm_state
+        n_sup, per = cfg.n_super, cfg.attn_every
+        return {
+            "conv": sd((n_sup, per, batch, cfg.conv_width - 1, ch), dtype),
+            "ssm": sd((n_sup, per, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state), jnp.float32),
+            "k": sd((n_sup, batch, max_seq, hkv, hd), dtype),
+            "v": sd((n_sup, batch, max_seq, hkv, hd), dtype),
+        }
+    return {
+        "k": sd((cfg.n_layers, batch, max_seq, hkv, hd), dtype),
+        "v": sd((cfg.n_layers, batch, max_seq, hkv, hd), dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_cache_shapes(cfg, batch, max_seq, dtype))
+
+
+def cache_axes(cfg: ModelConfig) -> Dict:
+    if cfg.family == "ssm":
+        return {"conv": ("layers", "batch", None, "ff"),
+                "ssm": ("layers", "batch", None, None, None)}
+    if cfg.family == "hybrid":
+        return {"conv": ("layers", "layers2", "batch", None, "ff"),
+                "ssm": ("layers", "layers2", "batch", None, None, None),
+                "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+                "v": ("layers", "batch", "kv_seq", "kv_heads", None)}
+    return {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", None)}
+
+
+# ================================================================== blocks
+def _attn_block(p, h, cfg, rules, positions, cache, cache_pos):
+    a_in = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    a_out, new_cache = L.attention_apply(
+        p["attn"], a_in, cfg, rules, positions, cache=cache,
+        cache_pos=cache_pos)
+    h = h + a_out
+    m_in = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        m_out = L.moe_apply(p["moe"], m_in, cfg, rules)
+    else:
+        m_out = L.mlp_apply(p["mlp"], m_in, rules)
+    h = h + m_out
+    h = rules.constrain(h, ("batch", "seq", "embed"))
+    return h, new_cache
+
+
+def _mamba_block(p, h, cfg, rules, state):
+    m_in = L.rms_norm(h, p["ln"], cfg.norm_eps)
+    out, new_state = L.mamba_apply(p["mamba"], m_in, cfg, rules, state=state)
+    h = h + out
+    h = rules.constrain(h, ("batch", "seq", "embed"))
+    return h, new_state
+
+
+def _shared_block(p, h, cfg, rules, positions, cache, cache_pos):
+    a_in = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    a_out, new_cache = L.attention_apply(p["attn"], a_in, cfg, rules,
+                                         positions, cache=cache,
+                                         cache_pos=cache_pos)
+    h = h + a_out
+    m_in = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+    h = h + L.mlp_apply(p["mlp"], m_in, rules)
+    return rules.constrain(h, ("batch", "seq", "embed")), new_cache
+
+
+# ================================================================== forward
+def forward(params: Dict, cfg: ModelConfig, rules: Rules,
+            tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            cache: Optional[Dict] = None,
+            cache_pos: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Returns (hidden (B, S, D) post-final-norm, new_cache)."""
+    if embeds is not None:
+        h = embeds
+        if "frontend" in params:
+            h = jnp.einsum("bsd,de->bse", h, params["frontend"])
+    else:
+        h = jnp.take(params["embed"], tokens, axis=0)
+    h = rules.constrain(h, ("batch", "seq", "embed"))
+    b, s = h.shape[0], h.shape[1]
+    pos0 = jnp.int32(0) if cache_pos is None else cache_pos
+    positions = pos0 + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32),
+                                        (b, s))
+
+    def maybe_remat(fn):
+        return jax.checkpoint(fn) if cfg.remat else fn
+
+    def _unroll(n):
+        return n if cfg.unroll_layers else 1
+
+    new_cache = None
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            hh = carry
+            if cache is None:
+                p_layer = xs
+                hh, _ = _mamba_block(p_layer, hh, cfg, rules, None)
+                return hh, None
+            p_layer, st = xs
+            hh, new_st = _mamba_block(p_layer, hh, cfg, rules, st)
+            return hh, new_st
+        if cache is None:
+            h, _ = jax.lax.scan(maybe_remat(body), h, params["layers"],
+                                unroll=_unroll(cfg.n_layers))
+        else:
+            st = {"conv": cache["conv"], "ssm": cache["ssm"]}
+            h, new_st = jax.lax.scan(maybe_remat(body), h,
+                                     (params["layers"], st),
+                                     unroll=_unroll(cfg.n_layers))
+            new_cache = new_st
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def inner_body(carry, xs):
+            hh = carry
+            if cache is None:
+                p_layer = xs
+                hh, _ = _mamba_block(p_layer, hh, cfg, rules, None)
+                return hh, None
+            p_layer, st = xs
+            hh, new_st = _mamba_block(p_layer, hh, cfg, rules, st)
+            return hh, new_st
+
+        def outer_body(carry, xs):
+            hh = carry
+            if cache is None:
+                p_sup = xs
+                hh, _ = jax.lax.scan(maybe_remat(inner_body), hh, p_sup,
+                                     unroll=_unroll(cfg.attn_every))
+                hh, _ = _shared_block(shared, hh, cfg, rules, positions,
+                                      None, None)
+                return hh, None
+            p_sup, st_sup, kv = xs
+            hh, new_st = jax.lax.scan(maybe_remat(inner_body), hh,
+                                      (p_sup, st_sup),
+                                      unroll=_unroll(cfg.attn_every))
+            hh, new_kv = _shared_block(shared, hh, cfg, rules, positions,
+                                       (kv["k"], kv["v"]), cache_pos)
+            return hh, (new_st, {"k": new_kv[0], "v": new_kv[1]})
+
+        if cache is None:
+            h, _ = jax.lax.scan(outer_body, h, params["layers"],
+                                unroll=_unroll(cfg.n_super))
+        else:
+            st_sup = {"conv": cache["conv"], "ssm": cache["ssm"]}
+            kv = {"k": cache["k"], "v": cache["v"]}
+            h, (new_st, new_kv) = jax.lax.scan(outer_body, h,
+                                               (params["layers"], st_sup, kv),
+                                               unroll=_unroll(cfg.n_super))
+            new_cache = {"conv": new_st["conv"], "ssm": new_st["ssm"],
+                         "k": new_kv["k"], "v": new_kv["v"]}
+    else:
+        def body(carry, xs):
+            hh = carry
+            if cache is None:
+                p_layer = xs
+                hh, _ = _attn_block(p_layer, hh, cfg, rules, positions,
+                                    None, None)
+                return hh, None
+            p_layer, kv = xs
+            hh, new_kv = _attn_block(p_layer, hh, cfg, rules, positions,
+                                     (kv["k"], kv["v"]), cache_pos)
+            return hh, {"k": new_kv[0], "v": new_kv[1]}
+        if cache is None:
+            h, _ = jax.lax.scan(maybe_remat(body), h, params["layers"],
+                                unroll=_unroll(cfg.n_layers))
+        else:
+            kv = {"k": cache["k"], "v": cache["v"]}
+            h, new_kv = jax.lax.scan(maybe_remat(body), h,
+                                     (params["layers"], kv),
+                                     unroll=_unroll(cfg.n_layers))
+            new_cache = new_kv
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, new_cache
+
+
+# ==================================================================== loss
+def loss_fn(params: Dict, cfg: ModelConfig, rules: Rules,
+            tokens: Optional[jax.Array], labels: jax.Array,
+            embeds: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Chunked-vocab CE. labels: (B, S) int32, -1 = padding/ignored.
+
+    Decoder LMs are fed pre-shifted labels by the data pipeline; encoders
+    (hubert) predict per-frame classes without shifting.
+    """
+    h, _ = forward(params, cfg, rules, tokens=tokens, embeds=embeds)
+    b, s, d = h.shape
+    chunk = min(cfg.loss_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    hc = jnp.moveaxis(h.reshape(b, n_chunks, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n_chunks, chunk), 1, 0)
+    head = params["lm_head"]
+    vp = cfg.padded_vocab
+
+    def chunk_loss(carry, xs):
+        tot, cnt = carry
+        hx, lx = xs                                      # (B,C,D), (B,C)
+        logits = jnp.einsum("bcd,dv->bcv", hx, head).astype(jnp.float32)
+        logits = rules.constrain(logits, ("batch", None, "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(jnp.maximum(lx, 0), vp, dtype=jnp.float32)
+        correct = jnp.sum(logits * onehot, axis=-1)
+        mask = (lx >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - correct) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    body = jax.checkpoint(chunk_loss) if cfg.remat else chunk_loss
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, lc),
+                                 unroll=n_chunks if cfg.unroll_inner else 1)
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss, {"loss": loss, "tokens": cnt}
+
+
+# =============================================================== serve steps
+def prefill_fn(params: Dict, cfg: ModelConfig, rules: Rules,
+               tokens: Optional[jax.Array] = None,
+               embeds: Optional[jax.Array] = None,
+               cache: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+    """Prefill: run the prompt, fill the cache, return last-token logits."""
+    if cache is None:
+        b = (tokens if tokens is not None else embeds).shape[0]
+        s = (tokens if tokens is not None else embeds).shape[1]
+        if cfg.family != "encoder":
+            cache = init_cache(cfg, b, s, dtype=L._dtype(cfg))
+    if cfg.family == "encoder":
+        h, _ = forward(params, cfg, rules, tokens=tokens, embeds=embeds)
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+        return rules.constrain(logits, ("batch", "seq", "vocab")), {}
+    h, new_cache = forward(params, cfg, rules, tokens=tokens, embeds=embeds,
+                           cache=cache, cache_pos=jnp.int32(0))
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], params["lm_head"])
+    return rules.constrain(logits, ("batch", "vocab")), new_cache
+
+
+def decode_fn(params: Dict, cfg: ModelConfig, rules: Rules,
+              tokens: jax.Array, cache: Dict, cache_pos: jax.Array
+              ) -> Tuple[jax.Array, Dict]:
+    """One-token decode step: tokens (B, 1), KV/SSM cache at ``cache_pos``."""
+    h, new_cache = forward(params, cfg, rules, tokens=tokens, cache=cache,
+                           cache_pos=cache_pos)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], params["lm_head"])
+    return rules.constrain(logits, ("batch", "vocab")), new_cache
+
+
+def train_step_fn(params, cfg, rules, batch, optimizer, opt_state):
+    """Forward+backward+update. ``optimizer`` is a repro.optim.Optimizer."""
+    def compute(p):
+        return loss_fn(p, cfg, rules,
+                       tokens=batch.get("tokens"), labels=batch["labels"],
+                       embeds=batch.get("embeds"))
+    (loss, metrics), grads = jax.value_and_grad(compute, has_aux=True)(params)
+    updates, new_opt_state = optimizer.update(grads, opt_state, params)
+    new_params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                              params, updates)
+    return new_params, new_opt_state, metrics

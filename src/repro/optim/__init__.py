@@ -1,0 +1,5 @@
+from .adamw import AdamW, OptConfig
+from .schedules import cosine_schedule, wsd_schedule, constant_schedule
+
+__all__ = ["AdamW", "OptConfig", "cosine_schedule", "wsd_schedule",
+           "constant_schedule"]

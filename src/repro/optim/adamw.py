@@ -1,0 +1,134 @@
+"""AdamW with optional int8-quantized moments.
+
+At 1T-parameter scale, f32 Adam moments (8 bytes/param) cannot fit 512 v5e
+chips next to bf16 params + grads.  ``quantized=True`` stores both moments as
+int8 with a per-tensor f32 absmax scale (2 bytes/param total), dequantizing
+on the fly inside the (jitted, sharded) update — the distributed-optimization
+trick that makes kimi-k2 trainable on the production mesh (DESIGN.md §4).
+
+``update`` returns *deltas*; callers apply ``p + u``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    schedule: Callable = None
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantized: bool = False
+
+
+def _q(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-20
+    return jnp.round(x / scale).astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _dq(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+class AdamW:
+    def __init__(self, cfg: OptConfig):
+        self.cfg = cfg
+        if self.cfg.schedule is None:
+            object.__setattr__(self.cfg, "schedule", lambda s: 1e-3)
+
+    # ------------------------------------------------------------------ init
+    def init(self, params) -> Dict:
+        if self.cfg.quantized:
+            zeros_q = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.int8), params)
+            zeros_s = jax.tree.map(
+                lambda p: jnp.zeros((), jnp.float32), params)
+            return {"m": zeros_q, "m_scale": zeros_s,
+                    "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.int8),
+                                      params),
+                    "v_scale": jax.tree.map(
+                        lambda p: jnp.zeros((), jnp.float32), params),
+                    "count": jnp.zeros((), jnp.int32)}
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros,
+                "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def state_axes(self, axes_tree) -> Dict:
+        """Logical axes for the opt state, mirroring the param axes."""
+        scalar = jax.tree.map(lambda t: (),
+                              axes_tree,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        out = {"m": axes_tree, "v": axes_tree, "count": ()}
+        if self.cfg.quantized:
+            out["m_scale"] = scalar
+            out["v_scale"] = scalar
+        return out
+
+    # ---------------------------------------------------------------- update
+    def update(self, grads, state, params) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        count = state["count"] + 1
+        lr = cfg.schedule(count)
+        # global grad clipping
+        gsq = jax.tree.reduce(
+            lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))),
+            grads, jnp.float32(0))
+        gnorm = jnp.sqrt(gsq)
+        clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        bc1 = 1 - cfg.b1 ** count.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+        if cfg.quantized:
+            def upd(g, mq, ms, vq, vs, p):
+                g = g.astype(jnp.float32) * clip
+                m = cfg.b1 * _dq(mq, ms) + (1 - cfg.b1) * g
+                v = cfg.b2 * _dq(vq, vs) + (1 - cfg.b2) * g * g
+                mhat = m / bc1
+                vhat = v / bc2
+                delta = -lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                               + cfg.weight_decay * p.astype(jnp.float32))
+                nmq, nms = _q(m)
+                nvq, nvs = _q(v)
+                return delta.astype(p.dtype), nmq, nms, nvq, nvs
+            flat = jax.tree.map(
+                upd, grads, state["m"], state["m_scale"], state["v"],
+                state["v_scale"], params)
+            deltas = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+            new = {"m": jax.tree.map(lambda t: t[1], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple)),
+                   "m_scale": jax.tree.map(
+                       lambda t: t[2], flat,
+                       is_leaf=lambda x: isinstance(x, tuple)),
+                   "v": jax.tree.map(lambda t: t[3], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple)),
+                   "v_scale": jax.tree.map(
+                       lambda t: t[4], flat,
+                       is_leaf=lambda x: isinstance(x, tuple)),
+                   "count": count}
+            return deltas, new
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * clip
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = -lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                           + cfg.weight_decay * p.astype(jnp.float32))
+            return delta.astype(p.dtype), m, v
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        is_triple = lambda x: isinstance(x, tuple)
+        deltas = jax.tree.map(lambda t: t[0], flat, is_leaf=is_triple)
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=is_triple)
+        new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=is_triple)
+        return deltas, {"m": new_m, "v": new_v, "count": count}

@@ -1,0 +1,34 @@
+"""Learning-rate schedules: cosine and WSD (MiniCPM's warmup-stable-decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+    return fn
+
+
+def wsd_schedule(lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.01):
+    """Warmup–Stable–Decay (MiniCPM, arXiv:2404.06395): linear warmup, long
+    constant plateau, short exponential-style decay to final_frac*lr."""
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = lr * (final_frac ** t)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < warmup + stable, lr, dec))
+        return out.astype(jnp.float32)
+    return fn

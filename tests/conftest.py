@@ -1,0 +1,39 @@
+import os
+import sys
+
+# src-layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core import (generate_policy, HNSWCostModel, build_veda,
+                        build_effveda)
+
+
+@pytest.fixture(scope="session")
+def small_policy():
+    return generate_policy(n_vectors=4000, n_roles=8, n_permissions=20,
+                           seed=1)
+
+
+@pytest.fixture(scope="session")
+def cost_model():
+    return HNSWCostModel(lam_threshold=300)
+
+
+@pytest.fixture(scope="session")
+def veda_result(small_policy, cost_model):
+    return build_veda(small_policy, cost_model, beta=1.2, k=10)
+
+
+@pytest.fixture(scope="session")
+def effveda_result(small_policy, cost_model):
+    return build_effveda(small_policy, cost_model, beta=1.2, k=10)
+
+
+@pytest.fixture(scope="session")
+def small_vectors(small_policy):
+    rng = np.random.default_rng(0)
+    return rng.standard_normal((small_policy.n_vectors, 16)
+                               ).astype(np.float32)

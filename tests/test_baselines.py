@@ -1,0 +1,80 @@
+"""Comparison baselines (ACORN/SIEVE/HoneyBee): budget + correctness."""
+import numpy as np
+import pytest
+
+from repro.baselines import FilteredHNSW, SieveIndex, HoneyBeePartitioner
+from repro.core import metrics, exact_factory
+
+
+def test_sieve_respects_budget(small_policy, cost_model):
+    for beta in (1.0, 1.2, 1.5):
+        s = SieveIndex(small_policy, cost_model, beta=beta)
+        assert s.sa <= beta + 1e-9
+        assert s.n_indices() >= 1          # global index always kept
+
+
+def test_sieve_routing_and_correctness(small_policy, cost_model,
+                                       small_vectors):
+    s = SieveIndex(small_policy, cost_model, beta=1.5)
+    s.build_engines(small_vectors, exact_factory())
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        r = int(rng.integers(small_policy.n_roles))
+        q = small_vectors[rng.integers(len(small_vectors))] + 0.01
+        got = s.search(q, r, 10, 50)
+        truth = metrics.brute_force_topk(
+            small_vectors, small_policy.authorized_mask(r), q, 10)
+        assert [i for _, i in got] == [i for _, i in truth]
+
+
+def test_honeybee_partitions_and_correctness(small_policy, cost_model,
+                                             small_vectors):
+    hb = HoneyBeePartitioner(small_policy, cost_model, beta=1.3)
+    assert hb.sa <= 1.3 + 1e-9
+    # every role maps to exactly one partition containing its data
+    for r in small_policy.roles():
+        pid = hb.role_partition[r]
+        assert r in hb.partitions[pid]
+    hb.build_engines(small_vectors, exact_factory())
+    rng = np.random.default_rng(1)
+    recs = []
+    for _ in range(10):
+        r = int(rng.integers(small_policy.n_roles))
+        q = small_vectors[rng.integers(len(small_vectors))] + 0.01
+        got = hb.search(q, r, 10, 50)
+        mask = small_policy.authorized_mask(r)
+        assert all(mask[i] for _, i in got)      # never leaks
+        truth = metrics.brute_force_topk(small_vectors, mask, q, 10)
+        recs.append(metrics.recall_at_k([i for _, i in got],
+                                        [i for _, i in truth], 10))
+    # λ·k inflation does not guarantee exact top-k on impure partitions —
+    # the paper observes HoneyBee's recall deficit (Exp 12); require decent
+    assert np.mean(recs) >= 0.7, np.mean(recs)
+
+
+def test_acorn_filtered_search_authorized_only(small_policy):
+    rng = np.random.default_rng(2)
+    data = rng.standard_normal((1500, 16)).astype(np.float32)
+    mask = small_policy.authorized_mask(0)[:1500]
+    for gamma in (1, 2):
+        idx = FilteredHNSW(data, M=8, efc=40, gamma=gamma)
+        q = data[3] + 0.01
+        got = idx.search(q, 10, 60, allowed=mask)
+        assert all(mask[i] for _, i in got)
+        assert len(got) > 0
+
+
+def test_acorn_recall_reasonable(small_policy):
+    rng = np.random.default_rng(3)
+    data = rng.standard_normal((1500, 16)).astype(np.float32)
+    mask = small_policy.authorized_mask(1)[:1500]
+    idx = FilteredHNSW(data, M=10, efc=60, gamma=1)
+    recs = []
+    for _ in range(10):
+        ids = np.flatnonzero(mask)
+        q = data[ids[rng.integers(len(ids))]] + \
+            0.05 * rng.standard_normal(16).astype(np.float32)
+        got = {i for _, i in idx.search(q, 10, 80, allowed=mask)}
+        truth = {i for _, i in metrics.brute_force_topk(data, mask, q, 10)}
+        recs.append(len(got & truth) / 10)
+    assert np.mean(recs) >= 0.5        # filtered traversal loses some recall

@@ -1,0 +1,110 @@
+"""Coordinated search (§6.2): correctness vs brute force, stats, multi-role."""
+import numpy as np
+import pytest
+
+from repro.core import (build_vector_storage, build_effveda, exact_factory,
+                        hnsw_factory, coordinated_search, independent_search,
+                        routed_search, global_filtered_search, metrics,
+                        SearchStats, HNSWCostModel)
+
+
+@pytest.fixture(scope="module")
+def store(effveda_result, small_vectors):
+    return build_vector_storage(effveda_result, small_vectors,
+                                engine_factory=exact_factory(),
+                                with_global=True)
+
+
+def _truth(store, x, roles, k):
+    mask = store.authorized_mask_multi(roles)
+    return metrics.brute_force_topk(store.data, mask, x, k)
+
+
+def test_exact_engines_give_exact_recall(store, small_policy):
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        r = int(rng.integers(small_policy.n_roles))
+        x = store.data[rng.integers(len(store.data))] + 0.01
+        got = coordinated_search(store, x, r, 10, 50)
+        truth = _truth(store, x, [r], 10)
+        assert [i for _, i in got] == [i for _, i in truth]
+
+
+def test_results_always_authorized(store, small_policy):
+    rng = np.random.default_rng(1)
+    for _ in range(25):
+        r = int(rng.integers(small_policy.n_roles))
+        x = rng.standard_normal(store.data.shape[1]).astype(np.float32) * 3
+        for fn in (coordinated_search, independent_search):
+            got = fn(store, x, r, 10, 50)
+            mask = store.authorized_mask(r)
+            assert all(mask[i] for _, i in got)
+
+
+def test_coordinated_matches_independent_with_exact_engines(store,
+                                                            small_policy):
+    rng = np.random.default_rng(2)
+    for _ in range(15):
+        r = int(rng.integers(small_policy.n_roles))
+        x = store.data[rng.integers(len(store.data))] + 0.02
+        a = coordinated_search(store, x, r, 10, 50)
+        b = independent_search(store, x, r, 10, 50)
+        assert [i for _, i in a] == [i for _, i in b]
+
+
+def test_stats_accounting(store, small_policy):
+    stats = SearchStats()
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        r = int(rng.integers(small_policy.n_roles))
+        x = store.data[rng.integers(len(store.data))]
+        coordinated_search(store, x, r, 10, 50, stats=stats)
+    assert stats.indices_visited >= 0
+    assert 0.0 <= stats.purity <= 1.0
+    assert 0.0 <= stats.skip_rate <= 1.0
+    assert stats.efs_used <= stats.efs_worst_case + 1e-9 or \
+        stats.efs_worst_case == 0
+
+
+def test_multi_role_union_semantics(store, small_policy):
+    rng = np.random.default_rng(4)
+    for _ in range(10):
+        roles = list(rng.choice(small_policy.n_roles, size=2, replace=False))
+        roles = [int(r) for r in roles]
+        x = store.data[rng.integers(len(store.data))] + 0.01
+        got = coordinated_search(store, x, roles[0], 5, 50, roles=roles)
+        truth = _truth(store, x, roles, 5)
+        assert [i for _, i in got] == [i for _, i in truth]
+
+
+def test_routed_search_fallback_matches_partition_path(store, small_policy):
+    rng = np.random.default_rng(5)
+    x = store.data[7]
+    all_roles = list(range(small_policy.n_roles))   # broad: >80% of D
+    got = routed_search(store, x, all_roles, 5, 50)
+    truth = _truth(store, x, all_roles, 5)
+    assert [i for _, i in got] == [i for _, i in truth]
+    # selective query must NOT take the global path
+    stats = SearchStats()
+    routed_search(store, x, [0], 5, 50, stats=stats)
+    assert stats.indices_visited != 1 or stats.impure_visits == 0
+
+
+def test_hnsw_engine_high_recall(effveda_result, small_vectors,
+                                 small_policy):
+    store = build_vector_storage(
+        effveda_result, small_vectors,
+        engine_factory=hnsw_factory(M=12, efc=80))
+    rng = np.random.default_rng(6)
+    recs = []
+    for _ in range(20):
+        r = int(rng.integers(small_policy.n_roles))
+        ids = small_policy.d_of_role(r)
+        x = small_vectors[ids[rng.integers(len(ids))]] + \
+            0.05 * rng.standard_normal(16).astype(np.float32)
+        got = coordinated_search(store, x, r, 10, 60)
+        truth = metrics.brute_force_topk(
+            small_vectors, small_policy.authorized_mask(r), x, 10)
+        recs.append(metrics.recall_at_k([i for _, i in got],
+                                        [i for _, i in truth], 10))
+    assert np.mean(recs) >= 0.95, np.mean(recs)

@@ -1,0 +1,73 @@
+"""Cost model (Def. 2.2) + Appendix B calibration."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import HNSWCostModel, ScanCostModel, calibrate
+
+
+def test_def22_three_cases():
+    cm = HNSWCostModel(a=1.0, b=1.0, c=0.0, alpha=5, lam_threshold=100)
+    k = 10
+    efs = cm.alpha * k
+    n = 10_000
+    # pure
+    assert cm.role_query_cost(n, n, k) == pytest.approx(
+        math.log2(n) + efs)
+    # impure, lam*efs <= n  (lam = 2)
+    lam = 2
+    assert cm.role_query_cost(n, n // 2, k) == pytest.approx(
+        math.log2(n) + lam * efs)
+    # impure degenerate: lam*efs > n → full traversal
+    n2 = 120
+    cm2 = HNSWCostModel(a=1.0, b=1.0, c=0.0, alpha=5, lam_threshold=100)
+    assert cm2.role_query_cost(n2, 1, k) == pytest.approx(
+        math.log2(n2) + n2)
+
+
+def test_small_nodes_linear_scan():
+    cm = HNSWCostModel(lam_threshold=1000, scan_per_vec=0.01, scan_c=1.0)
+    assert cm.role_query_cost(500, 500, 10) == pytest.approx(0.01 * 500 + 1)
+    assert cm.role_query_cost(500, 100, 10) == pytest.approx(0.01 * 500 + 1)
+
+
+def test_oracle_cost_lower_than_impure():
+    cm = HNSWCostModel(lam_threshold=100)
+    assert cm.oracle_cost(5000, 10) <= cm.role_query_cost(10_000, 5000, 10)
+
+
+def test_scan_cost_model_roofline_form():
+    sm = ScanCostModel(dim=128)
+    c1 = sm.role_query_cost(10_000, 10_000, 10)
+    c2 = sm.role_query_cost(20_000, 20_000, 10)
+    assert c2 > c1                       # monotone in bytes scanned
+    assert sm.oracle_cost(10_000, 10) == pytest.approx(c1)
+
+
+class _MockIndex:
+    """Engine with EXACTLY the paper's latency law: a·log2 n + b·efs + c."""
+
+    A, B, C = 0.08, 0.12, 2.0
+
+    def __init__(self, n):
+        self.n = n
+
+    def search(self, q, k, efs):
+        import time
+        target = (self.A * math.log2(self.n) + self.B * efs + self.C) * 1e-6
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < target:
+            pass
+
+
+def test_calibration_recovers_linear_coefficients():
+    model, report = calibrate(
+        build_index=lambda data: _MockIndex(len(data)),
+        search=lambda idx, q, k, efs: idx.search(q, k, efs),
+        dim=8, size_sweep=(2048, 8192, 32768),
+        efs_sweep=(16, 64, 256, 1024), idx0_size=8192, n_queries=5)
+    assert report["chosen_base_layer_form"] == "linear"
+    assert report["r2_efs_linear"] > 0.98
+    # b recovered within 25% (timing noise)
+    assert abs(model.b - _MockIndex.B) / _MockIndex.B < 0.25

@@ -1,0 +1,72 @@
+"""Decode-with-cache must equal the full forward pass (per family)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import init_params, forward, prefill_fn, decode_fn
+from repro.models.model import init_cache
+from repro.launch.sharding import NO_RULES
+
+
+@pytest.mark.parametrize("arch", [
+    "qwen3-8b", "qwen2-72b", "mamba2-370m", "zamba2-2.7b", "smollm-360m"])
+def test_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    p = init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    B, S = 2, 32
+    toks = jnp.array(rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)
+    cache = init_cache(cfg, B, S + 1, dtype=jnp.float32)
+    _, cache = prefill_fn(p, cfg, NO_RULES, tokens=toks[:, :S], cache=cache)
+    logits_d, _ = decode_fn(p, cfg, NO_RULES, toks[:, S:S + 1], cache,
+                            jnp.int32(S))
+    h, _ = forward(p, cfg, NO_RULES, tokens=toks)
+    logits_f = jnp.einsum("bd,dv->bv", h[:, -1], p["lm_head"])
+    rel = float(jnp.max(jnp.abs(logits_d - logits_f))) / \
+        float(jnp.max(jnp.abs(logits_f)))
+    assert rel < 2e-3, rel
+
+
+@pytest.mark.parametrize("arch", ["phi3.5-moe-42b-a6.6b"])
+def test_moe_decode_matches_with_no_drops(arch):
+    # capacity drops are batch-composition dependent; with a high capacity
+    # factor (no drops) the paths must agree exactly
+    cfg = dataclasses.replace(get_smoke_config(arch), capacity_factor=16.0)
+    p = init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    B, S = 2, 32
+    toks = jnp.array(rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)
+    cache = init_cache(cfg, B, S + 1, dtype=jnp.float32)
+    _, cache = prefill_fn(p, cfg, NO_RULES, tokens=toks[:, :S], cache=cache)
+    logits_d, _ = decode_fn(p, cfg, NO_RULES, toks[:, S:S + 1], cache,
+                            jnp.int32(S))
+    h, _ = forward(p, cfg, NO_RULES, tokens=toks)
+    logits_f = jnp.einsum("bd,dv->bv", h[:, -1], p["lm_head"])
+    rel = float(jnp.max(jnp.abs(logits_d - logits_f))) / \
+        float(jnp.max(jnp.abs(logits_f)))
+    assert rel < 2e-3, rel
+
+
+def test_multi_step_decode_consistency():
+    """Three decode steps == forward on the 3-longer sequence."""
+    cfg = get_smoke_config("qwen3-8b")
+    p = init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    B, S, T = 2, 16, 3
+    toks = jnp.array(rng.integers(0, cfg.vocab_size, (B, S + T)), jnp.int32)
+    cache = init_cache(cfg, B, S + T, dtype=jnp.float32)
+    _, cache = prefill_fn(p, cfg, NO_RULES, tokens=toks[:, :S], cache=cache)
+    logits_d = None
+    for t in range(T):
+        logits_d, cache = decode_fn(p, cfg, NO_RULES,
+                                    toks[:, S + t:S + t + 1], cache,
+                                    jnp.int32(S + t))
+    h, _ = forward(p, cfg, NO_RULES, tokens=toks)
+    logits_f = jnp.einsum("bd,dv->bv", h[:, -1], p["lm_head"])
+    rel = float(jnp.max(jnp.abs(logits_d - logits_f))) / \
+        float(jnp.max(jnp.abs(logits_f)))
+    assert rel < 2e-3, rel

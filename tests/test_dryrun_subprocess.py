@@ -1,0 +1,42 @@
+"""Dry-run smoke: lower+compile on a small placeholder mesh in a subprocess
+(the 512-device production sweep is exercised by launch/dryrun.py itself;
+EXPERIMENTS.md records its output)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run(args, devices="8"):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["REPRO_DRYRUN_DEVICES"] = devices
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=520)
+
+
+@pytest.mark.slow
+def test_single_pod_cell_compiles(tmp_path):
+    out = str(tmp_path / "r.json")
+    r = _run(["--arch", "smollm-360m", "--shape", "decode_32k",
+              "--small-mesh", "--out", out])
+    assert r.returncode == 0, r.stdout + r.stderr
+    recs = json.load(open(out))
+    assert recs[0]["status"] == "ok"
+    assert recs[0]["memory"]["argument_size_in_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_multi_pod_cell_compiles(tmp_path):
+    out = str(tmp_path / "r.json")
+    r = _run(["--arch", "mamba2-370m", "--shape", "train_4k",
+              "--small-mesh", "--multi-pod", "--out", out])
+    assert r.returncode == 0, r.stdout + r.stderr
+    recs = json.load(open(out))
+    assert recs[0]["status"] == "ok"
+    assert recs[0]["mesh"] == "2x2x2"

@@ -1,0 +1,65 @@
+"""Pallas flash attention vs jnp oracle: causal/GQA/kv_len/dtype sweeps."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import (flash_attention, attention_ref,
+                                           FlashConfig)
+
+CFG = FlashConfig(bq=64, bk=64)
+
+
+def _run(B, Hq, Hkv, Sq, Sk, D, causal, kvlen, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, Hq, Sq, D)).astype(dtype)
+    k = rng.standard_normal((B, Hkv, Sk, D)).astype(dtype)
+    v = rng.standard_normal((B, Hkv, Sk, D)).astype(dtype)
+    out = flash_attention(jnp.array(q), jnp.array(k), jnp.array(v),
+                          causal=causal, kv_len=kvlen, config=CFG)
+    rep = Hq // Hkv
+    ref = attention_ref(jnp.array(np.asarray(q, np.float32)),
+                        jnp.array(np.repeat(k, rep, 1).astype(np.float32)),
+                        jnp.array(np.repeat(v, rep, 1).astype(np.float32)),
+                        causal=causal, kv_len=kvlen)
+    return np.asarray(out, np.float32), np.array(ref)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D,causal,kvlen", [
+    (2, 4, 2, 128, 128, 32, True, None),
+    (1, 2, 2, 100, 100, 64, True, None),       # padding path
+    (1, 4, 1, 1, 256, 32, False, 200),         # decode w/ kv_len
+    (2, 2, 2, 64, 192, 16, True, None),        # causal offset Sq != Sk
+    (1, 8, 8, 256, 256, 128, True, None),      # full tile alignment
+    (1, 3, 1, 37, 75, 20, True, None),         # everything unaligned
+])
+def test_matches_ref_fp32(B, Hq, Hkv, Sq, Sk, D, causal, kvlen):
+    out, ref = _run(B, Hq, Hkv, Sq, Sk, D, causal, kvlen)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-5)
+
+
+def test_bf16_inputs_close_to_fp32_ref():
+    rng = np.random.default_rng(1)
+    B, H, S, D = 1, 2, 128, 32
+    q = rng.standard_normal((B, H, S, D)).astype(np.float32)
+    k = rng.standard_normal((B, H, S, D)).astype(np.float32)
+    v = rng.standard_normal((B, H, S, D)).astype(np.float32)
+    out = flash_attention(jnp.array(q, jnp.bfloat16),
+                          jnp.array(k, jnp.bfloat16),
+                          jnp.array(v, jnp.bfloat16), causal=True,
+                          config=CFG)
+    ref = attention_ref(jnp.array(q), jnp.array(k), jnp.array(v),
+                        causal=True)
+    assert np.max(np.abs(np.asarray(out, np.float32) - np.array(ref))) < 0.05
+
+
+def test_rows_sum_to_one_property():
+    """Attention output of constant V must be that constant (softmax sums
+    to 1) — catches normalizer bugs."""
+    rng = np.random.default_rng(2)
+    B, H, S, D = 1, 1, 128, 16
+    q = rng.standard_normal((B, H, S, D)).astype(np.float32)
+    k = rng.standard_normal((B, H, S, D)).astype(np.float32)
+    v = np.ones((B, H, S, D), np.float32) * 3.25
+    out = flash_attention(jnp.array(q), jnp.array(k), jnp.array(v),
+                          causal=True, config=CFG)
+    np.testing.assert_allclose(np.array(out), 3.25, rtol=1e-5)

@@ -1,0 +1,89 @@
+"""Pallas l2_topk kernel vs pure-jnp oracle: shape/dtype/bound sweeps."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.l2_topk import l2_topk, l2_topk_ref, L2TopKConfig
+
+
+def _case(B, N, d, k, seed=0, role_bit=3, bound=None, cfg=None):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    auth = rng.integers(0, 2 ** 16, size=N).astype(np.uint32)
+    role = np.uint32(1 << role_bit)
+    cfg = cfg or L2TopKConfig()
+    dk, ik = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), role, k,
+                     bound=bound, config=cfg)
+    dr, ir = l2_topk_ref(jnp.array(q), jnp.array(db), jnp.array(auth),
+                         jnp.uint32(role),
+                         jnp.float32(np.inf if bound is None else bound), k)
+    return np.array(dk), np.array(ik), np.array(dr), np.array(ir)
+
+
+@pytest.mark.parametrize("B,N,d,k", [
+    (1, 100, 8, 1),
+    (3, 513, 17, 5),        # unaligned everything
+    (8, 2048, 64, 10),
+    (5, 1000, 48, 32),
+    (2, 4096, 128, 10),
+])
+def test_matches_ref(B, N, d, k):
+    dk, ik, dr, ir = _case(B, N, d, k)
+    assert (ik == ir).all()
+    finite = np.isfinite(dr)
+    np.testing.assert_allclose(dk[finite], dr[finite], rtol=1e-4, atol=1e-4)
+
+
+def test_bound_pruning_matches_ref():
+    # midpoint bound avoids float boundary ties
+    dk, ik, dr, ir = _case(4, 600, 24, 8)
+    bound = float((dr[0, 3] + dr[0, 4]) / 2)
+    dk2, ik2, dr2, ir2 = _case(4, 600, 24, 8, bound=bound)
+    assert (ik2 == ir2).all()
+
+
+def test_no_authorized_vectors_gives_empty():
+    rng = np.random.default_rng(3)
+    q = rng.standard_normal((2, 16)).astype(np.float32)
+    db = rng.standard_normal((64, 16)).astype(np.float32)
+    auth = np.zeros(64, np.uint32)           # nobody authorized
+    d, i = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth),
+                   np.uint32(1), 5)
+    assert (np.array(i) == -1).all()
+    assert np.isinf(np.array(d)).all()
+
+
+def test_k_larger_than_authorized():
+    rng = np.random.default_rng(4)
+    q = rng.standard_normal((1, 8)).astype(np.float32)
+    db = rng.standard_normal((100, 8)).astype(np.float32)
+    auth = np.zeros(100, np.uint32)
+    auth[:3] = 1
+    d, i = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth),
+                   np.uint32(1), 10)
+    i = np.array(i)[0]
+    assert (i[:3] >= 0).all() and (i[3:] == -1).all()
+    assert set(i[:3]) <= {0, 1, 2}
+
+
+@pytest.mark.parametrize("bq,bn", [(4, 128), (8, 512), (16, 256)])
+def test_tile_shape_invariance(bq, bn):
+    cfg = L2TopKConfig(bq=bq, bn=bn)
+    dk, ik, dr, ir = _case(6, 700, 32, 7, cfg=cfg)
+    assert (ik == ir).all()
+
+
+def test_multi_role_mask():
+    """A multi-role query ORs role bits — union semantics in-kernel."""
+    rng = np.random.default_rng(5)
+    q = rng.standard_normal((2, 16)).astype(np.float32)
+    db = rng.standard_normal((256, 16)).astype(np.float32)
+    auth = rng.integers(0, 8, size=256).astype(np.uint32)  # bits 0..2
+    both = np.uint32(0b011)
+    d, i = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), both, 10)
+    i = np.array(i)
+    ok = (auth & 0b011) != 0
+    for row in i:
+        for v in row[row >= 0]:
+            assert ok[v]

@@ -1,0 +1,38 @@
+"""GPipe pipeline parallelism (launch/pipeline.py) — subprocess (needs a
+multi-device stage mesh)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from repro.launch.pipeline import pipeline_apply
+mesh = jax.make_mesh((4,), ("stage",))
+S, M, mb, d = 4, 8, 2, 16
+rng = np.random.default_rng(0)
+W = jnp.array(rng.standard_normal((S, d, d)) * 0.3, jnp.float32)
+xs = jnp.array(rng.standard_normal((M, mb, d)), jnp.float32)
+layer = lambda w, x: jnp.tanh(x @ w)
+out = pipeline_apply(layer, W, xs, mesh)
+ref = xs
+for i in range(S):
+    ref = jnp.tanh(ref @ W[i])
+assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+print("PIPELINE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_gpipe_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], cwd=ROOT, env=env,
+                       capture_output=True, text=True, timeout=420)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "PIPELINE_OK" in r.stdout

@@ -1,0 +1,81 @@
+"""Lattice + policy invariants (paper §3), property-based via hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import generate_policy, Lattice
+from repro.core.policy import AccessPolicy
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_vectors=st.integers(200, 2000),
+       n_roles=st.integers(2, 12),
+       n_perms=st.integers(2, 30),
+       seed=st.integers(0, 10_000))
+def test_exclusive_blocks_partition_dataset(n_vectors, n_roles, n_perms,
+                                            seed):
+    policy = generate_policy(n_vectors, n_roles=n_roles,
+                             n_permissions=n_perms, seed=seed)
+    seen = np.concatenate(policy.block_members)
+    assert len(seen) == n_vectors                       # complete
+    assert len(np.unique(seen)) == n_vectors            # disjoint
+    for tau in policy.block_roles:
+        assert len(tau) >= 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_lattice_edges_containment_adjacency(seed):
+    policy = generate_policy(1000, n_roles=6, n_permissions=15, seed=seed)
+    lat = Lattice.exclusive(policy)
+    keys = set(lat.nodes)
+    for pk, ck in lat.edges():
+        ptau, ctau = lat.nodes[pk].roles, lat.nodes[ck].roles
+        assert ptau < ctau                              # containment
+        for mk in keys:                                  # adjacency
+            mtau = lat.nodes[mk].roles
+            assert not (ptau < mtau < ctau)
+
+
+def test_lattice_layering_and_container_map(small_policy):
+    lat = Lattice.exclusive(small_policy)
+    for depth, keys in lat.layers().items():
+        for k in keys:
+            assert len(lat.nodes[k].roles) == depth
+    phi = lat.container_map()
+    assert set(phi) == set(range(small_policy.n_blocks))
+    lat.check_invariants()
+
+
+def test_copy_merge_storage_accounting(small_policy):
+    lat = Lattice.exclusive(small_policy)
+    total0 = lat.total_stored()
+    assert total0 == small_policy.n_vectors            # SA = 1 initially
+    pairs = lat.child_ancestor_pairs()
+    if not pairs:
+        pytest.skip("no child-ancestor pairs in this policy")
+    ck, ak = pairs[0]
+    child_blocks = set(lat.nodes[ck].blocks)
+    delta = lat.copy_blocks(ck, ak)
+    assert lat.total_stored() == total0 + delta        # copy adds ΔS
+    merged = lat.merge_into(ck, ak)
+    # merge dedups: child blocks were already in ancestor after the copy
+    assert lat.total_stored() == total0 + delta - sum(
+        int(lat.block_sizes[b]) for b in child_blocks)
+    assert child_blocks <= lat.nodes[merged].blocks
+    lat.check_invariants()
+
+
+def test_role_bitmask_matches_masks(small_policy):
+    bits = small_policy.role_bitmask(max_roles=32)
+    for r in range(small_policy.n_roles):
+        mask = small_policy.authorized_mask(r)
+        kmask = (bits & np.uint32(1 << (r % 32))) != 0
+        assert (mask == kmask).all()
+
+
+def test_oracle_storage_counts_duplicates(small_policy):
+    expect = sum(len(tau) * len(m) for tau, m in
+                 zip(small_policy.block_roles, small_policy.block_members))
+    assert small_policy.oracle_storage() == expect
+    assert small_policy.oracle_storage() >= small_policy.n_vectors

@@ -1,0 +1,63 @@
+"""Roofline machinery: HLO collective parser, term math, model FLOPs."""
+import pytest
+
+from repro.launch import roofline as RL
+from repro.configs import get_config
+from repro.models.config import SHAPES_BY_NAME
+
+
+HLO = """
+HloModule jit_step
+%fused (a: bf16[8,128]) -> bf16[8,128] { ... }
+%all-gather.1 = bf16[2048,7168]{1,0} all-gather(%p0), replica_groups=[16,16]<=[256]
+%all-reduce.2 = f32[16,4096]{1,0} all-reduce(%x), to_apply=%add
+%rs = bf16[128,448]{1,0} reduce-scatter(%y), dimensions={1}
+%a2a.5 = f32[16,8,64]{2,1,0} all-to-all(%z), dimensions={1}
+%cp = bf16[4,4]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+%ag-start = bf16[64,64]{1,0} all-gather-start(%q)
+%ag-done = bf16[64,64]{1,0} all-gather-done(%ag-start)
+%normal = f32[2,2]{1,0} add(%a, %b)
+"""
+
+
+def test_collective_parser_counts_each_kind():
+    out = RL.collective_bytes(HLO)
+    assert out["all-gather"] == 2048 * 7168 * 2 + 64 * 64 * 2  # incl. -start
+    assert out["all-reduce"] == 16 * 4096 * 4 * 2              # 2x ring
+    assert out["reduce-scatter"] == 128 * 448 * 2
+    assert out["all-to-all"] == 16 * 8 * 64 * 4
+    assert out["collective-permute"] == 4 * 4 * 2
+
+
+def test_shape_bytes_tuples_and_scalars():
+    assert RL._shape_bytes("(f32[4,4]{1,0}, bf16[2]{0})") == 64 + 4
+    assert RL._shape_bytes("f32[]") == 4
+    assert RL._shape_bytes("pred[8]{0}") == 8
+
+
+def test_roofline_terms_and_dominance():
+    rl = RL.Roofline(flops=197e12, bytes_accessed=819e9 * 2,
+                     coll_bytes={"all-reduce": int(50e9 * 3)},
+                     compute_t=1.0, memory_t=2.0, collective_t=3.0,
+                     model_flops=197e12 * 0.5)
+    assert rl.dominant == "collective"
+    assert rl.bound_time == 3.0
+    assert rl.useful_flops_ratio == pytest.approx(0.5)
+    assert rl.roofline_fraction == pytest.approx(0.5 / 3.0)
+
+
+def test_model_flops_shapes():
+    cfg = get_config("qwen3-8b")
+    train = RL.model_flops(cfg, SHAPES_BY_NAME["train_4k"])
+    prefill = RL.model_flops(cfg, SHAPES_BY_NAME["prefill_32k"])
+    decode = RL.model_flops(cfg, SHAPES_BY_NAME["decode_32k"])
+    n = cfg.active_param_count()
+    assert train == pytest.approx(6 * n * 256 * 4096)
+    assert prefill == pytest.approx(2 * n * 32 * 32768)
+    assert decode == pytest.approx(2 * n * 128)
+
+
+def test_moe_active_params_much_smaller_than_total():
+    cfg = get_config("kimi-k2-1t-a32b")
+    assert cfg.param_count() > 0.9e12           # ~1T total
+    assert cfg.active_param_count() < 0.06e12   # ~32B active

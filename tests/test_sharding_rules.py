@@ -1,0 +1,55 @@
+"""Logical-axis sharding rules: divisibility fallback, duplicate-axis drop."""
+import numpy as np
+import pytest
+
+from repro.launch.sharding import Rules, TRAIN_RULES, DECODE_RULES, make_rules
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    import os
+    import jax
+    if jax.device_count() < 8:
+        pytest.skip("needs >= 8 devices (run under REPRO_DRYRUN_DEVICES)")
+    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+def test_spec_drops_non_dividing_axes(mesh8):
+    rules = Rules(mesh=mesh8, table=dict(TRAIN_RULES))
+    # heads=15 not divisible by model=2 → replicated
+    spec = rules.spec(("batch", None, "heads", None), (8, 4, 15, 64))
+    assert spec[2] is None
+    # batch=8 divisible by pod*data=4
+    assert spec[0] == ("pod", "data")
+
+
+def test_spec_prefix_fallback(mesh8):
+    rules = Rules(mesh=mesh8, table=dict(TRAIN_RULES))
+    # batch=2 divisible by pod(2) but not pod*data(4) → prefix ("pod",)
+    spec = rules.spec(("batch",), (2,))
+    assert spec[0] == "pod"
+
+
+def test_spec_no_duplicate_axes(mesh8):
+    rules = Rules(mesh=mesh8, table=dict(DECODE_RULES))
+    # kv_seq takes "model"; kv_heads also wants model → dropped
+    spec = rules.spec(("batch", "kv_seq", "kv_heads", None),
+                      (8, 64, 2, 16))
+    assert spec[1] == "model"
+    assert spec[2] is None
+
+
+def test_no_mesh_is_noop():
+    rules = Rules(mesh=None, table=dict(TRAIN_RULES))
+    x = np.ones((4, 4))
+    assert rules.constrain(x, ("batch", "embed")) is x
+    assert rules.sharding(("batch",), (4,)) is None
+
+
+def test_make_rules_kinds():
+    r = make_rules(None, "decode")
+    assert r.table["seq"] is None
+    r = make_rules(None, "long")
+    assert r.table["batch"] is None
+    r = make_rules(None, "train")
+    assert r.table["seq"] == "model"
