@@ -237,6 +237,51 @@ def exp13_weighted_workload(bc: BenchConfig, suite: MethodSuite):
              f"qps={qps:.0f};recall={rec:.3f}")
 
 
+def exp15_batched_throughput(bc: BenchConfig):
+    """Batched execution engine: queries/sec vs batch size B.
+
+    One lattice sweep per batch — every node issues a single ``l2_topk``
+    launch carrying all touching queries with per-query bounds/role masks —
+    so per-launch overhead amortizes and QPS grows with B (DESIGN.md
+    §Batched Execution).  Runs on a reduced smoke corpus: interpret-mode
+    kernel wall-clock is launch-overhead-dominated, which is exactly the
+    effect batching removes.
+    """
+    import dataclasses as dc
+    from repro.ann.scorescan import scorescan_factory
+    from repro.core import batched_search
+    # low lam so the smoke corpus actually forms lattice nodes — with the
+    # serving default (400) a 2k corpus is all leftovers, nothing to amortize
+    sbc = dc.replace(bc, n_vectors=min(bc.n_vectors, 2000), dim=16,
+                     n_queries=max(bc.n_queries, 32), lam=min(bc.lam, 50))
+    ds = dataset(sbc)
+    cm = cost_model(sbc)
+    res = build_effveda(ds.policy, cm, beta=1.1, k=sbc.k)
+    store = build_vector_storage(res, ds.vectors,
+                                 engine_factory=scorescan_factory(ds.policy))
+    # identical 96-query workload for every batch size; first repetition
+    # warms the jit caches, best-of-the-rest kills interpret-mode jitter
+    total = 96
+    idx = np.arange(total) % len(ds.queries)
+    qs = np.asarray(ds.queries, np.float32)[idx]
+    rs = [int(r) for r in np.asarray(ds.query_roles)[idx]]
+    # repetitions interleaved across batch sizes: a burst of CPU contention
+    # lands on every B in that round, and min-of-rounds discards it for all
+    sizes = (1, 2, 4, 8, 16, 32)
+    times = {B: [] for B in sizes}
+    for rep in range(6):
+        for B in sizes:
+            t0 = time.perf_counter()
+            for lo in range(0, total, B):
+                batched_search(store, qs[lo:lo + B], rs[lo:lo + B], sbc.k)
+            if rep:                       # round 0 warms the jit caches
+                times[B].append(time.perf_counter() - t0)
+    for B in sizes:
+        dt = min(times[B])
+        emit(f"exp15_batched_qps/B{B}", dt / total * 1e6,
+             f"qps={total / dt:.1f}")
+
+
 def exp14_multirole(bc: BenchConfig, suite: MethodSuite):
     """Figs 8a/8b: multi-role queries + global-fallback routing (the
     partitioning ↔ filtered-global crossover)."""

@@ -66,6 +66,7 @@ def main() -> None:
     go("exp12", lambda: E.exp12_sensitivity(bc))
     go("exp13", lambda: E.exp13_weighted_workload(bc, suite))
     go("exp14", lambda: E.exp14_multirole(bc, suite))
+    go("exp15", lambda: E.exp15_batched_throughput(bc))
 
     go("kernels", K.run_all)
 

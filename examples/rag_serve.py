@@ -1,8 +1,11 @@
 """End-to-end driver: access-controlled RAG serving with batched requests.
 
-Retrieval (EffVEDA lattice + coordinated search) feeds a generator LM
-(reduced smollm config) that prefllls retrieved passages and decodes new
-tokens — the paper's deployment shape, runnable on CPU.
+Retrieval (EffVEDA lattice + batched execution engine over ScoreScan nodes)
+feeds a generator LM (reduced smollm config) that prefills retrieved passages
+and decodes new tokens — the paper's deployment shape, runnable on CPU.  The
+whole request batch is retrieved in ONE lattice sweep: every lattice node is
+scored by a single ``l2_topk`` launch carrying all queries that touch it,
+with per-query bounds and role masks (DESIGN.md §Batched Execution).
 
     PYTHONPATH=src python examples/rag_serve.py
 """
@@ -16,9 +19,11 @@ from repro.core import SearchStats
 from repro.launch.serve import build_demo_server
 
 server, ds = build_demo_server(arch="smollm-360m", n_vectors=4000, dim=24,
-                               n_roles=8, beta=1.1)
+                               n_roles=8, beta=1.1, engine="scorescan")
 print(f"corpus: {len(ds.vectors)} passages, {ds.policy.n_roles} roles; "
-      f"store SA={server.store.sa():.3f}")
+      f"store SA={server.store.sa():.3f}; "
+      f"batched engine: {server.batched_capable()} "
+      f"({len(server.store.engines)} kernel-backed nodes)")
 
 stats = SearchStats()
 batch = 6
@@ -31,5 +36,6 @@ for i in range(batch):
     mask = ds.policy.authorized_mask(r)
     assert all(mask[p] for p in out["retrieved"][i]), "leak!"
 print(f"retrieval {out['t_retrieval_s']*1e3:.1f} ms for {batch} requests "
-      f"(purity {stats.purity:.2f}); generation {out['t_generate_s']:.1f} s")
+      f"in one lattice sweep (purity {stats.purity:.2f}); "
+      f"generation {out['t_generate_s']:.1f} s")
 print("isolation verified: every retrieved passage authorized for its role")

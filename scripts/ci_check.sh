@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Fast CI tier: fail fast on collection regressions, then run the quick
+# (non-slow) tests.  The full tier-1 suite is `PYTHONPATH=src python -m
+# pytest -x -q` (~2.5 min); this script keeps the edit loop short.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== collection check (must be clean) =="
+python -m pytest --collect-only -q >/dev/null
+
+echo "== fast tier: pytest -m 'not slow' =="
+python -m pytest -x -q -m "not slow"

@@ -57,6 +57,13 @@ class ScoreScanIndex:
         dc = float(np.linalg.norm(q - self.centroid))
         return max(0.0, dc - self.radius) ** 2
 
+    def lower_bounds(self, qs: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`lower_bound` over a (B, d) query batch."""
+        if self.centroid is None:
+            return np.full(len(qs), np.inf, dtype=np.float32)
+        dc = np.linalg.norm(qs - self.centroid, axis=1)
+        return np.maximum(0.0, dc - self.radius) ** 2
+
     # ---------------------------------------------------------------- search
     def search_masked(self, q: np.ndarray, k: int, role_mask: int,
                       bound: Optional[float] = None
@@ -74,6 +81,40 @@ class ScoreScanIndex:
         keep = i >= 0
         return [(float(dd), int(self.ids[ii]))
                 for dd, ii in zip(d[keep], i[keep])]
+
+    def search_masked_batch(self, qs: np.ndarray, k: int,
+                            role_masks: np.ndarray,
+                            bounds: Optional[np.ndarray] = None
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched :meth:`search_masked`: one kernel launch for B queries.
+
+        Args:
+          qs: (B, d) float32 query batch.
+          role_masks: (B,) uint32 per-query role bitmask.
+          bounds: optional (B,) float32 per-query coordinated-search bound.
+
+        Returns:
+          (dists (B, k) float32, external ids (B, k) int64); empty slots are
+          +inf / -1.  No Python per-query loop — the per-query bound and role
+          vectors are threaded straight into the kernel wrapper.
+        """
+        b = len(qs)
+        if not len(self.data):
+            return (np.full((b, k), np.inf, np.float32),
+                    np.full((b, k), -1, np.int64))
+        self._distance_computations += len(self.data) * b
+        qc = (np.asarray(qs, np.float32) - self.centroid).astype(np.float32)
+        d, i = l2_topk(qc, self._centered, self.auth_bits,
+                       np.asarray(role_masks, np.uint32), k,
+                       bound=None if bounds is None
+                       else np.asarray(bounds, np.float32),
+                       config=self.config)
+        # np.array (not asarray): jax buffers are read-only and callers
+        # post-filter these in place
+        d = np.array(d)
+        i = np.asarray(i)
+        ext = np.where(i >= 0, self.ids[np.maximum(i, 0)], np.int64(-1))
+        return d, ext
 
     # engine-interface parity (used when plugged into the generic store)
     def search(self, q: np.ndarray, k: int, efs: int = 0):

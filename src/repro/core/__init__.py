@@ -7,6 +7,7 @@ Public API:
   build_veda / build_effveda         — §4 / §5 optimizers → BuildResult
   build_vector_storage               — physical engines per node
   coordinated_search / independent_search / routed_search — §6.2
+  batched_search                     — batch-amortized Alg. 7 (DESIGN.md)
   metrics                            — SA / QA / recall / purity
 """
 from .policy import AccessPolicy, generate_policy
@@ -19,6 +20,7 @@ from .store import (VectorStore, build_vector_storage, build_oracle_store,
                     hnsw_factory, exact_factory)
 from .coordinated import (SearchStats, coordinated_search, independent_search,
                           global_filtered_search, routed_search)
+from .batched import BatchTopK, batched_search
 from .dynamic import DynamicStore
 from . import metrics
 
@@ -32,5 +34,6 @@ __all__ = [
     "hnsw_factory", "exact_factory",
     "SearchStats", "coordinated_search", "independent_search",
     "global_filtered_search", "routed_search", "metrics",
+    "BatchTopK", "batched_search",
     "DynamicStore",
 ]

@@ -1,0 +1,209 @@
+"""Batched multi-query execution engine over the lattice (DESIGN.md
+§Batched Execution).
+
+``coordinated_scan_search`` serves one query at a time: a Python loop walks
+the role's plan and every ``l2_topk`` launch carries a single query row even
+though the kernel is tiled for a (B, d) batch.  This module amortizes the
+lattice traversal across a batch of ``(query, role)`` pairs:
+
+  1. take the union of the per-role plans and invert it — for every lattice
+     node (and leftover block), collect the batch rows whose plan touches it;
+  2. scan leftover blocks once per block for all touching rows, seeding the
+     vectorized per-query top-k;
+  3. visit nodes that are *pure* for a row first (their results need no
+     post-filter and tighten that row's bound fastest), then impure / distant
+     nodes, each node issuing **one** ``l2_topk`` call whose query batch
+     carries a per-query ``bound`` vector (current k-th distances) and a
+     per-query ``role_mask`` vector;
+  4. merge every launch's (B', k) result block into the running (B, k)
+     top-k with pure-numpy row operations.  Scoring and merging carry no
+     Python per-query loop; only impure-node bookkeeping (per-row stats
+     and the exact-mask post-filter) iterates over rows.
+
+Result parity: bound-based skipping is *sound* (a node is only skipped when
+its centroid-radius lower bound proves it cannot improve that row's top-k),
+so the returned (dist, id) sets are identical to per-query coordinated
+search for any visit schedule; only the schedule-dependent skip counters in
+:class:`SearchStats` may differ (see tests/test_batched.py).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .coordinated import SearchStats
+from .queryplan import Plan
+from .store import VectorStore
+
+_INF = np.float32(np.inf)
+
+
+class BatchTopK:
+    """Vectorized per-row bounded top-k over (dist, id) pairs.
+
+    Maintains (B, k) distance/id arrays sorted ascending by (dist, id) per
+    row, with +inf / -1 padding.  Duplicate ids within a row (a vector copied
+    into several lattice nodes) keep their smallest distance, mirroring the
+    ``_TopK`` seen-set of the sequential engine.
+    """
+
+    def __init__(self, b: int, k: int):
+        self.k = k
+        self.dists = np.full((b, k), _INF, dtype=np.float32)
+        self.ids = np.full((b, k), -1, dtype=np.int64)
+
+    def kth(self, rows: Optional[np.ndarray] = None) -> np.ndarray:
+        """Current k-th distance per row (+inf while a row holds < k)."""
+        d = self.dists if rows is None else self.dists[rows]
+        return d[:, self.k - 1].copy()
+
+    def push_rows(self, rows: np.ndarray, new_d: np.ndarray,
+                  new_i: np.ndarray) -> None:
+        """Merge a (m, k') candidate block into rows ``rows`` of the buffer."""
+        if not len(rows):
+            return
+        d = np.concatenate([self.dists[rows], new_d.astype(np.float32)], 1)
+        i = np.concatenate([self.ids[rows], new_i.astype(np.int64)], 1)
+        d = np.where(i < 0, _INF, d)
+        # dedup: row-sort by (id, dist) so copies sit adjacent, min dist first
+        order = np.argsort(d, axis=1, kind="stable")
+        d = np.take_along_axis(d, order, 1)
+        i = np.take_along_axis(i, order, 1)
+        order = np.argsort(i, axis=1, kind="stable")
+        d = np.take_along_axis(d, order, 1)
+        i = np.take_along_axis(i, order, 1)
+        dup = (i[:, 1:] == i[:, :-1]) & (i[:, 1:] >= 0)
+        d[:, 1:][dup] = _INF
+        i[:, 1:][dup] = -1
+        # final order (dist, id): stable sort by secondary key, then primary
+        order = np.argsort(np.where(i < 0, np.iinfo(np.int64).max, i),
+                           axis=1, kind="stable")
+        d = np.take_along_axis(d, order, 1)
+        i = np.take_along_axis(i, order, 1)
+        order = np.argsort(d, axis=1, kind="stable")
+        self.dists[rows] = np.take_along_axis(d, order, 1)[:, :self.k]
+        self.ids[rows] = np.take_along_axis(i, order, 1)[:, :self.k]
+
+    def items(self) -> List[List[Tuple[float, int]]]:
+        """Per-row sorted (dist, id) lists, padding dropped — the same shape
+        ``coordinated_scan_search`` returns for each query."""
+        out = []
+        for drow, irow in zip(self.dists, self.ids):
+            keep = irow >= 0
+            out.append([(float(dd), int(ii))
+                        for dd, ii in zip(drow[keep], irow[keep])])
+        return out
+
+
+def _scan_leftovers_batched(store: VectorStore, queries: np.ndarray,
+                            plans: Sequence[Plan], topk: BatchTopK,
+                            stats: SearchStats) -> None:
+    """One pass per leftover block shared by every batch row touching it."""
+    block_rows: Dict[int, List[int]] = defaultdict(list)
+    for qi, plan in enumerate(plans):
+        for b in plan.leftover_blocks:
+            block_rows[b].append(qi)
+    for b, rows in block_rows.items():
+        vecs = store.leftover_vectors.get(b)
+        if vecs is None or not len(vecs):
+            continue
+        rows = np.asarray(rows)
+        ids = store.leftover_ids[b]
+        # same diff-based form as the sequential scan (exact fp parity)
+        diff = vecs[None, :, :] - queries[rows][:, None, :]
+        d = np.einsum("mnd,mnd->mn", diff, diff)
+        stats.leftover_vectors_scanned += len(vecs) * len(rows)
+        stats.data_touched += len(vecs) * len(rows)
+        stats.data_authorized_touched += len(vecs) * len(rows)
+        m = min(topk.k, d.shape[1])
+        part = np.argpartition(d, m - 1, axis=1)[:, :m] if m < d.shape[1] \
+            else np.broadcast_to(np.arange(d.shape[1]), d.shape).copy()
+        topk.push_rows(rows, np.take_along_axis(d, part, 1),
+                       ids[part].astype(np.int64))
+
+
+def batched_search(store: VectorStore, queries: np.ndarray,
+                   roles: Sequence[int], k: int,
+                   stats: Optional[SearchStats] = None
+                   ) -> List[List[Tuple[float, int]]]:
+    """Coordinated search for a batch of (query, role) pairs (Alg. 7,
+    batch-amortized).  Requires ScoreScan-style engines exposing
+    ``search_masked_batch`` / ``lower_bounds``.
+
+    Returns one sorted (dist, id) list per batch row — the same value
+    ``coordinated_scan_search(store, queries[i], roles[i], k)`` produces.
+    """
+    stats = stats if stats is not None else SearchStats()
+    queries = np.ascontiguousarray(queries, dtype=np.float32)
+    roles = [int(r) for r in roles]
+    b = len(queries)
+    assert len(roles) == b, (b, len(roles))
+    plans = [store.plans[r] for r in roles]
+    masks = {r: store.authorized_mask(r) for r in set(roles)}
+    role_bits = np.array([np.uint32(1 << (r % 32)) for r in roles], np.uint32)
+
+    topk = BatchTopK(b, k)
+    _scan_leftovers_batched(store, queries, plans, topk, stats)
+
+    # invert plans: node -> rows, split per (row, node) purity
+    pure_rows: Dict = defaultdict(list)
+    impure_rows: Dict = defaultdict(list)
+    sizes_cache: Dict = {}           # (key, role) -> (total, auth)
+    for qi, (plan, r) in enumerate(zip(plans, roles)):
+        for key in plan.nodes:
+            if key not in store.engines:
+                continue
+            if (key, r) not in sizes_cache:
+                sizes_cache[(key, r)] = store.node_total_and_auth(
+                    key, masks[r])
+            total, auth = sizes_cache[(key, r)]
+            (pure_rows if auth == total else impure_rows)[key].append(qi)
+            stats.indices_visited += 1
+
+    def _wave(groups: Dict, impure: bool) -> None:
+        # nearest-first across the batch: tightening close rows' bounds early
+        # maximizes later skips, like the per-query ascending-lb order
+        keyed = []
+        for key, rows in groups.items():
+            eng = store.engines[key]
+            rows = np.asarray(rows)
+            lbs = eng.lower_bounds(queries[rows])
+            keyed.append((float(lbs.min()), key, rows, lbs))
+        keyed.sort(key=lambda t: t[0])
+        for _, key, rows, lbs in keyed:
+            eng = store.engines[key]
+            if impure:
+                for qi in rows:
+                    total, auth = sizes_cache[(key, roles[qi])]
+                    stats.data_touched += total
+                    stats.data_authorized_touched += auth
+                stats.impure_visits += len(rows)
+            else:
+                stats.data_touched += len(eng) * len(rows)
+                stats.data_authorized_touched += len(eng) * len(rows)
+            kth = topk.kth(rows)
+            active = lbs <= kth
+            n_skip = int((~active).sum())
+            stats.phase2_skipped += n_skip
+            if not impure:
+                stats.impure_visits += n_skip   # bound-skip opportunities
+            if not active.any():
+                continue
+            act = rows[active]
+            d, ids = eng.search_masked_batch(queries[act], k,
+                                             role_bits[act],
+                                             bounds=kth[active])
+            if impure:
+                # role bits alias at 32 roles — the mask is ground truth
+                for j, qi in enumerate(act):
+                    ok = (ids[j] >= 0) & masks[roles[qi]][
+                        np.maximum(ids[j], 0)]
+                    d[j] = np.where(ok, d[j], _INF)
+                    ids[j] = np.where(ok, ids[j], -1)
+            topk.push_rows(act, d, ids)
+
+    _wave(pure_rows, impure=False)
+    _wave(impure_rows, impure=True)
+    return topk.items()

@@ -3,9 +3,11 @@
 This is the compute hot-spot of the TPU-native ScoreScan engine (DESIGN.md
 §3): each lattice node's vectors are streamed HBM→VMEM in (BN, d) tiles, the
 MXU computes the query-tile × db-tile distance block, authorization and the
-coordinated-search global bound are applied *in-kernel*, and a per-query
-running top-k is maintained across the sequential db-tile grid dimension in
-the revisited output block (classic Pallas reduction pattern).
+coordinated-search bound are applied *in-kernel* — both as per-query (BQ, 1)
+columns, so one launch serves a batch of queries with distinct roles and
+distinct bounds (DESIGN.md §Batched Execution) — and a per-query running
+top-k is maintained across the sequential db-tile grid dimension in the
+revisited output block (classic Pallas reduction pattern).
 
 Top-k extraction uses only elementwise ops + row reductions (min / masked
 min) — no gathers — so it lowers cleanly to the TPU vector unit:
@@ -49,8 +51,9 @@ def _extract_topk(dist, ids, k: int, kpad: int):
     return out_d, out_i
 
 
-def _l2_topk_kernel(role_mask_ref, bound_ref, n_total_ref,
-                    q_ref, qn_ref, db_ref, dbn_ref, auth_ref,
+def _l2_topk_kernel(n_total_ref,
+                    q_ref, qn_ref, role_mask_ref, bound_ref,
+                    db_ref, dbn_ref, auth_ref,
                     out_d_ref, out_i_ref, *, k: int, kpad: int, bn: int):
     j = pl.program_id(1)
 
@@ -69,8 +72,9 @@ def _l2_topk_kernel(role_mask_ref, bound_ref, n_total_ref,
 
     bq = q.shape[0]
     col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
-    auth = (auth_ref[...] & role_mask_ref[0, 0]) != 0          # (1, BN)
-    valid = auth & (col < n_total_ref[0, 0]) & (dist < bound_ref[0, 0])
+    # per-query role bits / bounds: (BQ, 1) columns broadcast over the tile
+    auth = (auth_ref[...] & role_mask_ref[...]) != 0           # (BQ, BN)
+    valid = auth & (col < n_total_ref[0, 0]) & (dist < bound_ref[...])
     dist = jnp.where(valid, dist, INF)
 
     tile_d, tile_i = _extract_topk(dist, col, k, kpad)
@@ -90,29 +94,32 @@ def l2_topk_pallas(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
                    role_mask: jax.Array, bound: jax.Array, n_total: int,
                    k: int, kpad: int = 128, bq: int = 8, bn: int = 512,
                    interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
-    """Launch the kernel on padded operands (see ops.l2_topk for padding)."""
+    """Launch the kernel on padded operands (see ops.l2_topk for padding).
+
+    ``role_mask`` and ``bound`` are (B, 1) per-query columns — the wrapper
+    broadcasts scalars before the call — tiled along the query grid axis like
+    the query norms, so a batch of queries with distinct roles and distinct
+    coordinated-search bounds shares one launch.
+    """
     b, d = queries.shape
     n = db.shape[0]
     assert b % bq == 0 and n % bn == 0, (b, n, bq, bn)
+    assert role_mask.shape == (b, 1) and bound.shape == (b, 1)
     qn = jnp.sum(queries * queries, axis=1, keepdims=True)       # (B, 1)
     dbn = jnp.sum(db * db, axis=1)[None, :]                      # (1, N)
     auth2 = auth_bits[None, :]                                   # (1, N)
-    scalars = [
-        jnp.asarray(role_mask, jnp.uint32).reshape(1, 1),
-        jnp.asarray(bound, jnp.float32).reshape(1, 1),
-        jnp.asarray(n_total, jnp.int32).reshape(1, 1),
-    ]
+    n_total2 = jnp.asarray(n_total, jnp.int32).reshape(1, 1)
     grid = (b // bq, n // bn)
     kernel = functools.partial(_l2_topk_kernel, k=k, kpad=kpad, bn=bn)
     out_d, out_i = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),           # role_mask
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),           # bound
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),           # n_total
             pl.BlockSpec((bq, d), lambda i, j: (i, 0)),          # queries
             pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),          # |q|^2
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),          # role bits
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),          # bounds
             pl.BlockSpec((bn, d), lambda i, j: (j, 0)),          # db tile
             pl.BlockSpec((1, bn), lambda i, j: (0, j)),          # |v|^2 tile
             pl.BlockSpec((1, bn), lambda i, j: (0, j)),          # auth tile
@@ -126,5 +133,5 @@ def l2_topk_pallas(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
             jax.ShapeDtypeStruct((b, kpad), jnp.int32),
         ],
         interpret=interpret,
-    )(*scalars, queries, qn, db, dbn, auth2)
+    )(n_total2, queries, qn, role_mask, bound, db, dbn, auth2)
     return out_d[:, :k], out_i[:, :k]

@@ -47,10 +47,12 @@ def l2_topk(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
       queries: (B, d) float32.
       db: (N, d) float32 node shard.
       auth_bits: (N,) uint32 role bitmask per vector.
-      role_mask: scalar uint32 bitmask of the querying role(s).
+      role_mask: uint32 bitmask of the querying role(s) — scalar, or (B,)
+        with one bitmask per query (batched multi-role execution).
       k: neighbours to return (k <= config.kpad).
-      bound: optional scalar float32 — coordinated-search global k-th
-        distance; candidates at or beyond it are pruned in-kernel.
+      bound: optional float32 coordinated-search global k-th distance;
+        candidates at or beyond it are pruned in-kernel.  Scalar, or (B,)
+        with one bound per query.
 
     Returns:
       (dists (B, k) float32, ids (B, k) int32); empty slots are +inf / -1.
@@ -58,19 +60,29 @@ def l2_topk(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
     assert k <= config.kpad, (k, config.kpad)
     b, d = queries.shape
     n = db.shape[0]
-    bound = jnp.float32(jnp.inf) if bound is None else jnp.float32(bound)
+    if bound is None:
+        bound = jnp.float32(jnp.inf)
     qp = _pad_to(queries.astype(jnp.float32), config.bq, 0)
     qp = _pad_to(qp, config.lane, 1)
+    # padded query rows carry role bits 0 (nothing authorized) and bound +inf
+    rp = _pad_to(jnp.broadcast_to(
+        jnp.asarray(role_mask, jnp.uint32).reshape(-1), (b,))[:, None],
+        config.bq, 0)
+    bp = _pad_to(jnp.broadcast_to(
+        jnp.asarray(bound, jnp.float32).reshape(-1), (b,))[:, None],
+        config.bq, 0, value=jnp.inf)
     dbp = _pad_to(db.astype(jnp.float32), config.bn, 0)
     dbp = _pad_to(dbp, config.lane, 1)
     ap = _pad_to(auth_bits.astype(jnp.uint32), config.bn, 0)  # pad rows: bit 0
     out_d, out_i = l2_topk_pallas(
-        qp, dbp, ap, jnp.uint32(role_mask), bound, n, k,
+        qp, dbp, ap, rp, bp, n, k,
         kpad=config.kpad, bq=config.bq, bn=config.bn,
         interpret=config.interpret)
     return out_d[:b], out_i[:b]
 
 
 def l2_topk_oracle(queries, db, auth_bits, role_mask, k, bound=None):
-    bound = jnp.float32(jnp.inf) if bound is None else jnp.float32(bound)
-    return l2_topk_ref(queries, db, auth_bits, jnp.uint32(role_mask), bound, k)
+    bound = jnp.inf if bound is None else bound
+    return l2_topk_ref(queries, db, auth_bits,
+                       jnp.asarray(role_mask, jnp.uint32),
+                       jnp.asarray(bound, jnp.float32), k)

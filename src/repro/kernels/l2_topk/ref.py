@@ -7,6 +7,11 @@ Semantics (shared with the Pallas kernel):
     +inf disables the bound),
   * non-candidates get distance +inf and id -1,
   * ties broken toward the smaller database id (deterministic).
+
+``role_mask`` and ``bound`` may each be a scalar (shared by every query) or a
+``(B,)`` vector (one value per query row) — the batched execution engine
+(DESIGN.md §Batched Execution) threads per-query coordinated-search bounds and
+per-query role bitmasks through a single kernel launch.
 """
 from __future__ import annotations
 
@@ -14,6 +19,12 @@ import jax
 import jax.numpy as jnp
 
 INF = jnp.float32(jnp.inf)
+
+
+def _per_query(x, dtype) -> jax.Array:
+    """Normalize a scalar or (B,) operand to a broadcastable (·, 1) column."""
+    x = jnp.asarray(x, dtype).reshape(-1)          # () -> (1,), (B,) -> (B,)
+    return x[:, None]                              # broadcasts over (B, N)
 
 
 def l2_topk_ref(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
@@ -24,8 +35,9 @@ def l2_topk_ref(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
       queries: (B, d) float32.
       db: (N, d) float32.
       auth_bits: (N,) uint32 per-vector role bitmask.
-      role_mask: scalar uint32 — the querying role's bit(s).
-      bound: scalar float32 — global k-th distance bound (inf = no bound).
+      role_mask: uint32 querying-role bit(s) — scalar or (B,) per query.
+      bound: float32 global k-th distance bound (inf = no bound) — scalar or
+        (B,) per query.
       k: number of neighbours.
 
     Returns:
@@ -36,9 +48,9 @@ def l2_topk_ref(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
     qn = jnp.sum(queries * queries, axis=1, keepdims=True)      # (B, 1)
     dn = jnp.sum(db * db, axis=1)[None, :]                      # (1, N)
     dist = qn + dn - 2.0 * queries @ db.T                       # (B, N)
-    ok = (auth_bits & role_mask.astype(jnp.uint32)) != 0
-    dist = jnp.where(ok[None, :], dist, INF)
-    dist = jnp.where(dist < bound, dist, INF)
+    ok = (auth_bits[None, :] & _per_query(role_mask, jnp.uint32)) != 0
+    dist = jnp.where(ok, dist, INF)
+    dist = jnp.where(dist < _per_query(bound, jnp.float32), dist, INF)
     # tie-break toward smaller id: sort by (dist, id) lexicographically
     n = db.shape[0]
     ids = jnp.arange(n, dtype=jnp.int32)

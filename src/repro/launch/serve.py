@@ -20,8 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_smoke_config
-from ..core import (HNSWCostModel, build_effveda, build_vector_storage,
-                    coordinated_search, exact_factory, SearchStats)
+from ..core import (HNSWCostModel, batched_search, build_effveda,
+                    build_vector_storage, coordinated_search, exact_factory,
+                    SearchStats)
 from ..data import make_retrieval_dataset
 from ..models.config import ModelConfig
 from ..models.model import init_params, prefill_fn, decode_fn, init_cache
@@ -53,15 +54,36 @@ class RAGServer:
         return rng.integers(0, self.cfg.vocab_size,
                             self.passage_tokens).astype(np.int32)
 
+    def batched_capable(self) -> bool:
+        """Whether retrieval can take the batched engine (every node engine
+        exposes the batch kernel path; leftover-only stores qualify — their
+        sweep is batch-amortized too)."""
+        return all(hasattr(e, "search_masked_batch")
+                   for e in self.store.engines.values())
+
+    def retrieve_batch(self, queries: np.ndarray, roles: Sequence[int],
+                       k: int, efs: int = 50,
+                       stats: Optional[SearchStats] = None
+                       ) -> List[List[Tuple[float, int]]]:
+        """Top-k authorized retrieval for the whole request batch.
+
+        ScoreScan stores take the batched engine (one lattice sweep, one
+        kernel launch per node for all touching queries); other engine types
+        fall back to per-query coordinated search.
+        """
+        if self.batched_capable():
+            return batched_search(self.store, np.asarray(queries, np.float32),
+                                  [int(r) for r in roles], k, stats=stats)
+        return [coordinated_search(self.store, q, int(r), k, efs, stats=stats)
+                for q, r in zip(queries, roles)]
+
     def serve_batch(self, queries: np.ndarray, roles: Sequence[int],
                     k: int = 4, efs: int = 50, decode_tokens: int = 8,
                     stats: Optional[SearchStats] = None) -> Dict:
         t0 = time.time()
-        retrieved: List[List[int]] = []
-        for q, r in zip(queries, roles):
-            res = coordinated_search(self.store, q, int(r), k, efs,
-                                     stats=stats)
-            retrieved.append([vid for _, vid in res])
+        results = self.retrieve_batch(queries, roles, k, efs=efs, stats=stats)
+        retrieved: List[List[int]] = [[vid for _, vid in res]
+                                      for res in results]
         t_retrieval = time.time() - t0
         # build prompts: retrieved passages then a query stub token
         b = len(queries)
@@ -92,15 +114,25 @@ class RAGServer:
 
 def build_demo_server(arch: str = "smollm-360m", n_vectors: int = 4000,
                       dim: int = 24, n_roles: int = 8, beta: float = 1.1,
-                      seed: int = 0) -> Tuple[RAGServer, object]:
-    """Small end-to-end server: synthetic corpus + EffVEDA store + smoke LM."""
+                      seed: int = 0, engine: str = "scorescan"
+                      ) -> Tuple[RAGServer, object]:
+    """Small end-to-end server: synthetic corpus + EffVEDA store + smoke LM.
+
+    ``engine='scorescan'`` (default) builds kernel-backed node indexes so
+    retrieval runs through the batched execution engine; ``engine='exact'``
+    keeps the host-side per-query path.
+    """
     ds = make_retrieval_dataset(n_vectors=n_vectors, dim=dim,
                                 n_roles=n_roles, n_permissions=3 * n_roles,
                                 seed=seed)
     cm = HNSWCostModel(lam_threshold=400)
     result = build_effveda(ds.policy, cm, beta=beta, k=10)
-    store = build_vector_storage(result, ds.vectors,
-                                 engine_factory=exact_factory())
+    if engine == "scorescan":
+        from ..ann.scorescan import scorescan_factory
+        factory = scorescan_factory(ds.policy)
+    else:
+        factory = exact_factory()
+    store = build_vector_storage(result, ds.vectors, engine_factory=factory)
     cfg = get_smoke_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(seed))
     return RAGServer(cfg=cfg, params=params, store=store), ds

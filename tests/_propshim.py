@@ -1,0 +1,58 @@
+"""Property-test shim: real hypothesis when installed, deterministic fallback
+otherwise.
+
+The tier-1 suite must collect and run on containers without ``hypothesis``.
+Importing ``given / settings / st`` from here gives the real library when it
+exists; otherwise a tiny stand-in runs the same property body over a fixed
+seed corpus (N_EXAMPLES deterministic draws per strategy), which preserves
+the invariant coverage at reduced breadth.
+
+Only the strategy surface these tests use is implemented: ``st.integers``
+and ``st.sampled_from``.
+"""
+from __future__ import annotations
+
+try:                                    # pragma: no cover - env dependent
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+    N_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw            # draw(rng) -> sampled value
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    st = _StrategiesModule()
+
+    def settings(**_kwargs):
+        """max_examples/deadline knobs are meaningless for the fixed corpus."""
+        return lambda fn: fn
+
+    def given(**strategies):
+        def deco(fn):
+            def run():
+                for example in range(N_EXAMPLES):
+                    rng = _np.random.default_rng(1234 + example)
+                    kwargs = {name: s.draw(rng)
+                              for name, s in sorted(strategies.items())}
+                    fn(**kwargs)
+            # keep the collected test name but NOT the wrapped signature —
+            # pytest would read the property args as fixture requests
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return deco

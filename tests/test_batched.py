@@ -1,0 +1,153 @@
+"""Batched execution engine (DESIGN.md §Batched Execution): parity with the
+single-query coordinated reference, stats aggregation, top-k buffer."""
+import numpy as np
+import pytest
+
+from repro.ann.scorescan import scorescan_factory, coordinated_scan_search
+from repro.core import (HNSWCostModel, Lattice, SearchStats, batched_search,
+                        BatchTopK, build_effveda, build_vector_storage,
+                        coordinated_search, generate_policy)
+from repro.core.queryplan import build_all_plans
+from repro.core.veda import BuildResult
+
+
+@pytest.fixture(scope="module")
+def impure_policy():
+    # this policy/threshold combination is chosen so EffVEDA's merge phase
+    # places genuinely impure nodes in role plans (guarded below) — the
+    # conftest small_policy at lam=300 merges to all-pure plans
+    return generate_policy(n_vectors=2000, n_roles=8, n_permissions=20,
+                           seed=2)
+
+
+@pytest.fixture(scope="module")
+def impure_store(impure_policy):
+    """EffVEDA store whose plans contain impure nodes + leftover blocks."""
+    cm = HNSWCostModel(lam_threshold=100)
+    res = build_effveda(impure_policy, cm, beta=1.1, k=10)
+    rng = np.random.default_rng(0)
+    vecs = rng.standard_normal((impure_policy.n_vectors, 16)
+                               ).astype(np.float32)
+    return build_vector_storage(
+        res, vecs, engine_factory=scorescan_factory(impure_policy))
+
+
+def test_impure_store_is_actually_impure(impure_store, impure_policy):
+    """Guard: the fixture must exercise the impure wave (post-filter path)."""
+    pairs = 0
+    for r in range(impure_policy.n_roles):
+        mask = impure_store.authorized_mask(r)
+        for key in impure_store.plans[r].nodes:
+            if key in impure_store.engines and \
+                    not impure_store.is_pure(key, mask):
+                pairs += 1
+    assert pairs > 0, "fixture regressed to all-pure plans"
+
+
+@pytest.fixture(scope="module")
+def pure_store(small_policy, small_vectors, cost_model):
+    """Unmerged exclusive lattice: every node pure, zero leftover blocks."""
+    lat = Lattice.exclusive(small_policy)
+    res = BuildResult(lattice=lat, leftovers=frozenset(),
+                      plans=build_all_plans(lat, cost_model, 10), stats={})
+    return build_vector_storage(
+        res, small_vectors, engine_factory=scorescan_factory(small_policy))
+
+
+def _batch(store, policy, b, seed=0):
+    rng = np.random.default_rng(seed)
+    qs = store.data[rng.integers(len(store.data), size=b)] + 0.01
+    roles = [int(r) for r in rng.integers(policy.n_roles, size=b)]
+    return qs.astype(np.float32), roles
+
+
+def _assert_parity(store, qs, roles, k):
+    got = batched_search(store, qs, roles, k)
+    for i, (q, r) in enumerate(zip(qs, roles)):
+        ref = coordinated_scan_search(store, q, r, k)
+        assert {v for _, v in got[i]} == {v for _, v in ref}, (i, r)
+        np.testing.assert_allclose(
+            np.sort([d for d, _ in got[i]]), np.sort([d for d, _ in ref]),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_parity_impure_heavy_store(impure_store, impure_policy):
+    qs, roles = _batch(impure_store, impure_policy, 16, seed=0)
+    _assert_parity(impure_store, qs, roles, k=10)
+
+
+def test_parity_pure_only_empty_leftover_store(pure_store, small_policy):
+    qs, roles = _batch(pure_store, small_policy, 16, seed=1)
+    _assert_parity(pure_store, qs, roles, k=10)
+
+
+def test_parity_multi_role_batch_and_large_k(impure_store, impure_policy):
+    """Every role present in one batch; k big enough to pad small nodes."""
+    roles = [r % impure_policy.n_roles for r in range(2 * impure_policy.n_roles)]
+    rng = np.random.default_rng(2)
+    qs = (impure_store.data[rng.integers(len(impure_store.data),
+                                         size=len(roles))] + 0.01)
+    _assert_parity(impure_store, qs, roles, k=25)
+
+
+def test_parity_single_query_batch(impure_store, impure_policy):
+    qs, roles = _batch(impure_store, impure_policy, 1, seed=3)
+    _assert_parity(impure_store, qs, roles, k=10)
+
+
+def test_matches_generic_coordinated_search(impure_store, impure_policy):
+    """Same answers as the engine-agnostic Alg. 7 implementation."""
+    qs, roles = _batch(impure_store, impure_policy, 8, seed=4)
+    got = batched_search(impure_store, qs, roles, 10)
+    for i, (q, r) in enumerate(zip(qs, roles)):
+        ref = coordinated_search(impure_store, q, r, 10, efs=50)
+        assert {v for _, v in got[i]} == {v for _, v in ref}
+
+
+def test_stats_aggregation_matches_sequential(impure_store, impure_policy):
+    """Schedule-independent counters must equal the summed per-query stats;
+    skip counters are schedule-dependent but bounded."""
+    qs, roles = _batch(impure_store, impure_policy, 12, seed=5)
+    bstats = SearchStats()
+    batched_search(impure_store, qs, roles, 10, stats=bstats)
+    sstats = SearchStats()
+    for q, r in zip(qs, roles):
+        coordinated_scan_search(impure_store, q, r, 10, stats=sstats)
+    for field in ("indices_visited", "leftover_vectors_scanned",
+                  "data_touched", "data_authorized_touched"):
+        assert getattr(bstats, field) == getattr(sstats, field), field
+    assert 0 <= bstats.phase2_skipped <= bstats.indices_visited
+    assert 0.0 <= bstats.purity <= 1.0
+    assert 0.0 <= bstats.skip_rate <= 1.0
+
+
+def test_results_always_authorized(impure_store, impure_policy):
+    rng = np.random.default_rng(6)
+    qs = rng.standard_normal((10, impure_store.data.shape[1])
+                             ).astype(np.float32) * 3
+    roles = [int(r) for r in rng.integers(impure_policy.n_roles, size=10)]
+    got = batched_search(impure_store, qs, roles, 10)
+    for res, r in zip(got, roles):
+        mask = impure_store.authorized_mask(r)
+        assert all(mask[v] for _, v in res)
+
+
+def test_batch_topk_dedups_and_sorts():
+    tk = BatchTopK(2, 3)
+    rows = np.array([0, 1])
+    tk.push_rows(rows, np.array([[2.0, 1.0], [5.0, 4.0]]),
+                 np.array([[7, 3], [9, 8]]))
+    # duplicate id 3 arrives again with a larger dist; id 2 is new and better
+    tk.push_rows(np.array([0]), np.array([[1.5, 0.5]]), np.array([[3, 2]]))
+    assert tk.items()[0] == [(0.5, 2), (1.0, 3), (2.0, 7)]
+    assert tk.items()[1] == [(4.0, 8), (5.0, 9)]
+    # row bound: row 0 full (kth finite), row 1 still open
+    kth = tk.kth()
+    assert np.isfinite(kth[0]) and np.isinf(kth[1])
+
+
+def test_batch_topk_padding_ignored():
+    tk = BatchTopK(1, 4)
+    tk.push_rows(np.array([0]), np.array([[np.inf, 1.0, np.inf]]),
+                 np.array([[-1, 5, -1]]))
+    assert tk.items()[0] == [(1.0, 5)]

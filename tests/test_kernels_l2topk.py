@@ -74,6 +74,91 @@ def test_tile_shape_invariance(bq, bn):
     assert (ik == ir).all()
 
 
+def test_per_query_role_masks_match_ref():
+    """(B,) role-mask vector: each query row filters by its own role bits."""
+    rng = np.random.default_rng(6)
+    B, N, d, k = 6, 700, 24, 8
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    auth = rng.integers(0, 2 ** 8, size=N).astype(np.uint32)
+    masks = (np.uint32(1) << rng.integers(0, 8, size=B).astype(np.uint32))
+    dk, ik = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth),
+                     masks.astype(np.uint32), k)
+    dr, ir = l2_topk_ref(jnp.array(q), jnp.array(db), jnp.array(auth),
+                         jnp.asarray(masks, jnp.uint32),
+                         jnp.float32(np.inf), k)
+    assert (np.array(ik) == np.array(ir)).all()
+    # every returned id is authorized for ITS row's role, not another row's
+    for row, m in zip(np.array(ik), masks):
+        for v in row[row >= 0]:
+            assert auth[v] & m
+
+
+def test_per_query_bounds_match_ref():
+    """(B,) bound vector: each row prunes at its own k-th distance."""
+    rng = np.random.default_rng(7)
+    B, N, d, k = 4, 600, 24, 8
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    auth = rng.integers(0, 2 ** 16, size=N).astype(np.uint32)
+    role = np.uint32(1 << 3)
+    # unbounded reference distances give each row its own midpoint bound
+    # (between the row-th and row+1-th neighbour — avoids float ties);
+    # row 0 stays unbounded
+    dr, _ = l2_topk_ref(jnp.array(q), jnp.array(db), jnp.array(auth),
+                        jnp.uint32(role), jnp.float32(np.inf), k)
+    dr = np.array(dr)
+    bounds = np.full(B, np.inf, np.float32)
+    for row in range(1, B):
+        bounds[row] = (dr[row, row] + dr[row, row + 1]) / 2
+    dk2, ik2 = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), role, k,
+                       bound=bounds)
+    dr2, ir2 = l2_topk_ref(jnp.array(q), jnp.array(db), jnp.array(auth),
+                           jnp.uint32(role), jnp.asarray(bounds), k)
+    assert (np.array(ik2) == np.array(ir2)).all()
+    # a bound between neighbours r and r+1 keeps exactly r+1; row 0 a full k
+    assert (np.array(ik2)[0] >= 0).all()
+    for row in range(1, B):
+        assert (np.array(ik2)[row] >= 0).sum() == row + 1
+
+
+def test_vector_args_equal_scalar_args():
+    """A constant (B,) vector must reproduce the scalar fast path bit-exactly."""
+    rng = np.random.default_rng(8)
+    B, N, d, k = 5, 300, 16, 6
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    auth = rng.integers(0, 2 ** 8, size=N).astype(np.uint32)
+    ds, is_ = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth),
+                      np.uint32(4), k, bound=9.0)
+    dv, iv = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth),
+                     np.full(B, 4, np.uint32), k,
+                     bound=np.full(B, 9.0, np.float32))
+    assert (np.array(is_) == np.array(iv)).all()
+    assert (np.array(ds) == np.array(dv)).all()
+
+
+def test_per_query_masks_with_k_exceeding_authorized():
+    """B>1, mixed roles, k > n_authorized for some rows: -1/inf padding is
+    per-row, driven by that row's mask."""
+    rng = np.random.default_rng(9)
+    B, N, d, k = 3, 200, 8, 10
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    auth = np.zeros(N, np.uint32)
+    auth[:3] = 1            # role bit 0: 3 vectors
+    auth[3:8] |= 2          # role bit 1: 5 vectors
+    masks = np.array([1, 2, 4], np.uint32)   # row 2's role matches nothing
+    d_, i_ = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), masks, k)
+    dr, ir = l2_topk_ref(jnp.array(q), jnp.array(db), jnp.array(auth),
+                         jnp.asarray(masks), jnp.float32(np.inf), k)
+    i_ = np.array(i_)
+    assert (i_ == np.array(ir)).all()
+    assert (i_[0] >= 0).sum() == 3 and set(i_[0][:3]) <= {0, 1, 2}
+    assert (i_[1] >= 0).sum() == 5 and set(i_[1][:5]) <= {3, 4, 5, 6, 7}
+    assert (i_[2] == -1).all()
+
+
 def test_multi_role_mask():
     """A multi-role query ORs role bits — union semantics in-kernel."""
     rng = np.random.default_rng(5)

@@ -1,7 +1,8 @@
-"""Lattice + policy invariants (paper §3), property-based via hypothesis."""
+"""Lattice + policy invariants (paper §3), property-based via hypothesis
+(deterministic fallback corpus when hypothesis is not installed)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, st
 
 from repro.core import generate_policy, Lattice
 from repro.core.policy import AccessPolicy

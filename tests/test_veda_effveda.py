@@ -1,7 +1,10 @@
-"""VEDA / EffVEDA optimizer invariants (paper Thms 4.2, 4.3, 5.2)."""
+"""VEDA / EffVEDA optimizer invariants (paper Thms 4.2, 4.3, 5.2).
+
+Property tests use hypothesis when available, else the deterministic
+fallback corpus in tests/_propshim.py."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, st
 
 from repro.core import (generate_policy, HNSWCostModel, build_veda,
                         build_effveda, Lattice, metrics)
