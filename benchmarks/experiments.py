@@ -282,6 +282,107 @@ def exp15_batched_throughput(bc: BenchConfig):
              f"qps={total / dt:.1f}")
 
 
+def exp16_continuous_batching(bc: BenchConfig):
+    """Continuous-batching serving layer: QPS / p50 / p99 vs arrival rate
+    and flush policy, against PR 1's fixed caller-assembled batches.
+
+    Three effects are isolated on the exp15 smoke corpus:
+      * ``exp16_fixed/B{8,32}_{unpacked,packed}`` — the PR 1 path: callers
+        assemble fixed-size batches; packed rows swap the per-block leftover
+        scans for one shard launch per batch.
+      * ``exp16_cb/sat_*`` — closed-loop saturation through the
+        MicroBatchScheduler (packed shard on): the QPS ceiling of
+        continuous batching under each flush policy.
+      * ``exp16_cb/r{rate}_*`` — open-loop Poisson arrivals: what the flush
+        policy does to p50/p99 when the queue is not saturated.
+
+    Every path is exact (parity-tested), so recall is equal by construction;
+    it is still measured against brute force and emitted to make the
+    "beats fixed-batch at equal recall" claim checkable from the report.
+    """
+    import asyncio
+    import dataclasses as dc
+    from repro.ann.scorescan import scorescan_factory
+    from repro.core import batched_search
+    from repro.launch.scheduler import (MicroBatchScheduler, ServeStats,
+                                        serve_requests)
+    sbc = dc.replace(bc, n_vectors=min(bc.n_vectors, 2000), dim=16,
+                     n_queries=max(bc.n_queries, 32), lam=min(bc.lam, 50))
+    ds = dataset(sbc)
+    cm = cost_model(sbc)
+    res = build_effveda(ds.policy, cm, beta=1.1, k=sbc.k)
+    store = build_vector_storage(res, ds.vectors,
+                                 engine_factory=scorescan_factory(ds.policy),
+                                 pack_leftovers=True)
+    total = 96
+    idx = np.arange(total) % len(ds.queries)
+    qs = np.asarray(ds.queries, np.float32)[idx]
+    roles = [int(r) for r in np.asarray(ds.query_roles)[idx]]
+    reqs = [(qs[i], roles[i], sbc.k) for i in range(total)]
+    truths = truth_for(ds, sbc.k)
+
+    def rec(results):
+        return float(np.mean([metrics.recall_at_k(
+            [vid for _, vid in r], truths[i % len(ds.queries)], sbc.k)
+            for i, r in enumerate(results)]))
+
+    # warm the jit caches for every padded query-tile shape this run can
+    # hit: query batches pad to multiples of the kernel's bq=8, so each
+    # engine (nodes + packed shard) compiles one trace per {8,16,24,32}
+    # bucket — scheduler batch compositions are timing-dependent, so every
+    # bucket must be warm or a single recompile pollutes p99
+    warm = np.ascontiguousarray(np.repeat(qs[:8], 4, axis=0))
+    for B in (1, 8, 16, 24, 32):
+        bits = np.full(B, 1, np.uint32)
+        bounds = np.full(B, np.inf, np.float32)
+        for eng in list(store.engines.values()) + [store.leftover_shard]:
+            if eng is not None and len(eng):
+                eng.search_masked_batch(warm[:B], sbc.k, bits, bounds=bounds)
+        batched_search(store, qs[:B], roles[:B], sbc.k, packed=True)
+        batched_search(store, qs[:B], roles[:B], sbc.k, packed=False)
+
+    # --- PR 1 baseline: fixed caller-assembled batches --------------------
+    for B in (8, 32):
+        for packed in (False, True):
+            t0 = time.perf_counter()
+            results = []
+            for lo in range(0, total, B):
+                results += batched_search(store, qs[lo:lo + B],
+                                          roles[lo:lo + B], sbc.k,
+                                          packed=packed)
+            dt = time.perf_counter() - t0
+            tag = "packed" if packed else "unpacked"
+            emit(f"exp16_fixed/B{B}_{tag}", dt / total * 1e6,
+                 f"qps={total / dt:.1f};recall={rec(results):.3f}")
+
+    # --- continuous batching through the scheduler ------------------------
+    rng = np.random.default_rng(123)
+    sweeps = [(None, 32, 2.0), (None, 8, 2.0),        # saturation ceiling
+              (200.0, 32, 2.0), (200.0, 32, 20.0)]    # rate × flush policy
+    for rate, max_batch, wait_ms in sweeps:
+        stats = ServeStats()
+        arrival = (None if rate is None
+                   else list(rng.exponential(1.0 / rate, size=total)))
+
+        async def run():
+            sched = MicroBatchScheduler(store, max_batch=max_batch,
+                                        max_wait_ms=wait_ms, stats=stats)
+            try:
+                return await serve_requests(sched, reqs, arrival_s=arrival)
+            finally:
+                await sched.close()
+
+        t0 = time.perf_counter()
+        results = asyncio.run(run())
+        dt = time.perf_counter() - t0
+        tag = "sat" if rate is None else f"r{int(rate)}"
+        emit(f"exp16_cb/{tag}_mb{max_batch}_w{wait_ms:g}",
+             dt / total * 1e6,
+             f"qps={total / dt:.1f};p50={stats.p50_ms:.1f};"
+             f"p99={stats.p99_ms:.1f};avg_batch={stats.avg_batch:.1f};"
+             f"recall={rec(results):.3f}")
+
+
 def exp14_multirole(bc: BenchConfig, suite: MethodSuite):
     """Figs 8a/8b: multi-role queries + global-fallback routing (the
     partitioning ↔ filtered-global crossover)."""

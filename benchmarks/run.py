@@ -22,6 +22,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single experiment, e.g. exp05 or kernels")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--json", default=None,
+                    help="also write a structured JSON report (CI artifact)")
     args = ap.parse_args()
 
     bc = BenchConfig()
@@ -67,14 +69,35 @@ def main() -> None:
     go("exp13", lambda: E.exp13_weighted_workload(bc, suite))
     go("exp14", lambda: E.exp14_multirole(bc, suite))
     go("exp15", lambda: E.exp15_batched_throughput(bc))
+    go("exp16", lambda: E.exp16_continuous_batching(bc))
 
     go("kernels", K.run_all)
 
-    print(f"# done in {time.time()-t0:.0f}s, {len(CSV_ROWS)} rows",
+    elapsed = time.time() - t0
+    print(f"# done in {elapsed:.0f}s, {len(CSV_ROWS)} rows",
           file=sys.stderr)
     if args.out:
         with open(args.out, "w") as f:
             f.write("\n".join(CSV_ROWS) + "\n")
+    if args.json:
+        import dataclasses
+        import json
+        rows = []
+        for row in CSV_ROWS:
+            name, us, derived = row.split(",", 2)
+            rec = {"name": name, "us_per_call": float(us)}
+            for kv in filter(None, derived.split(";")):
+                key, _, val = kv.partition("=")
+                try:
+                    rec[key] = float(val)
+                except ValueError:
+                    rec[key] = val
+            rows.append(rec)
+        with open(args.json, "w") as f:
+            json.dump({"config": dataclasses.asdict(bc),
+                       "only": args.only, "elapsed_s": round(elapsed, 2),
+                       "rows": rows}, f, indent=2)
+        print(f"# json report → {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,14 +1,31 @@
 #!/usr/bin/env bash
-# Fast CI tier: fail fast on collection regressions, then run the quick
-# (non-slow) tests.  The full tier-1 suite is `PYTHONPATH=src python -m
-# pytest -x -q` (~2.5 min); this script keeps the edit loop short.
+# CI gate.  Default: fail fast on syntax/collection regressions, then run
+# the quick (non-slow) tests — keeps the edit loop short.  --full runs the
+# complete tier-1 suite instead (~4 min on CI).  Either mode writes
+# junit.xml so CI can surface per-test results.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+FULL=0
+for arg in "$@"; do
+  case "$arg" in
+    --full) FULL=1 ;;
+    *) echo "usage: $0 [--full]" >&2; exit 2 ;;
+  esac
+done
+
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== syntax gate: compileall =="
+python -m compileall -q src benchmarks examples scripts
 
 echo "== collection check (must be clean) =="
 python -m pytest --collect-only -q >/dev/null
 
-echo "== fast tier: pytest -m 'not slow' =="
-python -m pytest -x -q -m "not slow"
+if [[ "$FULL" == 1 ]]; then
+  echo "== full tier-1 suite =="
+  python -m pytest -x -q --junitxml=junit.xml
+else
+  echo "== fast tier: pytest -m 'not slow' =="
+  python -m pytest -x -q -m "not slow" --junitxml=junit.xml
+fi

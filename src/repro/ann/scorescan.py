@@ -132,6 +132,35 @@ class ScoreScanIndex:
         return [(dd, internal[vid]) for dd, vid in res]
 
 
+def pack_leftover_shard(leftover_vectors, leftover_ids, policy,
+                        max_roles: int = 32,
+                        config: Optional[L2TopKConfig] = None
+                        ) -> Optional[ScoreScanIndex]:
+    """Concatenate every leftover block into one auth-masked ScoreScan shard.
+
+    Leftover blocks are individually tiny (below the lam scan threshold), so
+    per-block scanning costs one pass — and, in the batched engine, one
+    merge — per (block, micro-batch).  Packing them into a single
+    :class:`ScoreScanIndex` whose per-vector ``auth_bits`` carry each block's
+    role combination lets a whole micro-batch's leftover phase ride **one**
+    ``l2_topk`` launch: each query row filters by its own role bit in-kernel
+    (DESIGN.md §Continuous Batching).
+
+    Returns ``None`` when there are no leftover vectors.  Callers must not
+    pack when ``policy.n_roles > max_roles`` — role bits would alias and the
+    in-kernel top-k could crowd out authorized candidates (the per-block scan
+    path has no such failure mode, so the store falls back to it).
+    """
+    blocks = [b for b in sorted(leftover_ids) if len(leftover_ids[b])]
+    if not blocks:
+        return None
+    data = np.concatenate([leftover_vectors[b] for b in blocks])
+    ids = np.concatenate([leftover_ids[b] for b in blocks])
+    bits = policy.role_bitmask(max_roles=max_roles).astype(np.uint32)
+    return ScoreScanIndex(data=data, ids=ids, auth_bits=bits[ids],
+                          config=config or L2TopKConfig())
+
+
 def scorescan_factory(policy, max_roles: int = 32,
                       config: Optional[L2TopKConfig] = None):
     """Engine factory wiring the per-vector role bitmask from the policy."""

@@ -8,8 +8,10 @@ lattice traversal across a batch of ``(query, role)`` pairs:
 
   1. take the union of the per-role plans and invert it — for every lattice
      node (and leftover block), collect the batch rows whose plan touches it;
-  2. scan leftover blocks once per block for all touching rows, seeding the
-     vectorized per-query top-k;
+  2. scan leftover blocks once per block for all touching rows — or, when
+     the store carries a packed leftover shard, score *all* leftovers for
+     the whole batch in one ``l2_topk`` launch — seeding the vectorized
+     per-query top-k;
   3. visit nodes that are *pure* for a row first (their results need no
      post-filter and tighten that row's bound fastest), then impure / distant
      nodes, each node issuing **one** ``l2_topk`` call whose query batch
@@ -103,7 +105,9 @@ def _scan_leftovers_batched(store: VectorStore, queries: np.ndarray,
     """One pass per leftover block shared by every batch row touching it."""
     block_rows: Dict[int, List[int]] = defaultdict(list)
     for qi, plan in enumerate(plans):
-        for b in plan.leftover_blocks:
+        # dict.fromkeys: each (row, block) visit counted once even when a
+        # plan names a block twice (e.g. assembled from overlapping plans)
+        for b in dict.fromkeys(plan.leftover_blocks):
             block_rows[b].append(qi)
     for b, rows in block_rows.items():
         vecs = store.leftover_vectors.get(b)
@@ -124,13 +128,67 @@ def _scan_leftovers_batched(store: VectorStore, queries: np.ndarray,
                        ids[part].astype(np.int64))
 
 
+def _filter_unauthorized(d: np.ndarray, ids: np.ndarray, rows: np.ndarray,
+                         roles: Sequence[int], masks: Dict) -> None:
+    """In-place exact-mask post-filter on kernel results (the authorization
+    ground truth: role bits alias at 32 roles, the mask never does)."""
+    for j, qi in enumerate(rows):
+        ok = (ids[j] >= 0) & masks[roles[qi]][np.maximum(ids[j], 0)]
+        d[j] = np.where(ok, d[j], _INF)
+        ids[j] = np.where(ok, ids[j], -1)
+
+
+def _scan_leftovers_packed(store: VectorStore, queries: np.ndarray,
+                           plans: Sequence[Plan], roles: Sequence[int],
+                           masks: Dict, role_bits: np.ndarray,
+                           topk: BatchTopK, stats: SearchStats) -> None:
+    """Single ``l2_topk`` launch over the packed leftover shard for every
+    row whose plan has leftover blocks (DESIGN.md §Continuous Batching).
+
+    The shard's per-vector auth bits carry each block's role combination, so
+    each row's in-kernel role filter admits exactly its authorized leftover
+    vectors.  The kernel may also surface authorized leftover blocks *not*
+    in the row's plan — those blocks are covered by plan nodes (plan cover
+    property), so the same vectors arrive via the node waves and the merged
+    top-k is unchanged.  Stats stay logical and schedule-independent: each
+    (row, plan-block) visit is accounted once, exactly like the per-block
+    scan path, regardless of what the shard physically touches.
+    """
+    shard = store.leftover_shard
+    rows: List[int] = []
+    for qi, plan in enumerate(plans):
+        blocks = dict.fromkeys(plan.leftover_blocks)
+        if not blocks:
+            continue
+        rows.append(qi)
+        for b in blocks:
+            m = len(store.leftover_vectors.get(b, ()))
+            stats.leftover_vectors_scanned += m
+            stats.data_touched += m
+            stats.data_authorized_touched += m
+    if not rows:
+        return
+    rows = np.asarray(rows)
+    d, ids = shard.search_masked_batch(queries[rows], topk.k, role_bits[rows])
+    # defense in depth against role-bit aliasing (the shard is only built
+    # for n_roles <= 32, where bits are exact)
+    _filter_unauthorized(d, ids, rows, roles, masks)
+    topk.push_rows(rows, d, ids)
+
+
 def batched_search(store: VectorStore, queries: np.ndarray,
                    roles: Sequence[int], k: int,
-                   stats: Optional[SearchStats] = None
+                   stats: Optional[SearchStats] = None,
+                   packed: Optional[bool] = None
                    ) -> List[List[Tuple[float, int]]]:
     """Coordinated search for a batch of (query, role) pairs (Alg. 7,
     batch-amortized).  Requires ScoreScan-style engines exposing
     ``search_masked_batch`` / ``lower_bounds``.
+
+    ``packed`` selects the leftover strategy: ``True`` scans the packed
+    leftover shard (built on demand) in one kernel launch, ``False`` scans
+    per block, ``None`` (default) uses the shard iff the store already has
+    one (``store.pack_leftover_shard()``).
 
     Returns one sorted (dist, id) list per batch row — the same value
     ``coordinated_scan_search(store, queries[i], roles[i], k)`` produces.
@@ -145,7 +203,12 @@ def batched_search(store: VectorStore, queries: np.ndarray,
     role_bits = np.array([np.uint32(1 << (r % 32)) for r in roles], np.uint32)
 
     topk = BatchTopK(b, k)
-    _scan_leftovers_batched(store, queries, plans, topk, stats)
+    shard = store.pack_leftover_shard() if packed else store.leftover_shard
+    if shard is not None and packed is not False:
+        _scan_leftovers_packed(store, queries, plans, roles, masks,
+                               role_bits, topk, stats)
+    else:
+        _scan_leftovers_batched(store, queries, plans, topk, stats)
 
     # invert plans: node -> rows, split per (row, node) purity
     pure_rows: Dict = defaultdict(list)
@@ -196,12 +259,7 @@ def batched_search(store: VectorStore, queries: np.ndarray,
                                              role_bits[act],
                                              bounds=kth[active])
             if impure:
-                # role bits alias at 32 roles — the mask is ground truth
-                for j, qi in enumerate(act):
-                    ok = (ids[j] >= 0) & masks[roles[qi]][
-                        np.maximum(ids[j], 0)]
-                    d[j] = np.where(ok, d[j], _INF)
-                    ids[j] = np.where(ok, ids[j], -1)
+                _filter_unauthorized(d, ids, act, roles, masks)
             topk.push_rows(act, d, ids)
 
     _wave(pure_rows, impure=False)

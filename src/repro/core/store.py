@@ -42,6 +42,7 @@ class VectorStore:
     leftover_vectors: Dict[int, np.ndarray]        # block id → (m, d) array
     leftover_ids: Dict[int, np.ndarray]            # block id → vector ids
     global_engine: Optional[object] = None         # Exp-14 fallback / Baseline1
+    leftover_shard: Optional[object] = None        # packed ScoreScan leftovers
     _auth_cache: Dict[Role, np.ndarray] = dataclasses.field(default_factory=dict)
 
     def authorized_mask(self, r: Role) -> np.ndarray:
@@ -70,6 +71,27 @@ class VectorStore:
         total, auth = self.node_total_and_auth(key, mask)
         return auth == total
 
+    def pack_leftover_shard(self, max_roles: int = 32,
+                            config: Optional[object] = None):
+        """Build (once) the packed leftover shard: every leftover block
+        concatenated into one auth-masked ScoreScan index, so a micro-batch's
+        leftover phase is a single ``l2_topk`` launch instead of one scan +
+        merge per block (DESIGN.md §Continuous Batching).
+
+        Returns the shard, or ``None`` when there are no leftovers or when
+        ``n_roles > max_roles`` (role bits would alias in-kernel, which can
+        crowd authorized candidates out of the shard-wide top-k; the
+        per-block scan path stays exact, so callers fall back to it).
+        """
+        if self.leftover_shard is None:
+            if self.policy.n_roles > max_roles:
+                return None
+            from ..ann.scorescan import pack_leftover_shard
+            self.leftover_shard = pack_leftover_shard(
+                self.leftover_vectors, self.leftover_ids, self.policy,
+                max_roles=max_roles, config=config)
+        return self.leftover_shard
+
     def stored_vectors(self) -> int:
         n = sum(len(e.ids) for e in self.engines.values())
         n += sum(len(v) for v in self.leftover_vectors.values())
@@ -82,7 +104,8 @@ class VectorStore:
 def build_vector_storage(result: BuildResult, data: np.ndarray,
                          engine_factory: Optional[EngineFactory] = None,
                          with_global: bool = False,
-                         global_factory: Optional[EngineFactory] = None
+                         global_factory: Optional[EngineFactory] = None,
+                         pack_leftovers: bool = False,
                          ) -> VectorStore:
     lat = result.lattice
     policy = lat.policy
@@ -101,10 +124,13 @@ def build_vector_storage(result: BuildResult, data: np.ndarray,
     if with_global:
         gf = global_factory or factory
         g = gf(data, np.arange(len(data), dtype=np.int64))
-    return VectorStore(data=np.ascontiguousarray(data, dtype=np.float32),
-                       policy=policy, lattice=lat, plans=dict(result.plans),
-                       engines=engines, leftover_vectors=leftover_vectors,
-                       leftover_ids=leftover_ids, global_engine=g)
+    store = VectorStore(data=np.ascontiguousarray(data, dtype=np.float32),
+                        policy=policy, lattice=lat, plans=dict(result.plans),
+                        engines=engines, leftover_vectors=leftover_vectors,
+                        leftover_ids=leftover_ids, global_engine=g)
+    if pack_leftovers:
+        store.pack_leftover_shard()
+    return store
 
 
 def build_oracle_store(policy: AccessPolicy, data: np.ndarray,

@@ -1,0 +1,273 @@
+"""Continuous-batching scheduler over the batched lattice engine.
+
+PR 1's serving path takes fixed, caller-assembled batches: whoever calls
+``RAGServer.retrieve_batch`` decides the batch boundaries, so a trickle of
+requests runs at B=1 and a burst waits for the whole burst to assemble.
+This module adds the missing layer between callers and the engine:
+
+  * :class:`MicroBatchScheduler` — an async request queue.  ``submit(query,
+    role, k)`` returns a future immediately; a flusher coroutine cuts
+    micro-batches whenever ``max_batch`` requests are waiting **or** the
+    oldest request has waited ``max_wait_ms`` (continuous batching: each
+    flush takes whatever arrived, so batch sizes track the arrival process).
+  * Each micro-batch runs through one ``batched_search`` call — one lattice
+    sweep, one ``l2_topk`` launch per touched node, one packed-leftover
+    launch — and per-request ``k`` is honored by searching ``max(k)`` and
+    truncating each row's sorted result (exact: a top-k prefix of a
+    top-k' list, k <= k', is the true top-k).
+  * :class:`ServeStats` — per-request queue/latency samples (p50/p99),
+    flush-reason counts, batch-size and queue-depth tracking, plus the
+    merged :class:`SearchStats` of every micro-batch.
+
+Fairness: the queue is FIFO across roles.  A micro-batch freely mixes
+roles — the batched engine unions their plans, so co-scheduled roles share
+kernel launches on every lattice node their plans overlap on, and the
+packed leftover shard amortizes even the disjoint leftover tails.
+
+Results are exactly the per-query coordinated-search answers for any flush
+schedule (tests/test_scheduler.py): the engine's parity contract is
+schedule-independent, and the scheduler only re-buckets rows.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import SearchStats, batched_search
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Serving-layer accounting for a scheduler run (benchmarks exp16)."""
+
+    submitted: int = 0
+    completed: int = 0
+    batches_flushed: int = 0
+    flush_full: int = 0            # flushed because max_batch was reached
+    flush_timeout: int = 0         # flushed because max_wait_ms expired
+    flush_drain: int = 0           # flushed by drain()/close()
+    batch_size_sum: int = 0
+    batch_size_max: int = 0
+    queue_depth_peak: int = 0
+    queue_ms: List[float] = dataclasses.field(default_factory=list)
+    latency_ms: List[float] = dataclasses.field(default_factory=list)
+    search: SearchStats = dataclasses.field(default_factory=SearchStats)
+
+    @property
+    def avg_batch(self) -> float:
+        return (self.batch_size_sum / self.batches_flushed
+                if self.batches_flushed else 0.0)
+
+    def latency_percentile(self, p: float) -> float:
+        if not self.latency_ms:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latency_ms), p))
+
+    @property
+    def p50_ms(self) -> float:
+        return self.latency_percentile(50)
+
+    @property
+    def p99_ms(self) -> float:
+        return self.latency_percentile(99)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "submitted": self.submitted, "completed": self.completed,
+            "batches": self.batches_flushed, "avg_batch": self.avg_batch,
+            "batch_max": self.batch_size_max,
+            "flush_full": self.flush_full,
+            "flush_timeout": self.flush_timeout,
+            "flush_drain": self.flush_drain,
+            "queue_depth_peak": self.queue_depth_peak,
+            "p50_ms": self.p50_ms, "p99_ms": self.p99_ms,
+        }
+
+
+@dataclasses.dataclass
+class _Request:
+    query: np.ndarray
+    role: int
+    k: int
+    t_submit: float
+    future: "asyncio.Future"
+
+
+# search_fn(store, queries (B, d), roles (B,), k, stats) -> per-row results
+SearchFn = Callable[..., List[List[Tuple[float, int]]]]
+
+
+class MicroBatchScheduler:
+    """Async continuous-batching front end for a vector store.
+
+    ``submit`` never blocks: it enqueues and returns an ``asyncio.Future``
+    resolved with that request's sorted authorized ``[(dist, id), ...]``.
+    The flusher coroutine (started lazily on first submit) owns batch
+    cutting; each micro-batch's search runs on the default executor thread,
+    so the event loop keeps accepting submissions *while a batch executes* —
+    the backlog that accumulates during one search becomes the next flush's
+    batch, which is what makes the batch size track the arrival rate.
+    Micro-batches execute one at a time (no search overlap), so
+    ``stats.search`` merging stays race-free.
+    """
+
+    def __init__(self, store, *, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, default_k: int = 10,
+                 search_fn: Optional[SearchFn] = None,
+                 stats: Optional[ServeStats] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        assert max_batch >= 1, max_batch
+        self.store = store
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self.default_k = int(default_k)
+        self.search_fn = search_fn or batched_search
+        self.stats = stats if stats is not None else ServeStats()
+        self._clock = clock
+        self._queue: List[_Request] = []
+        self._wake: Optional[asyncio.Event] = None
+        self._task: Optional[asyncio.Task] = None
+        self._closed = False
+        self._draining = False
+        self._busy = False
+
+    # ------------------------------------------------------------ submission
+    def submit(self, query: np.ndarray, role: int,
+               k: Optional[int] = None) -> "asyncio.Future":
+        """Enqueue one request; the returned future resolves to its top-k."""
+        assert not self._closed, "scheduler is closed"
+        loop = asyncio.get_running_loop()
+        req = _Request(query=np.asarray(query, np.float32), role=int(role),
+                       k=int(k if k is not None else self.default_k),
+                       t_submit=self._clock(), future=loop.create_future())
+        self._queue.append(req)
+        self.stats.submitted += 1
+        self.stats.queue_depth_peak = max(self.stats.queue_depth_peak,
+                                          len(self._queue))
+        if self._wake is None:
+            self._wake = asyncio.Event()
+        self._wake.set()
+        if self._task is None or self._task.done():
+            self._task = loop.create_task(self._run())
+        return req.future
+
+    async def drain(self) -> None:
+        """Flush everything queued, wait for in-flight batches to finish."""
+        self._draining = True
+        if self._wake is not None:
+            self._wake.set()
+        try:
+            while self._queue or self._busy:
+                await asyncio.sleep(0.0005)
+        finally:
+            self._draining = False
+        if self._task is not None and not self._task.done():
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+
+    async def close(self) -> None:
+        self._closed = True
+        await self.drain()
+
+    # ------------------------------------------------------------- flush loop
+    async def _run(self) -> None:
+        while True:
+            if not self._queue:
+                # idle: park until the next submit; drain() cancels us
+                self._wake.clear()
+                await self._wake.wait()
+            # accumulate until full or the oldest request's deadline passes
+            while (self._queue and not self._draining
+                   and len(self._queue) < self.max_batch):
+                oldest = self._queue[0].t_submit
+                budget = self.max_wait_ms / 1e3 - (self._clock() - oldest)
+                if budget <= 0:
+                    break
+                self._wake.clear()
+                try:
+                    await asyncio.wait_for(self._wake.wait(), timeout=budget)
+                except asyncio.TimeoutError:
+                    break
+            if self._queue:
+                if len(self._queue) >= self.max_batch:
+                    reason = "full"
+                elif self._draining:
+                    reason = "drain"
+                else:
+                    reason = "timeout"
+                await self._flush(reason)
+            await asyncio.sleep(0)       # let submitters run between flushes
+
+    async def _flush(self, reason: str) -> None:
+        batch, self._queue = (self._queue[:self.max_batch],
+                              self._queue[self.max_batch:])
+        if not batch:
+            return
+        st = self.stats
+        self._busy = True
+        t0 = self._clock()
+        for r in batch:
+            st.queue_ms.append((t0 - r.t_submit) * 1e3)
+        error: Optional[Exception] = None
+        results: List = []
+        try:
+            k = max(r.k for r in batch)
+            qs = np.stack([r.query for r in batch]).astype(np.float32)
+            roles = [r.role for r in batch]
+            loop = asyncio.get_running_loop()
+            results = await loop.run_in_executor(
+                None, lambda: self.search_fn(self.store, qs, roles, k,
+                                             stats=st.search))
+        except Exception as e:         # propagate to callers, keep serving
+            error = e
+        finally:
+            self._busy = False
+        # the batch was dequeued either way: account it so queue_ms and
+        # latency_ms stay paired per request and flush counts stay honest
+        t1 = self._clock()
+        st.batches_flushed += 1
+        st.batch_size_sum += len(batch)
+        st.batch_size_max = max(st.batch_size_max, len(batch))
+        setattr(st, f"flush_{reason}", getattr(st, f"flush_{reason}") + 1)
+        for i, r in enumerate(batch):
+            st.latency_ms.append((t1 - r.t_submit) * 1e3)
+            if r.future.done():          # caller may have been cancelled
+                continue
+            if error is not None:
+                r.future.set_exception(error)
+            else:
+                st.completed += 1
+                r.future.set_result(results[i][:r.k])
+
+
+async def serve_requests(scheduler: MicroBatchScheduler,
+                         requests: Sequence[Tuple[np.ndarray, int, int]],
+                         arrival_s: Optional[Sequence[float]] = None
+                         ) -> List[List[Tuple[float, int]]]:
+    """Submit a request stream and gather results in submission order.
+
+    ``requests`` is a sequence of ``(query, role, k)``; ``arrival_s``
+    optionally gives each request's inter-arrival delay (an open-loop
+    arrival process — exp16 uses exponential gaps).  Omitted, the whole
+    stream is submitted back-to-back (closed-loop saturation).
+    """
+    futures = []
+    try:
+        for i, (q, role, k) in enumerate(requests):
+            if (arrival_s is not None and i < len(arrival_s)
+                    and arrival_s[i] > 0):
+                await asyncio.sleep(arrival_s[i])
+            futures.append(scheduler.submit(q, role, k))
+        return list(await asyncio.gather(*futures))
+    finally:
+        # drain even when a request failed: resolves queued futures and
+        # retires the flusher task instead of leaking it
+        await scheduler.drain()

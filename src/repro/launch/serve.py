@@ -77,6 +77,36 @@ class RAGServer:
         return [coordinated_search(self.store, q, int(r), k, efs, stats=stats)
                 for q, r in zip(queries, roles)]
 
+    async def serve_stream(self, requests: Sequence[Tuple],
+                           max_batch: int = 16, max_wait_ms: float = 2.0,
+                           arrival_s: Optional[Sequence[float]] = None,
+                           serve_stats: Optional["ServeStats"] = None
+                           ) -> List[List[Tuple[float, int]]]:
+        """Continuous-batching retrieval for an async request stream.
+
+        ``requests`` is a sequence of ``(query, role, k)``.  Each request is
+        submitted to a :class:`MicroBatchScheduler` (optionally paced by
+        ``arrival_s`` inter-arrival gaps); the scheduler cuts micro-batches
+        on ``max_batch``/``max_wait_ms`` and routes each through
+        :meth:`retrieve_batch` — the batched engine when the store supports
+        it (with the packed leftover shard if built), per-query coordinated
+        search otherwise.  Returns per-request sorted authorized (dist, id)
+        lists in submission order; latency/queue/flush accounting lands in
+        ``serve_stats``.
+        """
+        from .scheduler import MicroBatchScheduler, serve_requests
+
+        def _search(store, qs, roles, k, stats=None):
+            return self.retrieve_batch(qs, roles, k, stats=stats)
+
+        sched = MicroBatchScheduler(self.store, max_batch=max_batch,
+                                    max_wait_ms=max_wait_ms,
+                                    search_fn=_search, stats=serve_stats)
+        try:
+            return await serve_requests(sched, requests, arrival_s=arrival_s)
+        finally:
+            await sched.close()
+
     def serve_batch(self, queries: np.ndarray, roles: Sequence[int],
                     k: int = 4, efs: int = 50, decode_tokens: int = 8,
                     stats: Optional[SearchStats] = None) -> Dict:
@@ -132,7 +162,8 @@ def build_demo_server(arch: str = "smollm-360m", n_vectors: int = 4000,
         factory = scorescan_factory(ds.policy)
     else:
         factory = exact_factory()
-    store = build_vector_storage(result, ds.vectors, engine_factory=factory)
+    store = build_vector_storage(result, ds.vectors, engine_factory=factory,
+                                 pack_leftovers=(engine == "scorescan"))
     cfg = get_smoke_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(seed))
     return RAGServer(cfg=cfg, params=params, store=store), ds

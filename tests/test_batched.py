@@ -132,6 +132,100 @@ def test_results_always_authorized(impure_store, impure_policy):
         assert all(mask[v] for _, v in res)
 
 
+# ------------------------------------------------- packed leftover shard
+def _packed_clone(store):
+    """Same store with the packed leftover shard built (fresh dataclass copy
+    so the module-scoped fixture keeps exercising the per-block path)."""
+    import dataclasses as dc
+    clone = dc.replace(store)
+    clone.leftover_shard = None
+    assert clone.pack_leftover_shard() is not None
+    return clone
+
+
+def test_packed_shard_layout(impure_store, impure_policy):
+    """Shard concatenates every leftover block; auth bits carry each block's
+    role combination."""
+    clone = _packed_clone(impure_store)
+    shard = clone.leftover_shard
+    n_left = sum(len(v) for v in impure_store.leftover_vectors.values())
+    assert len(shard) == n_left > 0
+    bits = impure_policy.role_bitmask(max_roles=32).astype(np.uint32)
+    np.testing.assert_array_equal(shard.auth_bits, bits[shard.ids])
+    # idempotent: a second call returns the same shard
+    assert clone.pack_leftover_shard() is shard
+
+
+def test_packed_parity_with_unpacked_and_sequential(impure_store,
+                                                    impure_policy):
+    """Packed leftover scan returns exactly the per-block / per-query
+    results (ISSUE acceptance: identical (dist, id) sets)."""
+    clone = _packed_clone(impure_store)
+    qs, roles = _batch(impure_store, impure_policy, 16, seed=7)
+    packed = batched_search(clone, qs, roles, 10)
+    unpacked = batched_search(impure_store, qs, roles, 10, packed=False)
+    for i, (q, r) in enumerate(zip(qs, roles)):
+        assert {v for _, v in packed[i]} == {v for _, v in unpacked[i]}, i
+        ref = coordinated_scan_search(impure_store, q, r, 10)
+        assert {v for _, v in packed[i]} == {v for _, v in ref}, i
+        np.testing.assert_allclose(
+            np.sort([d for d, _ in packed[i]]), np.sort([d for d, _ in ref]),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_packed_stats_match_sequential(impure_store, impure_policy):
+    """Packed-path stats stay logical: each (row, plan-block) visit counted
+    once, equal to the summed per-query accounting."""
+    clone = _packed_clone(impure_store)
+    qs, roles = _batch(impure_store, impure_policy, 12, seed=8)
+    pstats = SearchStats()
+    batched_search(clone, qs, roles, 10, stats=pstats)
+    sstats = SearchStats()
+    for q, r in zip(qs, roles):
+        coordinated_scan_search(impure_store, q, r, 10, stats=sstats)
+    for field in ("indices_visited", "leftover_vectors_scanned",
+                  "data_touched", "data_authorized_touched"):
+        assert getattr(pstats, field) == getattr(sstats, field), field
+
+
+def test_leftover_visits_counted_once_per_row_block(impure_store,
+                                                    impure_policy):
+    """A plan naming the same leftover block twice (e.g. assembled from
+    overlapping plans) must not double-count the (row, block) visit — in the
+    per-block path or the packed path — and results must be unchanged."""
+    import dataclasses as dc
+    role = next(r for r in range(impure_policy.n_roles)
+                if impure_store.plans[r].leftover_blocks)
+    plan = impure_store.plans[role]
+    dup = dc.replace(plan,
+                     leftover_blocks=plan.leftover_blocks
+                     + plan.leftover_blocks[:1])
+    for store in (dc.replace(impure_store, leftover_shard=None),
+                  _packed_clone(impure_store)):
+        store.plans = dict(store.plans)
+        store.plans[role] = dup
+        qs, _ = _batch(impure_store, impure_policy, 4, seed=9)
+        roles = [role] * 4
+        clean = SearchStats()
+        want = batched_search(impure_store, qs, roles, 10, stats=clean,
+                              packed=False)
+        got_stats = SearchStats()
+        got = batched_search(store, qs, roles, 10, stats=got_stats)
+        assert got_stats.leftover_vectors_scanned == \
+            clean.leftover_vectors_scanned
+        assert got_stats.data_touched == clean.data_touched
+        for i in range(4):
+            assert {v for _, v in got[i]} == {v for _, v in want[i]}
+
+
+def test_packed_shard_refused_when_roles_alias(impure_store):
+    """n_roles > max_roles would alias role bits in-kernel: no shard."""
+    import dataclasses as dc
+    clone = dc.replace(impure_store, leftover_shard=None)
+    assert clone.pack_leftover_shard(max_roles=4) is None
+    assert clone.leftover_shard is None
+
+
 def test_batch_topk_dedups_and_sorts():
     tk = BatchTopK(2, 3)
     rows = np.array([0, 1])

@@ -1,0 +1,233 @@
+"""Continuous-batching scheduler (launch/scheduler.py): result parity with
+per-query coordinated search for randomized multi-role streams, flush
+policy, per-request k truncation, ServeStats accounting, and the
+RAGServer.serve_stream / retrieve_batch fallback plumbing."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.ann.exact import ExactIndex
+from repro.ann.scorescan import scorescan_factory, coordinated_scan_search
+from repro.core import (HNSWCostModel, build_effveda, build_vector_storage,
+                        coordinated_search, exact_factory, generate_policy)
+from repro.launch.scheduler import (MicroBatchScheduler, ServeStats,
+                                    serve_requests)
+
+
+@pytest.fixture(scope="module")
+def policy():
+    return generate_policy(n_vectors=1500, n_roles=8, n_permissions=20,
+                           seed=2)
+
+
+@pytest.fixture(scope="module")
+def build(policy):
+    return build_effveda(policy, HNSWCostModel(lam_threshold=100),
+                         beta=1.1, k=10)
+
+
+@pytest.fixture(scope="module")
+def vectors(policy):
+    rng = np.random.default_rng(0)
+    return rng.standard_normal((policy.n_vectors, 16)).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def scan_store(build, vectors, policy):
+    return build_vector_storage(build, vectors,
+                                engine_factory=scorescan_factory(policy),
+                                pack_leftovers=True)
+
+
+@pytest.fixture(scope="module")
+def exact_store(build, vectors):
+    return build_vector_storage(build, vectors,
+                                engine_factory=exact_factory())
+
+
+def _stream(policy, vectors, n, seed, k_lo=4, k_hi=12):
+    rng = np.random.default_rng(seed)
+    qs = vectors[rng.integers(len(vectors), size=n)] + 0.01
+    roles = [int(r) for r in rng.integers(policy.n_roles, size=n)]
+    ks = [int(k) for k in rng.integers(k_lo, k_hi, size=n)]
+    return [(qs[i].astype(np.float32), roles[i], ks[i]) for i in range(n)]
+
+
+def _run(store, reqs, *, max_batch=8, max_wait_ms=2.0, stats=None,
+         arrival_s=None, search_fn=None):
+    async def main():
+        sched = MicroBatchScheduler(store, max_batch=max_batch,
+                                    max_wait_ms=max_wait_ms, stats=stats,
+                                    search_fn=search_fn)
+        try:
+            return await serve_requests(sched, reqs, arrival_s=arrival_s)
+        finally:
+            await sched.close()
+    return asyncio.run(main())
+
+
+def _assert_matches_reference(store, reqs, results):
+    assert len(results) == len(reqs)
+    for i, (q, role, k) in enumerate(reqs):
+        ref = coordinated_scan_search(store, q, role, k)
+        assert {v for _, v in results[i]} == {v for _, v in ref}, (i, role)
+        np.testing.assert_allclose(
+            np.sort([d for d, _ in results[i]]),
+            np.sort([d for d, _ in ref]), rtol=1e-5, atol=1e-5)
+
+
+def test_stream_parity_randomized_multirole(scan_store, policy, vectors):
+    """Acceptance: serve_stream results exactly equal per-query coordinated
+    search for every request of a randomized multi-role stream."""
+    reqs = _stream(policy, vectors, 40, seed=1)
+    stats = ServeStats()
+    results = _run(scan_store, reqs, max_batch=16, stats=stats)
+    _assert_matches_reference(scan_store, reqs, results)
+    assert stats.submitted == stats.completed == len(reqs)
+
+
+def test_stream_parity_with_arrival_gaps(scan_store, policy, vectors):
+    rng = np.random.default_rng(7)
+    reqs = _stream(policy, vectors, 24, seed=3)
+    results = _run(scan_store, reqs, max_batch=6, max_wait_ms=1.0,
+                   arrival_s=list(rng.exponential(0.002, size=len(reqs))))
+    _assert_matches_reference(scan_store, reqs, results)
+
+
+def test_per_request_k_truncation(scan_store, policy, vectors):
+    """Mixed-k micro-batches search max(k) and truncate each row exactly."""
+    reqs = _stream(policy, vectors, 12, seed=4, k_lo=1, k_hi=15)
+    results = _run(scan_store, reqs, max_batch=12, max_wait_ms=50.0)
+    for (q, role, k), res in zip(reqs, results):
+        assert len(res) <= k
+        dists = [d for d, _ in res]
+        assert dists == sorted(dists)
+    _assert_matches_reference(scan_store, reqs, results)
+
+
+def test_flush_on_max_batch(scan_store, policy, vectors):
+    """A burst larger than max_batch must cut at least one full batch."""
+    reqs = _stream(policy, vectors, 20, seed=5)
+    stats = ServeStats()
+    _run(scan_store, reqs, max_batch=4, max_wait_ms=10_000.0, stats=stats)
+    assert stats.flush_full >= 1
+    assert stats.batch_size_max <= 4
+    assert stats.batches_flushed >= 5
+
+
+def test_flush_on_timeout(scan_store, policy, vectors):
+    """A single request must not wait for a full batch."""
+    reqs = _stream(policy, vectors, 1, seed=6)
+    stats = ServeStats()
+    _run(scan_store, reqs, max_batch=64, max_wait_ms=1.0, stats=stats)
+    assert stats.completed == 1
+    assert stats.flush_timeout + stats.flush_drain >= 1
+    assert stats.flush_full == 0
+
+
+def test_serve_stats_accounting(scan_store, policy, vectors):
+    reqs = _stream(policy, vectors, 15, seed=8)
+    stats = ServeStats()
+    _run(scan_store, reqs, max_batch=8, stats=stats)
+    assert stats.batch_size_sum == stats.completed == 15
+    assert len(stats.latency_ms) == len(stats.queue_ms) == 15
+    assert all(l >= q for l, q in zip(stats.latency_ms, stats.queue_ms))
+    assert stats.p50_ms <= stats.p99_ms
+    assert 1 <= stats.queue_depth_peak <= 15
+    assert stats.search.data_touched > 0
+    s = stats.summary()
+    assert s["batches"] == stats.batches_flushed
+    assert s["avg_batch"] == pytest.approx(15 / stats.batches_flushed)
+
+
+def test_scheduler_restarts_after_drain(scan_store, policy, vectors):
+    """submit → drain → submit again must keep serving (flusher restarts)."""
+    reqs = _stream(policy, vectors, 6, seed=9)
+
+    async def main():
+        sched = MicroBatchScheduler(scan_store, max_batch=4, max_wait_ms=1.0)
+        first = await asyncio.gather(*[sched.submit(q, r, k)
+                                       for q, r, k in reqs[:3]])
+        await sched.drain()
+        second = await asyncio.gather(*[sched.submit(q, r, k)
+                                       for q, r, k in reqs[3:]])
+        await sched.close()
+        return list(first) + list(second)
+
+    results = asyncio.run(main())
+    _assert_matches_reference(scan_store, reqs, results)
+
+
+def test_search_error_propagates_to_futures(scan_store, policy, vectors):
+    reqs = _stream(policy, vectors, 3, seed=10)
+
+    def boom(store, qs, roles, k, stats=None):
+        raise RuntimeError("engine down")
+
+    with pytest.raises(RuntimeError, match="engine down"):
+        _run(scan_store, reqs, search_fn=boom)
+
+
+# --------------------------------------------------- RAGServer plumbing
+@pytest.fixture(scope="module")
+def server_pair(scan_store, exact_store):
+    """RAGServer shells around both stores; retrieval never touches the LM
+    params, so empty params keep the fixture light."""
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import RAGServer
+    cfg = get_smoke_config("smollm-360m")
+    return (RAGServer(cfg=cfg, params={}, store=scan_store),
+            RAGServer(cfg=cfg, params={}, store=exact_store))
+
+
+def test_batched_capable_reporting(server_pair, scan_store, exact_store,
+                                   build, vectors, policy):
+    scan_srv, exact_srv = server_pair
+    assert scan_srv.batched_capable()
+    assert not exact_srv.batched_capable()
+    # mixed-engine store: one node downgraded to ExactIndex → not capable
+    mixed = build_vector_storage(build, vectors,
+                                 engine_factory=scorescan_factory(policy))
+    key = next(iter(mixed.engines))
+    old = mixed.engines[key]
+    mixed.engines[key] = ExactIndex(old.data, ids=old.ids)
+    from repro.launch.serve import RAGServer
+    mixed_srv = RAGServer(cfg=scan_srv.cfg, params={}, store=mixed)
+    assert not mixed_srv.batched_capable()
+
+
+def test_retrieve_batch_fallback_matches_scorescan(server_pair, policy,
+                                                   vectors):
+    """engine='exact' stores must fall back to per-query coordinated search
+    and return the same authorized neighbours as the scorescan path."""
+    scan_srv, exact_srv = server_pair
+    reqs = _stream(policy, vectors, 10, seed=11, k_lo=8, k_hi=9)
+    qs = np.stack([q for q, _, _ in reqs])
+    roles = [r for _, r, _ in reqs]
+    got_scan = scan_srv.retrieve_batch(qs, roles, k=8)
+    got_exact = exact_srv.retrieve_batch(qs, roles, k=8)
+    for i in range(len(reqs)):
+        assert {v for _, v in got_scan[i]} == {v for _, v in got_exact[i]}
+        np.testing.assert_allclose(
+            np.sort([d for d, _ in got_scan[i]]),
+            np.sort([d for d, _ in got_exact[i]]), rtol=1e-5, atol=1e-5)
+
+
+def test_serve_stream_end_to_end(server_pair, policy, vectors):
+    """RAGServer.serve_stream drives the scheduler through retrieve_batch."""
+    scan_srv, exact_srv = server_pair
+    reqs = _stream(policy, vectors, 16, seed=12)
+    for srv in (scan_srv, exact_srv):
+        stats = ServeStats()
+        results = asyncio.run(srv.serve_stream(reqs, max_batch=8,
+                                               max_wait_ms=2.0,
+                                               serve_stats=stats))
+        assert stats.completed == len(reqs)
+        for (q, role, k), res in zip(reqs, results):
+            ref = coordinated_search(srv.store, q, role, k, efs=50)
+            assert {v for _, v in res} == {v for _, v in ref}
+        # isolation: every result authorized for its role
+        for (q, role, k), res in zip(reqs, results):
+            mask = srv.store.authorized_mask(role)
+            assert all(mask[v] for _, v in res)
