@@ -249,7 +249,7 @@ def exp15_batched_throughput(bc: BenchConfig):
     """
     import dataclasses as dc
     from repro.ann.scorescan import scorescan_factory
-    from repro.core import batched_search
+    from repro.core import Query
     # low lam so the smoke corpus actually forms lattice nodes — with the
     # serving default (400) a 2k corpus is all leftovers, nothing to amortize
     sbc = dc.replace(bc, n_vectors=min(bc.n_vectors, 2000), dim=16,
@@ -265,6 +265,8 @@ def exp15_batched_throughput(bc: BenchConfig):
     idx = np.arange(total) % len(ds.queries)
     qs = np.asarray(ds.queries, np.float32)[idx]
     rs = [int(r) for r in np.asarray(ds.query_roles)[idx]]
+    qobjs = [Query(vector=qs[i], roles=(rs[i],), k=sbc.k)
+             for i in range(total)]
     # repetitions interleaved across batch sizes: a burst of CPU contention
     # lands on every B in that round, and min-of-rounds discards it for all
     sizes = (1, 2, 4, 8, 16, 32)
@@ -273,7 +275,7 @@ def exp15_batched_throughput(bc: BenchConfig):
         for B in sizes:
             t0 = time.perf_counter()
             for lo in range(0, total, B):
-                batched_search(store, qs[lo:lo + B], rs[lo:lo + B], sbc.k)
+                store.search(qobjs[lo:lo + B])
             if rep:                       # round 0 warms the jit caches
                 times[B].append(time.perf_counter() - t0)
     for B in sizes:
@@ -303,7 +305,7 @@ def exp16_continuous_batching(bc: BenchConfig):
     import asyncio
     import dataclasses as dc
     from repro.ann.scorescan import scorescan_factory
-    from repro.core import batched_search
+    from repro.core import Query
     from repro.launch.scheduler import (MicroBatchScheduler, ServeStats,
                                         serve_requests)
     sbc = dc.replace(bc, n_vectors=min(bc.n_vectors, 2000), dim=16,
@@ -318,7 +320,8 @@ def exp16_continuous_batching(bc: BenchConfig):
     idx = np.arange(total) % len(ds.queries)
     qs = np.asarray(ds.queries, np.float32)[idx]
     roles = [int(r) for r in np.asarray(ds.query_roles)[idx]]
-    reqs = [(qs[i], roles[i], sbc.k) for i in range(total)]
+    qobjs = [Query(vector=qs[i], roles=(roles[i],), k=sbc.k)
+             for i in range(total)]
     truths = truth_for(ds, sbc.k)
 
     def rec(results):
@@ -338,8 +341,8 @@ def exp16_continuous_batching(bc: BenchConfig):
         for eng in list(store.engines.values()) + [store.leftover_shard]:
             if eng is not None and len(eng):
                 eng.search_masked_batch(warm[:B], sbc.k, bits, bounds=bounds)
-        batched_search(store, qs[:B], roles[:B], sbc.k, packed=True)
-        batched_search(store, qs[:B], roles[:B], sbc.k, packed=False)
+        store.search(qobjs[:B], packed=True)
+        store.search(qobjs[:B], packed=False)
 
     # --- PR 1 baseline: fixed caller-assembled batches --------------------
     for B in (8, 32):
@@ -347,15 +350,17 @@ def exp16_continuous_batching(bc: BenchConfig):
             t0 = time.perf_counter()
             results = []
             for lo in range(0, total, B):
-                results += batched_search(store, qs[lo:lo + B],
-                                          roles[lo:lo + B], sbc.k,
-                                          packed=packed)
+                results += [r.hits for r in
+                            store.search(qobjs[lo:lo + B], packed=packed)]
             dt = time.perf_counter() - t0
             tag = "packed" if packed else "unpacked"
             emit(f"exp16_fixed/B{B}_{tag}", dt / total * 1e6,
                  f"qps={total / dt:.1f};recall={rec(results):.3f}")
 
     # --- continuous batching through the scheduler ------------------------
+    # min_packed_batch (DEFAULT, calibrated from this experiment's fixed
+    # sweep) sends sub-threshold flushes down the per-block path; the path
+    # counts land in the report so the switch stays observable
     rng = np.random.default_rng(123)
     sweeps = [(None, 32, 2.0), (None, 8, 2.0),        # saturation ceiling
               (200.0, 32, 2.0), (200.0, 32, 20.0)]    # rate × flush policy
@@ -368,7 +373,7 @@ def exp16_continuous_batching(bc: BenchConfig):
             sched = MicroBatchScheduler(store, max_batch=max_batch,
                                         max_wait_ms=wait_ms, stats=stats)
             try:
-                return await serve_requests(sched, reqs, arrival_s=arrival)
+                return await serve_requests(sched, qobjs, arrival_s=arrival)
             finally:
                 await sched.close()
 
@@ -376,10 +381,13 @@ def exp16_continuous_batching(bc: BenchConfig):
         results = asyncio.run(run())
         dt = time.perf_counter() - t0
         tag = "sat" if rate is None else f"r{int(rate)}"
+        packed_n = stats.paths.get("batched+packed", 0)
         emit(f"exp16_cb/{tag}_mb{max_batch}_w{wait_ms:g}",
              dt / total * 1e6,
              f"qps={total / dt:.1f};p50={stats.p50_ms:.1f};"
              f"p99={stats.p99_ms:.1f};avg_batch={stats.avg_batch:.1f};"
+             f"packed_flushes={packed_n};"
+             f"perblock_flushes={stats.paths.get('batched', 0)};"
              f"recall={rec(results):.3f}")
 
 

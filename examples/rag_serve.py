@@ -3,12 +3,14 @@
 Retrieval (EffVEDA lattice + batched execution engine over ScoreScan nodes)
 feeds a generator LM (reduced smollm config) that prefills retrieved passages
 and decodes new tokens — the paper's deployment shape, runnable on CPU.  The
-whole request batch is retrieved in ONE lattice sweep: every lattice node is
-scored by a single ``l2_topk`` launch carrying all queries that touch it,
-with per-query bounds and role masks (DESIGN.md §Batched Execution).  The
-second half streams async requests through the continuous-batching
-scheduler — micro-batches cut on max_batch/max_wait_ms, leftovers scored
-via the packed shard (DESIGN.md §Continuous Batching).
+whole request batch is retrieved in ONE lattice sweep through the unified
+``store.search(queries)`` entry point (DESIGN.md §Query API): every lattice
+node is scored by a single ``l2_topk`` launch carrying all queries that
+touch it, with per-query bounds and role masks (DESIGN.md §Batched
+Execution) — multi-role union queries included.  The second half streams
+typed ``Query`` objects through the continuous-batching scheduler —
+micro-batches cut on max_batch/max_wait_ms, leftovers scored via the packed
+shard only above ``min_packed_batch`` (DESIGN.md §Continuous Batching).
 
     PYTHONPATH=src python examples/rag_serve.py
 """
@@ -43,11 +45,30 @@ print(f"retrieval {out['t_retrieval_s']*1e3:.1f} ms for {batch} requests "
       f"generation {out['t_generate_s']:.1f} s")
 print("isolation verified: every retrieved passage authorized for its role")
 
+# --- the unified entry point: typed queries, multi-role included -----------
+# store.search(queries) is THE retrieval contract (DESIGN.md §Query API):
+# each Query carries its own role set / k / efs, heterogeneous k rides one
+# lattice sweep, and a multi-role query returns the authorized *union*
+# top-k — here a request authorized under two departments at once.
+from repro.core import Query
+
+multi = Query(vector=np.asarray(ds.queries[0], np.float32), roles=(0, 1),
+              k=4, tag="cross-dept")
+single = Query.single(np.asarray(ds.queries[1], np.float32), role=2, k=2)
+res_multi, res_single = server.store.search([multi, single])
+union_mask = ds.policy.authorized_mask(0) | ds.policy.authorized_mask(1)
+assert all(union_mask[v] for _, v in res_multi), "leak!"
+print(f"multi-role query (roles 0+1, path={res_multi.path}): "
+      f"retrieved {res_multi.ids}; single-role rode the same sweep "
+      f"({res_single.ids})")
+
 # --- continuous batching: an async request stream through the scheduler ---
-# Requests arrive as a Poisson process; the MicroBatchScheduler cuts
-# micro-batches on max_batch/max_wait_ms, each flushed through one lattice
-# sweep (packed leftover shard included).  Results are exactly the
-# per-query coordinated-search answers (tests/test_scheduler.py).
+# Requests are Query objects arriving as a Poisson process; the
+# MicroBatchScheduler cuts micro-batches on max_batch/max_wait_ms, each
+# flushed through one store.search call — packed leftover shard only for
+# flushes >= min_packed_batch rows (exp16 calibration), path recorded in
+# ServeStats.  Results are exactly the per-query coordinated-search
+# answers (tests/test_scheduler.py).
 import asyncio
 import time
 
@@ -56,8 +77,8 @@ from repro.launch.scheduler import ServeStats
 n_stream = 32
 rng = np.random.default_rng(1)
 idx = rng.integers(len(ds.queries), size=n_stream)
-requests = [(np.asarray(ds.queries[i], np.float32),
-             int(ds.query_roles[i]), 4) for i in idx]
+requests = [Query(vector=np.asarray(ds.queries[i], np.float32),
+                  roles=(int(ds.query_roles[i]),), k=4) for i in idx]
 serve_stats = ServeStats()
 t0 = time.perf_counter()
 results = asyncio.run(server.serve_stream(
@@ -65,13 +86,14 @@ results = asyncio.run(server.serve_stream(
     arrival_s=list(rng.exponential(0.002, size=n_stream)),
     serve_stats=serve_stats))
 dt = time.perf_counter() - t0
-for (q, role, k), res in zip(requests, results):
-    mask = ds.policy.authorized_mask(role)
+for req, res in zip(requests, results):
+    mask = ds.policy.authorized_mask(req.roles[0])
     assert all(mask[v] for _, v in res), "leak!"
 s = serve_stats.summary()
+paths = ", ".join(f"{p}×{n}" for p, n in sorted(serve_stats.paths.items()))
 print(f"stream: {n_stream} requests in {dt:.2f}s "
       f"({n_stream / dt:.0f} qps) over {s['batches']:.0f} micro-batches "
       f"(avg {s['avg_batch']:.1f}/flush: {s['flush_full']:.0f} full, "
-      f"{s['flush_timeout']:.0f} timeout); "
+      f"{s['flush_timeout']:.0f} timeout; paths {paths}); "
       f"p50 {s['p50_ms']:.0f} ms, p99 {s['p99_ms']:.0f} ms")
 print("isolation verified: every streamed result authorized for its role")

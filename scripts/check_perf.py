@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Hard perf-regression gate over benchmark smoke JSON reports (CI).
+
+Compares a current ``benchmarks.run --json`` report against a committed
+baseline (benchmarks/baselines/*.json) and exits non-zero on regression,
+turning the previously trajectory-only artifacts into a gate:
+
+  * every baseline row must exist in the current report (a silently dropped
+    experiment is a failure, not a pass);
+  * throughput: ``qps >= baseline_qps * (1 - qps_tol)`` — the default band
+    is wide (50%) because interpret-mode wall-clock on shared CI runners is
+    noisy; real regressions (a lost batch path, an accidental O(n) rescan)
+    blow through it, jitter does not;
+  * quality: ``recall >= baseline_recall - recall_tol`` — recall is exact
+    by construction on these paths, so the band is tight;
+  * latency percentiles (p50/p99) are reported but not gated: they are
+    scheduler-timing dependent and too noisy for a hard gate.
+
+Usage:
+  python scripts/check_perf.py --baseline benchmarks/baselines/exp15.json \\
+                               --current bench_exp15.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        report = json.load(f)
+    return {row["name"]: row for row in report["rows"]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--qps-tol", type=float, default=0.5,
+                    help="relative QPS tolerance band (default 0.5: fail "
+                         "below 50%% of baseline)")
+    ap.add_argument("--recall-tol", type=float, default=0.02,
+                    help="absolute recall tolerance band")
+    args = ap.parse_args()
+
+    base = load_rows(args.baseline)
+    cur = load_rows(args.current)
+    failures = []
+    print(f"{'row':44s} {'metric':7s} {'baseline':>10s} {'current':>10s} "
+          f"{'floor':>10s} verdict")
+    for name, brow in sorted(base.items()):
+        crow = cur.get(name)
+        if crow is None:
+            failures.append(f"{name}: missing from current report")
+            print(f"{name:44s} {'-':7s} {'-':>10s} {'-':>10s} {'-':>10s} "
+                  f"MISSING")
+            continue
+        checks = []
+        if "qps" in brow:
+            floor = brow["qps"] * (1.0 - args.qps_tol)
+            checks.append(("qps", brow["qps"], crow.get("qps", 0.0), floor))
+        if "recall" in brow:
+            floor = brow["recall"] - args.recall_tol
+            checks.append(("recall", brow["recall"],
+                           crow.get("recall", 0.0), floor))
+        for metric, b, c, floor in checks:
+            ok = c >= floor
+            print(f"{name:44s} {metric:7s} {b:10.3f} {c:10.3f} "
+                  f"{floor:10.3f} {'ok' if ok else 'REGRESSION'}")
+            if not ok:
+                failures.append(
+                    f"{name}: {metric} {c:.3f} < floor {floor:.3f} "
+                    f"(baseline {b:.3f})")
+    if failures:
+        print(f"\nPERF GATE FAILED ({len(failures)} regressions):",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"\nperf gate passed: {len(base)} baseline rows within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,6 +59,7 @@ class HNSWIndex:
         self.entry: int = -1
         self.max_level: int = -1
         self._distance_computations = 0
+        self.tombstoned: set = set()        # external ids marked deleted
         for i in range(len(data)):
             self._insert(i)
 
@@ -202,10 +203,36 @@ class HNSWIndex:
             ep = self._greedy_step(q, ep, l)
         return ep
 
+    # ------------------------------------------------- MutableEngine (App. I)
+    def insert(self, vid: int, vec: np.ndarray) -> None:
+        """Incremental insert of one vector with external id ``vid``.
+
+        Re-inserting an id that is already linked (a tombstoned vector being
+        re-granted) only clears its tombstone mark — the graph keeps the
+        original row.
+        """
+        vid = int(vid)
+        if np.any(self.ids == vid):
+            self.tombstoned.discard(vid)
+            return
+        self.data = np.vstack([self.data,
+                               np.asarray(vec, np.float32)[None]])
+        self.ids = np.append(self.ids, np.int64(vid))
+        self.levels = np.append(self.levels, 0)
+        self.tombstoned.discard(vid)
+        self._insert(len(self.data) - 1)
+
+    def tombstone(self, vid: int) -> None:
+        """Mark external id ``vid`` deleted: the row stays in the graph (it
+        still routes the beam) but ``search`` filters it from results."""
+        self.tombstoned.add(int(vid))
+
     def search(self, q: np.ndarray, k: int, efs: int) -> List[Tuple[float, np.int64]]:
         """Standard top-k: returns [(dist, external_id)] sorted ascending."""
         res, _ = self.begin_search(q, max(efs, k))
-        return [(d, self.ids[i]) for d, i in res[:k]]
+        out = [(d, self.ids[i]) for d, i in res
+               if int(self.ids[i]) not in self.tombstoned]
+        return out[:k]
 
     def begin_search(self, q: np.ndarray, efs: int
                      ) -> Tuple[List[Tuple[float, int]], SearchState]:

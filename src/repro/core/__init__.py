@@ -6,8 +6,11 @@ Public API:
   HNSWCostModel / ScanCostModel      — Def 2.2 + App. B calibration
   build_veda / build_effveda         — §4 / §5 optimizers → BuildResult
   build_vector_storage               — physical engines per node
-  coordinated_search / independent_search / routed_search — §6.2
-  batched_search                     — batch-amortized Alg. 7 (DESIGN.md)
+  Query / SearchResult / Engine protocols — the typed retrieval contract
+                                       (DESIGN.md §Query API)
+  VectorStore.search(queries)        — THE retrieval entry point
+  coordinated_search / independent_search / routed_search — §6.2 reference
+  batched_search                     — deprecated shim over store.search
   metrics                            — SA / QA / recall / purity
 """
 from .policy import AccessPolicy, generate_policy
@@ -16,11 +19,14 @@ from .costmodel import HNSWCostModel, ScanCostModel, calibrate
 from .queryplan import Plan, build_all_plans, greedy_plan, plan_cost, avg_cost
 from .veda import BuildResult, VedaBuilder, build_veda
 from .effveda import EffVedaBuilder, build_effveda
+from .api import (DEFAULT_MIN_PACKED_BATCH, BatchEngine, Engine,
+                  MaskedEngine, MutableEngine, Query, ResumableEngine,
+                  SearchResult, SearchStats, supports_batch)
 from .store import (VectorStore, build_vector_storage, build_oracle_store,
                     hnsw_factory, exact_factory)
-from .coordinated import (SearchStats, coordinated_search, independent_search,
+from .coordinated import (coordinated_search, independent_search,
                           global_filtered_search, routed_search)
-from .batched import BatchTopK, batched_search
+from .batched import BatchTopK, batched_search, execute_queries
 from .dynamic import DynamicStore
 from . import metrics
 
@@ -30,10 +36,13 @@ __all__ = [
     "Plan", "build_all_plans", "greedy_plan", "plan_cost", "avg_cost",
     "BuildResult", "VedaBuilder", "build_veda",
     "EffVedaBuilder", "build_effveda",
+    "Query", "SearchResult", "SearchStats",
+    "Engine", "ResumableEngine", "MaskedEngine", "BatchEngine",
+    "MutableEngine", "supports_batch", "DEFAULT_MIN_PACKED_BATCH",
     "VectorStore", "build_vector_storage", "build_oracle_store",
     "hnsw_factory", "exact_factory",
-    "SearchStats", "coordinated_search", "independent_search",
+    "coordinated_search", "independent_search",
     "global_filtered_search", "routed_search", "metrics",
-    "BatchTopK", "batched_search",
+    "BatchTopK", "batched_search", "execute_queries",
     "DynamicStore",
 ]

@@ -4,38 +4,46 @@
 ``coordinated_scan_search`` serves one query at a time: a Python loop walks
 the role's plan and every ``l2_topk`` launch carries a single query row even
 though the kernel is tiled for a (B, d) batch.  This module amortizes the
-lattice traversal across a batch of ``(query, role)`` pairs:
+lattice traversal across a batch of typed :class:`~repro.core.api.Query`
+objects (``execute_queries`` — the engine behind ``VectorStore.search``):
 
-  1. take the union of the per-role plans and invert it — for every lattice
-     node (and leftover block), collect the batch rows whose plan touches it;
+  1. build each query's plan cover (single-role plan, or the deduped union
+     of per-role plans for multi-role queries) and invert it — for every
+     lattice node (and leftover block), collect the batch rows whose plan
+     touches it;
   2. scan leftover blocks once per block for all touching rows — or, when
-     the store carries a packed leftover shard, score *all* leftovers for
+     the packed leftover shard is selected, score *all* leftovers for
      the whole batch in one ``l2_topk`` launch — seeding the vectorized
      per-query top-k;
-  3. visit nodes that are *pure* for a row first (their results need no
-     post-filter and tighten that row's bound fastest), then impure / distant
-     nodes, each node issuing **one** ``l2_topk`` call whose query batch
-     carries a per-query ``bound`` vector (current k-th distances) and a
-     per-query ``role_mask`` vector;
+  3. visit nodes that are *pure* for a row first (purity judged against the
+     row's multi-role authorized mask; their results need no post-filter and
+     tighten that row's bound fastest), then impure / distant nodes, each
+     node issuing **one** ``l2_topk`` call whose query batch carries a
+     per-query ``bound`` vector (each row's own k-th distance — heterogeneous
+     k is native, not max-k truncation) and a per-query ``role_mask`` vector
+     (the OR of the row's role bits);
   4. merge every launch's (B', k) result block into the running (B, k)
      top-k with pure-numpy row operations.  Scoring and merging carry no
-     Python per-query loop; only impure-node bookkeeping (per-row stats
-     and the exact-mask post-filter) iterates over rows.
+     Python per-query loop; only per-row bookkeeping (stats and the
+     exact-mask post-filter) iterates over rows.
 
 Result parity: bound-based skipping is *sound* (a node is only skipped when
 its centroid-radius lower bound proves it cannot improve that row's top-k),
 so the returned (dist, id) sets are identical to per-query coordinated
 search for any visit schedule; only the schedule-dependent skip counters in
 :class:`SearchStats` may differ (see tests/test_batched.py).
+
+``batched_search`` survives as a deprecation shim over ``execute_queries``.
 """
 from __future__ import annotations
 
+import warnings
 from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .coordinated import SearchStats
+from .api import Query, SearchResult, SearchStats, roles_bitmask
 from .queryplan import Plan
 from .store import VectorStore
 
@@ -48,18 +56,24 @@ class BatchTopK:
     Maintains (B, k) distance/id arrays sorted ascending by (dist, id) per
     row, with +inf / -1 padding.  Duplicate ids within a row (a vector copied
     into several lattice nodes) keep their smallest distance, mirroring the
-    ``_TopK`` seen-set of the sequential engine.
+    ``_TopK`` seen-set of the sequential engine.  ``ks`` optionally gives
+    each row its own k <= k: the buffer is k wide for everyone, but
+    :meth:`kth` reports each row's *own* k-th distance, so bound-based
+    pruning stays as tight as a homogeneous batch at that row's k.
     """
 
-    def __init__(self, b: int, k: int):
+    def __init__(self, b: int, k: int, ks: Optional[np.ndarray] = None):
         self.k = k
+        self.ks = (np.full(b, k, dtype=np.int64) if ks is None
+                   else np.minimum(np.asarray(ks, dtype=np.int64), k))
         self.dists = np.full((b, k), _INF, dtype=np.float32)
         self.ids = np.full((b, k), -1, dtype=np.int64)
 
     def kth(self, rows: Optional[np.ndarray] = None) -> np.ndarray:
-        """Current k-th distance per row (+inf while a row holds < k)."""
-        d = self.dists if rows is None else self.dists[rows]
-        return d[:, self.k - 1].copy()
+        """Current per-row k-th distance (+inf while a row holds < its k)."""
+        if rows is None:
+            rows = np.arange(len(self.dists))
+        return self.dists[rows, self.ks[rows] - 1].copy()
 
     def push_rows(self, rows: np.ndarray, new_d: np.ndarray,
                   new_i: np.ndarray) -> None:
@@ -101,7 +115,7 @@ class BatchTopK:
 
 def _scan_leftovers_batched(store: VectorStore, queries: np.ndarray,
                             plans: Sequence[Plan], topk: BatchTopK,
-                            stats: SearchStats) -> None:
+                            stats_rows: Sequence[SearchStats]) -> None:
     """One pass per leftover block shared by every batch row touching it."""
     block_rows: Dict[int, List[int]] = defaultdict(list)
     for qi, plan in enumerate(plans):
@@ -113,14 +127,16 @@ def _scan_leftovers_batched(store: VectorStore, queries: np.ndarray,
         vecs = store.leftover_vectors.get(b)
         if vecs is None or not len(vecs):
             continue
-        rows = np.asarray(rows)
         ids = store.leftover_ids[b]
         # same diff-based form as the sequential scan (exact fp parity)
         diff = vecs[None, :, :] - queries[rows][:, None, :]
         d = np.einsum("mnd,mnd->mn", diff, diff)
-        stats.leftover_vectors_scanned += len(vecs) * len(rows)
-        stats.data_touched += len(vecs) * len(rows)
-        stats.data_authorized_touched += len(vecs) * len(rows)
+        for qi in rows:
+            st = stats_rows[qi]
+            st.leftover_vectors_scanned += len(vecs)
+            st.data_touched += len(vecs)
+            st.data_authorized_touched += len(vecs)
+        rows = np.asarray(rows)
         m = min(topk.k, d.shape[1])
         part = np.argpartition(d, m - 1, axis=1)[:, :m] if m < d.shape[1] \
             else np.broadcast_to(np.arange(d.shape[1]), d.shape).copy()
@@ -129,101 +145,123 @@ def _scan_leftovers_batched(store: VectorStore, queries: np.ndarray,
 
 
 def _filter_unauthorized(d: np.ndarray, ids: np.ndarray, rows: np.ndarray,
-                         roles: Sequence[int], masks: Dict) -> None:
+                         row_masks: Sequence[np.ndarray]) -> None:
     """In-place exact-mask post-filter on kernel results (the authorization
-    ground truth: role bits alias at 32 roles, the mask never does)."""
+    ground truth: role bits alias at 32 roles, the mask never does).  For a
+    multi-role row the mask is the authorized *union*."""
     for j, qi in enumerate(rows):
-        ok = (ids[j] >= 0) & masks[roles[qi]][np.maximum(ids[j], 0)]
+        ok = (ids[j] >= 0) & row_masks[qi][np.maximum(ids[j], 0)]
         d[j] = np.where(ok, d[j], _INF)
         ids[j] = np.where(ok, ids[j], -1)
 
 
 def _scan_leftovers_packed(store: VectorStore, queries: np.ndarray,
-                           plans: Sequence[Plan], roles: Sequence[int],
-                           masks: Dict, role_bits: np.ndarray,
-                           topk: BatchTopK, stats: SearchStats) -> None:
+                           plans: Sequence[Plan],
+                           row_masks: Sequence[np.ndarray],
+                           role_bits: np.ndarray, topk: BatchTopK,
+                           stats_rows: Sequence[SearchStats],
+                           shard) -> None:
     """Single ``l2_topk`` launch over the packed leftover shard for every
     row whose plan has leftover blocks (DESIGN.md §Continuous Batching).
 
     The shard's per-vector auth bits carry each block's role combination, so
     each row's in-kernel role filter admits exactly its authorized leftover
-    vectors.  The kernel may also surface authorized leftover blocks *not*
-    in the row's plan — those blocks are covered by plan nodes (plan cover
-    property), so the same vectors arrive via the node waves and the merged
-    top-k is unchanged.  Stats stay logical and schedule-independent: each
+    vectors (the OR of the row's role bits for multi-role queries).  The
+    kernel may also surface authorized leftover blocks *not* in the row's
+    plan — those blocks are covered by plan nodes (plan cover property), so
+    the same vectors arrive via the node waves and the merged top-k is
+    unchanged.  Stats stay logical and schedule-independent: each
     (row, plan-block) visit is accounted once, exactly like the per-block
     scan path, regardless of what the shard physically touches.
     """
-    shard = store.leftover_shard
     rows: List[int] = []
     for qi, plan in enumerate(plans):
         blocks = dict.fromkeys(plan.leftover_blocks)
         if not blocks:
             continue
         rows.append(qi)
+        st = stats_rows[qi]
         for b in blocks:
             m = len(store.leftover_vectors.get(b, ()))
-            stats.leftover_vectors_scanned += m
-            stats.data_touched += m
-            stats.data_authorized_touched += m
+            st.leftover_vectors_scanned += m
+            st.data_touched += m
+            st.data_authorized_touched += m
     if not rows:
         return
     rows = np.asarray(rows)
     d, ids = shard.search_masked_batch(queries[rows], topk.k, role_bits[rows])
     # defense in depth against role-bit aliasing (the shard is only built
     # for n_roles <= 32, where bits are exact)
-    _filter_unauthorized(d, ids, rows, roles, masks)
+    _filter_unauthorized(d, ids, rows, row_masks)
     topk.push_rows(rows, d, ids)
 
 
-def batched_search(store: VectorStore, queries: np.ndarray,
-                   roles: Sequence[int], k: int,
-                   stats: Optional[SearchStats] = None,
-                   packed: Optional[bool] = None
-                   ) -> List[List[Tuple[float, int]]]:
-    """Coordinated search for a batch of (query, role) pairs (Alg. 7,
-    batch-amortized).  Requires ScoreScan-style engines exposing
-    ``search_masked_batch`` / ``lower_bounds``.
+def execute_queries(store: VectorStore, queries: Sequence[Query], *,
+                    packed: Optional[bool] = None,
+                    min_packed_batch: int = 1) -> List[SearchResult]:
+    """Coordinated search for a batch of typed queries (Alg. 7,
+    batch-amortized) — the batched arm of ``VectorStore.search``.  Requires
+    every node engine to be a :class:`~repro.core.api.BatchEngine`.
+
+    Heterogeneous ``k`` is native: the top-k buffer is max-k wide but each
+    row's pruning bound uses its own k-th distance, and each result is cut
+    to its query's k.  Multi-role rows carry the OR of their role bits
+    in-kernel and are post-filtered against the exact authorized-union mask.
 
     ``packed`` selects the leftover strategy: ``True`` scans the packed
     leftover shard (built on demand) in one kernel launch, ``False`` scans
     per block, ``None`` (default) uses the shard iff the store already has
-    one (``store.pack_leftover_shard()``).
+    one (``store.pack_leftover_shard()``) *and* the batch has at least
+    ``min_packed_batch`` rows.
 
-    Returns one sorted (dist, id) list per batch row — the same value
-    ``coordinated_scan_search(store, queries[i], roles[i], k)`` produces.
+    Returns one :class:`SearchResult` per query — hits identical to
+    ``coordinated_scan_search(store, q.vector, q.roles, q.k)``.
     """
-    stats = stats if stats is not None else SearchStats()
-    queries = np.ascontiguousarray(queries, dtype=np.float32)
-    roles = [int(r) for r in roles]
     b = len(queries)
-    assert len(roles) == b, (b, len(roles))
-    plans = [store.plans[r] for r in roles]
-    masks = {r: store.authorized_mask(r) for r in set(roles)}
-    role_bits = np.array([np.uint32(1 << (r % 32)) for r in roles], np.uint32)
+    qs = np.ascontiguousarray(
+        np.stack([q.vector for q in queries]), dtype=np.float32)
+    ks = np.asarray([q.k for q in queries], dtype=np.int64)
+    kmax = int(ks.max())
+    role_sets = [q.roles for q in queries]
+    plans = [store.plan_for_roles(t) for t in role_sets]
+    mask_cache: Dict[Tuple[int, ...], np.ndarray] = {}
+    for t in role_sets:
+        if t not in mask_cache:
+            mask_cache[t] = (store.authorized_mask(t[0]) if len(t) == 1
+                             else store.authorized_mask_multi(t))
+    row_masks = [mask_cache[t] for t in role_sets]
+    role_bits = np.array([roles_bitmask(t) for t in role_sets], np.uint32)
+    stats_rows = [SearchStats() for _ in range(b)]
 
-    topk = BatchTopK(b, k)
-    shard = store.pack_leftover_shard() if packed else store.leftover_shard
-    if shard is not None and packed is not False:
-        _scan_leftovers_packed(store, queries, plans, roles, masks,
-                               role_bits, topk, stats)
+    topk = BatchTopK(b, kmax, ks=ks)
+    if packed is True:
+        shard = store.pack_leftover_shard()
+    elif packed is None and b >= min_packed_batch:
+        shard = store.leftover_shard
     else:
-        _scan_leftovers_batched(store, queries, plans, topk, stats)
+        shard = None
+    path = "batched+packed" if shard is not None else "batched"
+    if shard is not None:
+        _scan_leftovers_packed(store, qs, plans, row_masks, role_bits,
+                               topk, stats_rows, shard)
+    else:
+        _scan_leftovers_batched(store, qs, plans, topk, stats_rows)
 
-    # invert plans: node -> rows, split per (row, node) purity
+    # invert plans: node -> rows, split per (row, node) purity against the
+    # row's (multi-role) authorized mask
     pure_rows: Dict = defaultdict(list)
     impure_rows: Dict = defaultdict(list)
-    sizes_cache: Dict = {}           # (key, role) -> (total, auth)
-    for qi, (plan, r) in enumerate(zip(plans, roles)):
+    sizes_cache: Dict = {}           # (key, role set) -> (total, auth)
+    for qi, (plan, t) in enumerate(zip(plans, role_sets)):
         for key in plan.nodes:
             if key not in store.engines:
                 continue
-            if (key, r) not in sizes_cache:
-                sizes_cache[(key, r)] = store.node_total_and_auth(
-                    key, masks[r])
-            total, auth = sizes_cache[(key, r)]
+            if (key, t) not in sizes_cache:
+                sizes_cache[(key, t)] = store.node_total_and_auth(
+                    key, row_masks[qi])
+            total, auth = sizes_cache[(key, t)]
             (pure_rows if auth == total else impure_rows)[key].append(qi)
-            stats.indices_visited += 1
+            stats_rows[qi].indices_visited += 1
 
     def _wave(groups: Dict, impure: bool) -> None:
         # nearest-first across the batch: tightening close rows' bounds early
@@ -232,36 +270,64 @@ def batched_search(store: VectorStore, queries: np.ndarray,
         for key, rows in groups.items():
             eng = store.engines[key]
             rows = np.asarray(rows)
-            lbs = eng.lower_bounds(queries[rows])
+            lbs = eng.lower_bounds(qs[rows])
             keyed.append((float(lbs.min()), key, rows, lbs))
         keyed.sort(key=lambda t: t[0])
         for _, key, rows, lbs in keyed:
             eng = store.engines[key]
-            if impure:
-                for qi in rows:
-                    total, auth = sizes_cache[(key, roles[qi])]
-                    stats.data_touched += total
-                    stats.data_authorized_touched += auth
-                stats.impure_visits += len(rows)
-            else:
-                stats.data_touched += len(eng) * len(rows)
-                stats.data_authorized_touched += len(eng) * len(rows)
+            for qi in rows:
+                st = stats_rows[qi]
+                if impure:
+                    total, auth = sizes_cache[(key, role_sets[qi])]
+                    st.impure_visits += 1
+                else:
+                    total = auth = len(eng)
+                st.data_touched += total
+                st.data_authorized_touched += auth
             kth = topk.kth(rows)
             active = lbs <= kth
-            n_skip = int((~active).sum())
-            stats.phase2_skipped += n_skip
-            if not impure:
-                stats.impure_visits += n_skip   # bound-skip opportunities
+            for qi in rows[~active]:
+                stats_rows[qi].phase2_skipped += 1
+                if not impure:
+                    stats_rows[qi].impure_visits += 1  # bound-skip opportunity
             if not active.any():
                 continue
             act = rows[active]
-            d, ids = eng.search_masked_batch(queries[act], k,
+            d, ids = eng.search_masked_batch(qs[act], kmax,
                                              role_bits[act],
                                              bounds=kth[active])
             if impure:
-                _filter_unauthorized(d, ids, act, roles, masks)
+                _filter_unauthorized(d, ids, act, row_masks)
             topk.push_rows(act, d, ids)
 
     _wave(pure_rows, impure=False)
     _wave(impure_rows, impure=True)
-    return topk.items()
+    items = topk.items()
+    return [SearchResult(hits=items[i][:int(ks[i])], stats=stats_rows[i],
+                         path=path)
+            for i in range(b)]
+
+
+def batched_search(store: VectorStore, queries: np.ndarray,
+                   roles: Sequence[int], k: int,
+                   stats: Optional[SearchStats] = None,
+                   packed: Optional[bool] = None
+                   ) -> List[List[Tuple[float, int]]]:
+    """Deprecated positional batch API — use ``store.search([Query, ...])``.
+
+    Kept as a thin shim: builds one single-role :class:`Query` per row and
+    runs :func:`execute_queries` with the legacy leftover semantics
+    (``packed=None`` means "shard iff already built", no batch-size
+    threshold).  Merges per-row stats into ``stats`` and returns bare
+    per-row hit lists, exactly like PR 1/2.
+    """
+    warnings.warn("batched_search(store, queries, roles, k) is deprecated; "
+                  "use store.search([Query(...), ...])",
+                  DeprecationWarning, stacklevel=2)
+    qlist = [Query(vector=q, roles=(int(r),), k=int(k))
+             for q, r in zip(np.asarray(queries, np.float32), roles)]
+    results = execute_queries(store, qlist, packed=packed, min_packed_batch=1)
+    if stats is not None:
+        for res in results:
+            stats.merge(res.stats)
+    return [res.hits for res in results]

@@ -11,54 +11,25 @@ Order of operations (Algorithm 7):
 
 ``independent_search`` is the baseline (Algorithm 16): every impure index is
 searched with fully inflated k' = ceil(lambda*k), efs' = ceil(lambda*efs).
+
+These are the reference per-query algorithms; the serving entry point is
+``VectorStore.search(queries)`` (core/store.py), which falls back to
+:func:`coordinated_search` whenever a store's engines cannot take the
+batched path.  :class:`SearchStats` lives in core/api.py and is re-exported
+here for backward compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .api import SearchStats
 from .policy import Role
 from .queryplan import Plan
 from .store import VectorStore
-
-
-@dataclasses.dataclass
-class SearchStats:
-    """Per-query accounting used by Exp 9 (skip rate, efs savings)."""
-
-    impure_visits: int = 0
-    phase2_skipped: int = 0
-    efs_used: float = 0.0
-    efs_worst_case: float = 0.0
-    indices_visited: int = 0
-    leftover_vectors_scanned: int = 0
-    data_touched: int = 0
-    data_authorized_touched: int = 0
-
-    def merge(self, o: "SearchStats") -> None:
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, getattr(self, f.name) + getattr(o, f.name))
-
-    @property
-    def skip_rate(self) -> float:
-        return (self.phase2_skipped / self.impure_visits
-                if self.impure_visits else 1.0)
-
-    @property
-    def efs_savings(self) -> float:
-        if self.efs_worst_case <= 0:
-            return 0.0
-        return 1.0 - self.efs_used / self.efs_worst_case
-
-    @property
-    def purity(self) -> float:
-        if self.data_touched == 0:
-            return 1.0
-        return self.data_authorized_touched / self.data_touched
 
 
 class _TopK:
@@ -255,19 +226,6 @@ def routed_search(store: VectorStore, x: np.ndarray, roles: Sequence[Role],
 
 
 def _union_plan(store: VectorStore, roles: Sequence[Role]) -> Plan:
-    nodes: List = []
-    seen = set()
-    left: set = set()
-    covered_blocks: set = set()
-    for r in roles:
-        p = store.plans[r]
-        for nk in p.nodes:
-            if nk not in seen:
-                seen.add(nk)
-                nodes.append(nk)
-        left |= set(p.leftover_blocks)
-    # drop leftover blocks already covered by a selected node
-    for nk in nodes:
-        covered_blocks |= store.lattice.nodes[nk].blocks
-    left -= covered_blocks
-    return Plan(nodes=tuple(nodes), leftover_blocks=tuple(sorted(left)))
+    """Multi-role plan cover; the implementation (node/leftover dedup with
+    node-covered leftovers dropped) lives on the store and is cached there."""
+    return store.plan_for_roles(tuple(int(r) for r in roles))

@@ -10,21 +10,32 @@ block. Updates touch only Φ(block):
   grant/revoke(v, r)  — move v between blocks tau → tau∪{r} / tau∖{r};
                         only the symmetric difference of containers changes.
 
-Engines: ExactIndex/ScoreScan rebuild their (small) node arrays on change;
-HNSW uses native incremental insert + tombstones (delete marks, filtered at
-query). Correctness (every authorized vector reachable; no leaks) is
-preserved immediately; *optimality* drifts and is restored lazily — when a
-node's size or impurity drifts past ``slack``, re-run copy/merge locally
-(here: flag the node for rebuild; full EffVEDA re-run on large policy
-changes per Appendix I).
+Engines: capability-checked against the :mod:`repro.core.api` protocols —
+:class:`MutableEngine` (HNSW) grows in place via native incremental insert
+and marks deletes with ``tombstone``; everything else (ExactIndex /
+ScoreScan) rebuilds its (small) node arrays, with per-vector auth bits
+recomputed for :class:`MaskedEngine` rebuilds.  Queries route through the
+unified entry point ``store.search`` — so ScoreScan-backed dynamic stores
+take the batched kernel path — with a tombstone-aware over-fetch: ``k`` is
+padded only by tombstones *authorized for the querying role set* (an
+out-of-role delete can never surface in this plan cover, so it costs
+nothing), and tombstoned ids are filtered from the result.
+
+Correctness (every authorized vector reachable; no leaks) is preserved
+immediately; *optimality* drifts and is restored lazily — when a node's
+size or impurity drifts past ``slack``, re-run copy/merge locally (here:
+flag the node for rebuild; full EffVEDA re-run on large policy changes per
+Appendix I).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from .api import (MaskedEngine, MutableEngine, Query, SearchResult,
+                  roles_bitmask)
 from .policy import AccessPolicy, Role, RoleSet
 from .queryplan import Plan, build_all_plans
 from .store import VectorStore
@@ -52,6 +63,9 @@ class DynamicStore:
                 self.vec_block[int(v)] = b
         self.data: List[np.ndarray] = [row for row in store.data]
         self.tombstones: Set[int] = set()
+        # role combination each tombstoned vector carried when deleted:
+        # the over-fetch pad intersects these with the querying role set
+        self.tombstone_roles: Dict[int, RoleSet] = {}
         self.dirty_nodes: Set = set()
         self._base_sizes = {key: len(store.engines[key].ids)
                             for key in store.engines}
@@ -95,44 +109,73 @@ class DynamicStore:
         self.store.leftover_ids[b] = ids[keep]
         self.store.leftover_vectors[b] = self.store.leftover_vectors[b][keep]
 
+    def _engine_with(self, eng, vid: int, vec: np.ndarray, tau: RoleSet):
+        """Rebuild a non-mutable engine with one extra row.  MaskedEngine
+        rebuilds carry per-vector auth bits: existing rows keep theirs, the
+        new row's bits come from its role combination ``tau``."""
+        data = np.vstack([eng.data, vec[None]])
+        ids = np.append(eng.ids, np.int64(vid))
+        if isinstance(eng, MaskedEngine):
+            auth = np.append(eng.auth_bits,
+                             roles_bitmask(tau)).astype(np.uint32)
+            return type(eng)(data, ids=ids, auth_bits=auth,
+                             config=eng.config)
+        return type(eng)(data, ids=ids)
+
+    def _engine_without(self, eng, vid: int):
+        """Rebuild a non-mutable engine with row ``vid`` physically removed
+        (grants/revocations: a stale copy in a container of the *old* block
+        would otherwise surface for the revoked role via pure-node searches,
+        which skip the exact-mask post-filter)."""
+        keep = eng.ids != np.int64(vid)
+        if isinstance(eng, MaskedEngine):
+            return type(eng)(eng.data[keep], ids=eng.ids[keep],
+                             auth_bits=eng.auth_bits[keep].astype(np.uint32),
+                             config=eng.config)
+        return type(eng)(eng.data[keep], ids=eng.ids[keep])
+
+    def _sync_policy(self, with_roles: bool = True) -> None:
+        kw = dict(block_members=tuple(np.asarray(m, np.int64)
+                                      for m in self.block_members))
+        if with_roles:
+            kw["block_roles"] = tuple(self.block_roles)
+        self.store.policy = dataclasses.replace(self.store.policy, **kw)
+        self.store.lattice.policy = self.store.policy
+        self.store.lattice.block_sizes = self.store.policy.block_sizes
+        # masks, multi-role plan covers, and the packed leftover shard all
+        # derive from the state just mutated
+        self.store.invalidate_caches()
+
     # ------------------------------------------------------------ operations
     def insert(self, vec: np.ndarray, tau: RoleSet) -> int:
         vid = len(self.data)
         vec = np.asarray(vec, np.float32)
         self.data.append(vec)
         self.store.data = np.vstack([self.store.data, vec[None]])
-        self.store._auth_cache.clear()
-        b = self._block_key(frozenset(tau))
+        tau = frozenset(tau)
+        b = self._block_key(tau)
         self.block_members[b].append(vid)
         self.vec_block[vid] = b
         nodes, in_left = self._containers(b)
         for key in nodes:
             eng = self.store.engines[key]
-            if hasattr(eng, "_insert"):            # HNSW native incremental
-                eng.data = np.vstack([eng.data, vec[None]])
-                eng.ids = np.append(eng.ids, vid)
-                eng.levels = np.append(eng.levels, 0)
-                eng._insert(len(eng.data) - 1)
-            else:                                   # exact/scan: rebuild
-                ids = np.append(eng.ids, vid)
-                self.store.engines[key] = type(eng)(
-                    np.vstack([eng.data, vec[None]]), ids=ids)
+            if isinstance(eng, MutableEngine):     # HNSW native incremental
+                eng.insert(vid, vec)
+            else:                                  # exact/scan: rebuild
+                self.store.engines[key] = self._engine_with(eng, vid, vec,
+                                                            tau)
             self.dirty_nodes.add(key)
         if in_left or not nodes:
             self._append_leftover(b, vid, vec)
         # membership bookkeeping for impurity/purity checks
-        self.store.policy = dataclasses.replace(
-            self.store.policy,
-            block_roles=tuple(self.block_roles),
-            block_members=tuple(np.asarray(m, np.int64)
-                                for m in self.block_members))
-        self.store.lattice.policy = self.store.policy
-        self.store.lattice.block_sizes = self.store.policy.block_sizes
+        self._sync_policy()
         return vid
 
     def delete(self, vid: int) -> None:
-        self.tombstones.add(int(vid))
-        b = self.vec_block[int(vid)]
+        vid = int(vid)
+        self.tombstones.add(vid)
+        b = self.vec_block[vid]
+        self.tombstone_roles[vid] = self.block_roles[b]
         self.block_members[b] = [v for v in self.block_members[b]
                                  if v != vid]
         nodes, in_left = self._containers(b)
@@ -140,14 +183,12 @@ class DynamicStore:
             self._drop_leftover(b, vid)
         # engines keep the row; queries filter tombstones (cheap), nodes
         # marked dirty for lazy re-optimization
+        for key in nodes:
+            eng = self.store.engines[key]
+            if isinstance(eng, MutableEngine):
+                eng.tombstone(vid)
         self.dirty_nodes.update(nodes)
-        self.store.policy = dataclasses.replace(
-            self.store.policy,
-            block_members=tuple(np.asarray(m, np.int64)
-                                for m in self.block_members))
-        self.store.lattice.policy = self.store.policy
-        self.store.lattice.block_sizes = self.store.policy.block_sizes
-        self.store._auth_cache.clear()
+        self._sync_policy(with_roles=False)
 
     def grant(self, vid: int, r: Role) -> None:
         self._move(vid, lambda tau: frozenset(tau | {r}))
@@ -156,46 +197,89 @@ class DynamicStore:
         self._move(vid, lambda tau: frozenset(tau - {r}))
 
     def _move(self, vid: int, fn) -> None:
-        vec = self.data[int(vid)]
-        old_tau = self.block_roles[self.vec_block[int(vid)]]
+        vid = int(vid)
+        vec = self.data[vid]
+        old_tau = self.block_roles[self.vec_block[vid]]
         new_tau = fn(old_tau)
         if new_tau == old_tau:
             return
         assert new_tau, "revoking the last role would orphan the vector"
-        self.delete(int(vid))
-        self.tombstones.discard(int(vid))
+        old_nodes, _ = self._containers(self.vec_block[vid])
+        self.delete(vid)
+        self.tombstones.discard(vid)
+        self.tombstone_roles.pop(vid, None)
         # re-insert under the new combination, reusing the same id
         b = self._block_key(new_tau)
-        self.block_members[b].append(int(vid))
-        self.vec_block[int(vid)] = b
+        self.block_members[b].append(vid)
+        self.vec_block[vid] = b
         nodes, in_left = self._containers(b)
         for key in nodes:
             eng = self.store.engines[key]
-            if int(vid) not in set(int(i) for i in eng.ids):
-                ids = np.append(eng.ids, int(vid))
-                self.store.engines[key] = type(eng)(
-                    np.vstack([eng.data, vec[None]]), ids=ids)
+            if isinstance(eng, MutableEngine):
+                eng.insert(vid, vec)       # clears the tombstone mark too
+            elif vid in set(int(i) for i in eng.ids):
+                # old and new block share this container: refresh the row's
+                # auth bits in place so the in-kernel filter tracks new_tau
+                if isinstance(eng, MaskedEngine):
+                    eng.auth_bits[eng.ids == np.int64(vid)] = \
+                        roles_bitmask(new_tau)
+            else:
+                self.store.engines[key] = self._engine_with(eng, vid, vec,
+                                                            new_tau)
+            self.dirty_nodes.add(key)
+        # purge the stale copy from old-block containers that do not hold
+        # the new block: the moved vector is no longer a member there, so a
+        # pure-node search (no post-filter) would leak it under old_tau
+        # (MutableEngines were tombstoned by delete() above instead)
+        for key in old_nodes:
+            if key in nodes:
+                continue
+            eng = self.store.engines[key]
+            if not isinstance(eng, MutableEngine) \
+                    and vid in set(int(i) for i in eng.ids):
+                self.store.engines[key] = self._engine_without(eng, vid)
             self.dirty_nodes.add(key)
         if in_left or not nodes:
-            self._append_leftover(b, int(vid), vec)
-        self.store.policy = dataclasses.replace(
-            self.store.policy,
-            block_roles=tuple(self.block_roles),
-            block_members=tuple(np.asarray(m, np.int64)
-                                for m in self.block_members))
-        self.store.lattice.policy = self.store.policy
-        self.store.lattice.block_sizes = self.store.policy.block_sizes
-        self.store._auth_cache.clear()
+            self._append_leftover(b, vid, vec)
+        self._sync_policy()
 
     # ---------------------------------------------------------------- search
-    def search(self, x: np.ndarray, role: Role, k: Optional[int] = None,
-               efs: int = 50):
-        from .coordinated import coordinated_search
-        k = k or self.k
-        res = coordinated_search(self.store, x, role, k + len(self.tombstones),
-                                 efs)
-        out = [(d, v) for d, v in res if v not in self.tombstones][:k]
-        return out
+    def tombstone_pad(self, roles: Sequence[Role]) -> int:
+        """How many tombstoned vectors could still surface for this role
+        set: only those whose role combination at deletion time intersects
+        ``roles`` — an out-of-role delete is invisible to this plan cover,
+        so it must not inflate k (the former global ``len(tombstones)``
+        pad over-fetched for every unrelated delete)."""
+        if not self.tombstones:
+            return 0
+        want = set(int(r) for r in roles)
+        pad = 0
+        for t in self.tombstones:
+            tau = self.tombstone_roles.get(t)
+            if tau is None or (tau & want):
+                pad += 1
+        return pad
+
+    def search(self, x: np.ndarray, role: Optional[Role] = None,
+               k: Optional[int] = None, efs: int = 50,
+               roles: Optional[Sequence[Role]] = None
+               ) -> List[Tuple[float, int]]:
+        """Authorized top-k through the unified entry point: builds a
+        :class:`Query` (single- or multi-role) with tombstone-aware
+        over-fetch and filters tombstoned ids from the result.  ScoreScan
+        stores take the batched kernel path, exact/HNSW stores the
+        per-query coordinated path — same as any static store."""
+        k = int(k or self.k)
+        if roles is None:
+            assert role is not None, "search needs a role or a roles set"
+            roles = (int(role),)
+        else:
+            roles = tuple(int(r) for r in roles)
+        pad = self.tombstone_pad(roles)
+        res = self.store.search(
+            [Query(vector=x, roles=roles, k=k + pad, efs=efs)])[0]
+        return [(d, v) for d, v in res.hits
+                if v not in self.tombstones][:k]
 
     # --------------------------------------------------------- lazy re-optim
     def needs_reoptimization(self) -> List:

@@ -4,6 +4,13 @@
 node plus packed leftover arrays, and retains the per-role query plans.  The
 engine is pluggable: the paper-faithful numpy HNSW, the exact scan oracle, or
 the TPU ScoreScan engine (kernels/l2_topk through ann/exact host fallback).
+
+``VectorStore.search(queries)`` is the single retrieval entry point
+(DESIGN.md §Query API): it builds a plan cover for each query's role set,
+routes the batch through the batched lattice engine when every node engine
+is a :class:`~repro.core.api.BatchEngine`, and falls back to per-query
+coordinated search otherwise.  All serving layers (RAGServer,
+MicroBatchScheduler, DynamicStore) are thin wrappers over it.
 """
 from __future__ import annotations
 
@@ -14,6 +21,8 @@ import numpy as np
 
 from ..ann.exact import ExactIndex
 from ..ann.hnsw import HNSWIndex
+from .api import (DEFAULT_MIN_PACKED_BATCH, Query, QueryLike, SearchResult,
+                  SearchStats, as_queries, supports_batch)
 from .lattice import Lattice, NodeKey
 from .policy import AccessPolicy, Role
 from .queryplan import Plan
@@ -44,6 +53,8 @@ class VectorStore:
     global_engine: Optional[object] = None         # Exp-14 fallback / Baseline1
     leftover_shard: Optional[object] = None        # packed ScoreScan leftovers
     _auth_cache: Dict[Role, np.ndarray] = dataclasses.field(default_factory=dict)
+    _plan_cache: Dict[Tuple[Role, ...], Plan] = dataclasses.field(
+        default_factory=dict)
 
     def authorized_mask(self, r: Role) -> np.ndarray:
         if r not in self._auth_cache:
@@ -55,6 +66,84 @@ class VectorStore:
         for r in roles:
             mask |= self.authorized_mask(r)
         return mask
+
+    def invalidate_caches(self) -> None:
+        """Drop every derived structure that depends on policy/plan/leftover
+        state — dynamic stores (Appendix I) call this after each mutation.
+        The packed leftover shard is included: it is rebuilt on demand."""
+        self._auth_cache.clear()
+        self._plan_cache.clear()
+        self.leftover_shard = None
+
+    # ------------------------------------------------------------ query plans
+    def plan_for_roles(self, roles: Sequence[Role]) -> Plan:
+        """Plan cover for a role set: the single-role plan as built, or the
+        cached union of per-role plans (node dedup; leftover blocks already
+        covered by a selected node are dropped) for multi-role queries."""
+        roles = tuple(dict.fromkeys(int(r) for r in roles))
+        assert roles, "a plan cover needs at least one role"
+        if len(roles) == 1:
+            return self.plans[roles[0]]
+        key = tuple(sorted(roles))
+        if key not in self._plan_cache:
+            nodes: List[NodeKey] = []
+            seen = set()
+            left: set = set()
+            for r in key:
+                p = self.plans[r]
+                for nk in p.nodes:
+                    if nk not in seen:
+                        seen.add(nk)
+                        nodes.append(nk)
+                left |= set(p.leftover_blocks)
+            covered: set = set()
+            for nk in nodes:
+                covered |= self.lattice.nodes[nk].blocks
+            self._plan_cache[key] = Plan(
+                nodes=tuple(nodes), leftover_blocks=tuple(sorted(left - covered)))
+        return self._plan_cache[key]
+
+    # ----------------------------------------------------------- entry point
+    def batched_capable(self) -> bool:
+        """Whether retrieval can take the batched engine: every node engine
+        is a :class:`~repro.core.api.BatchEngine` (leftover-only stores
+        qualify — their sweep is batch-amortized too)."""
+        return supports_batch(self.engines.values())
+
+    def search(self, queries: QueryLike, *,
+               packed: Optional[bool] = None,
+               min_packed_batch: int = DEFAULT_MIN_PACKED_BATCH
+               ) -> List[SearchResult]:
+        """THE retrieval entry point: authorized top-k for a query batch.
+
+        Each :class:`Query` may carry one role or several (union semantics);
+        a plan cover is built per role set.  When every node engine supports
+        the batch kernel path the whole batch executes in one lattice sweep
+        with heterogeneous per-query ``k`` threaded through (each row's
+        pruning bound uses its *own* k-th distance, not the batch max);
+        otherwise each query runs per-query coordinated search with its own
+        ``efs``.  ``packed``/``min_packed_batch`` select the leftover
+        strategy for the batched path (DESIGN.md §Continuous Batching):
+        ``True`` forces the packed shard, ``False`` the per-block scans, and
+        ``None`` uses the shard iff it is built and the batch has at least
+        ``min_packed_batch`` rows (exp16 calibration).
+        """
+        queries = as_queries(queries)
+        if not queries:
+            return []
+        if self.batched_capable():
+            from .batched import execute_queries
+            return execute_queries(self, queries, packed=packed,
+                                   min_packed_batch=min_packed_batch)
+        from .coordinated import coordinated_search
+        out = []
+        for q in queries:
+            stats = SearchStats()
+            hits = coordinated_search(
+                self, q.vector, q.roles[0], q.k, q.efs, stats=stats,
+                roles=q.roles if len(q.roles) > 1 else None)
+            out.append(SearchResult(hits=hits, stats=stats, path="sequential"))
+        return out
 
     def node_total_and_auth(self, key: NodeKey, mask: np.ndarray
                             ) -> Tuple[int, int]:

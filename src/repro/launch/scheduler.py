@@ -1,23 +1,28 @@
-"""Continuous-batching scheduler over the batched lattice engine.
+"""Continuous-batching scheduler over the unified retrieval entry point.
 
 PR 1's serving path takes fixed, caller-assembled batches: whoever calls
 ``RAGServer.retrieve_batch`` decides the batch boundaries, so a trickle of
 requests runs at B=1 and a burst waits for the whole burst to assemble.
 This module adds the missing layer between callers and the engine:
 
-  * :class:`MicroBatchScheduler` — an async request queue.  ``submit(query,
-    role, k)`` returns a future immediately; a flusher coroutine cuts
-    micro-batches whenever ``max_batch`` requests are waiting **or** the
-    oldest request has waited ``max_wait_ms`` (continuous batching: each
-    flush takes whatever arrived, so batch sizes track the arrival process).
-  * Each micro-batch runs through one ``batched_search`` call — one lattice
-    sweep, one ``l2_topk`` launch per touched node, one packed-leftover
-    launch — and per-request ``k`` is honored by searching ``max(k)`` and
-    truncating each row's sorted result (exact: a top-k prefix of a
-    top-k' list, k <= k', is the true top-k).
+  * :class:`MicroBatchScheduler` — an async request queue of typed
+    :class:`~repro.core.Query` objects.  ``submit(Query(...))`` returns a
+    future immediately; a flusher coroutine cuts micro-batches whenever
+    ``max_batch`` requests are waiting **or** the oldest request has waited
+    ``max_wait_ms`` (continuous batching: each flush takes whatever arrived,
+    so batch sizes track the arrival process).  Because the queue holds
+    full ``Query`` objects, every request carries its own ``k``, ``efs``,
+    role set (multi-role queries included), and priority/tag metadata —
+    per-request efs works today, priority scheduling can land later.
+  * Each micro-batch runs through one ``store.search(queries)`` call — the
+    batched lattice engine when every node engine supports it (heterogeneous
+    k threaded through natively), per-query coordinated search otherwise.
+    ``min_packed_batch`` gates the packed leftover shard: flushes smaller
+    than the threshold take the per-block path (exp16 calibration), and
+    :class:`ServeStats` records which path each flush ran.
   * :class:`ServeStats` — per-request queue/latency samples (p50/p99),
-    flush-reason counts, batch-size and queue-depth tracking, plus the
-    merged :class:`SearchStats` of every micro-batch.
+    flush-reason counts, leftover-path counts, batch-size and queue-depth
+    tracking, plus the merged :class:`SearchStats` of every micro-batch.
 
 Fairness: the queue is FIFO across roles.  A micro-batch freely mixes
 roles — the batched engine unions their plans, so co-scheduled roles share
@@ -33,11 +38,13 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from ..core import SearchStats, batched_search
+from ..core import (DEFAULT_MIN_PACKED_BATCH, Query, SearchResult,
+                    SearchStats)
 
 
 @dataclasses.dataclass
@@ -56,6 +63,12 @@ class ServeStats:
     queue_ms: List[float] = dataclasses.field(default_factory=list)
     latency_ms: List[float] = dataclasses.field(default_factory=list)
     search: SearchStats = dataclasses.field(default_factory=SearchStats)
+    # execution-path counts per flush: "batched+packed" / "batched" /
+    # "sequential" (which leftover strategy / engine arm served the batch)
+    paths: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def record_path(self, path: str) -> None:
+        self.paths[path] = self.paths.get(path, 0) + 1
 
     @property
     def avg_batch(self) -> float:
@@ -76,7 +89,7 @@ class ServeStats:
         return self.latency_percentile(99)
 
     def summary(self) -> Dict[str, float]:
-        return {
+        out = {
             "submitted": self.submitted, "completed": self.completed,
             "batches": self.batches_flushed, "avg_batch": self.avg_batch,
             "batch_max": self.batch_size_max,
@@ -86,37 +99,40 @@ class ServeStats:
             "queue_depth_peak": self.queue_depth_peak,
             "p50_ms": self.p50_ms, "p99_ms": self.p99_ms,
         }
+        for path, n in sorted(self.paths.items()):
+            out[f"path_{path}"] = n
+        return out
 
 
 @dataclasses.dataclass
 class _Request:
-    query: np.ndarray
-    role: int
-    k: int
+    query: Query
     t_submit: float
     future: "asyncio.Future"
 
 
-# search_fn(store, queries (B, d), roles (B,), k, stats) -> per-row results
-SearchFn = Callable[..., List[List[Tuple[float, int]]]]
+# search_fn(store, queries: Sequence[Query]) -> List[SearchResult]
+SearchFn = Callable[..., List[SearchResult]]
 
 
 class MicroBatchScheduler:
     """Async continuous-batching front end for a vector store.
 
     ``submit`` never blocks: it enqueues and returns an ``asyncio.Future``
-    resolved with that request's sorted authorized ``[(dist, id), ...]``.
-    The flusher coroutine (started lazily on first submit) owns batch
-    cutting; each micro-batch's search runs on the default executor thread,
-    so the event loop keeps accepting submissions *while a batch executes* —
-    the backlog that accumulates during one search becomes the next flush's
-    batch, which is what makes the batch size track the arrival rate.
-    Micro-batches execute one at a time (no search overlap), so
-    ``stats.search`` merging stays race-free.
+    resolved with that request's :class:`SearchResult` (sorted authorized
+    hits + per-query stats).  The flusher coroutine (started lazily on first
+    submit) owns batch cutting; each micro-batch's search runs on the
+    default executor thread, so the event loop keeps accepting submissions
+    *while a batch executes* — the backlog that accumulates during one
+    search becomes the next flush's batch, which is what makes the batch
+    size track the arrival rate.  Micro-batches execute one at a time (no
+    search overlap), so ``stats.search`` merging stays race-free.
     """
 
     def __init__(self, store, *, max_batch: int = 32,
                  max_wait_ms: float = 2.0, default_k: int = 10,
+                 default_efs: int = 50,
+                 min_packed_batch: int = DEFAULT_MIN_PACKED_BATCH,
                  search_fn: Optional[SearchFn] = None,
                  stats: Optional[ServeStats] = None,
                  clock: Callable[[], float] = time.perf_counter):
@@ -125,7 +141,9 @@ class MicroBatchScheduler:
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
         self.default_k = int(default_k)
-        self.search_fn = search_fn or batched_search
+        self.default_efs = int(default_efs)
+        self.min_packed_batch = int(min_packed_batch)
+        self.search_fn = search_fn
         self.stats = stats if stats is not None else ServeStats()
         self._clock = clock
         self._queue: List[_Request] = []
@@ -136,14 +154,25 @@ class MicroBatchScheduler:
         self._busy = False
 
     # ------------------------------------------------------------ submission
-    def submit(self, query: np.ndarray, role: int,
+    def submit(self, query: Union[Query, np.ndarray],
+               role: Optional[int] = None,
                k: Optional[int] = None) -> "asyncio.Future":
-        """Enqueue one request; the returned future resolves to its top-k."""
+        """Enqueue one :class:`Query`; the future resolves to its result.
+
+        The legacy positional form ``submit(vector, role, k)`` survives as a
+        deprecation shim that wraps the arguments in a single-role Query.
+        """
         assert not self._closed, "scheduler is closed"
+        if not isinstance(query, Query):
+            warnings.warn("submit(vector, role, k) is deprecated; pass a "
+                          "repro.core.Query", DeprecationWarning,
+                          stacklevel=2)
+            query = Query(vector=query, roles=(int(role),),
+                          k=int(k if k is not None else self.default_k),
+                          efs=self.default_efs)
         loop = asyncio.get_running_loop()
-        req = _Request(query=np.asarray(query, np.float32), role=int(role),
-                       k=int(k if k is not None else self.default_k),
-                       t_submit=self._clock(), future=loop.create_future())
+        req = _Request(query=query, t_submit=self._clock(),
+                       future=loop.create_future())
         self._queue.append(req)
         self.stats.submitted += 1
         self.stats.queue_depth_peak = max(self.stats.queue_depth_peak,
@@ -206,6 +235,12 @@ class MicroBatchScheduler:
                 await self._flush(reason)
             await asyncio.sleep(0)       # let submitters run between flushes
 
+    def _search(self, queries: Sequence[Query]) -> List[SearchResult]:
+        if self.search_fn is not None:
+            return self.search_fn(self.store, queries)
+        return self.store.search(queries,
+                                 min_packed_batch=self.min_packed_batch)
+
     async def _flush(self, reason: str) -> None:
         batch, self._queue = (self._queue[:self.max_batch],
                               self._queue[self.max_batch:])
@@ -219,13 +254,10 @@ class MicroBatchScheduler:
         error: Optional[Exception] = None
         results: List = []
         try:
-            k = max(r.k for r in batch)
-            qs = np.stack([r.query for r in batch]).astype(np.float32)
-            roles = [r.role for r in batch]
+            qlist = [r.query for r in batch]
             loop = asyncio.get_running_loop()
             results = await loop.run_in_executor(
-                None, lambda: self.search_fn(self.store, qs, roles, k,
-                                             stats=st.search))
+                None, lambda: self._search(qlist))
         except Exception as e:         # propagate to callers, keep serving
             error = e
         finally:
@@ -237,6 +269,10 @@ class MicroBatchScheduler:
         st.batch_size_sum += len(batch)
         st.batch_size_max = max(st.batch_size_max, len(batch))
         setattr(st, f"flush_{reason}", getattr(st, f"flush_{reason}") + 1)
+        if error is None and results and isinstance(results[0], SearchResult):
+            st.record_path(results[0].path)
+            for res in results:
+                st.search.merge(res.stats)
         for i, r in enumerate(batch):
             st.latency_ms.append((t1 - r.t_submit) * 1e3)
             if r.future.done():          # caller may have been cancelled
@@ -245,27 +281,35 @@ class MicroBatchScheduler:
                 r.future.set_exception(error)
             else:
                 st.completed += 1
-                r.future.set_result(results[i][:r.k])
+                r.future.set_result(results[i])
+
+
+RequestLike = Union[Query, Tuple[np.ndarray, int, int]]
 
 
 async def serve_requests(scheduler: MicroBatchScheduler,
-                         requests: Sequence[Tuple[np.ndarray, int, int]],
+                         requests: Sequence[RequestLike],
                          arrival_s: Optional[Sequence[float]] = None
-                         ) -> List[List[Tuple[float, int]]]:
+                         ) -> List[SearchResult]:
     """Submit a request stream and gather results in submission order.
 
-    ``requests`` is a sequence of ``(query, role, k)``; ``arrival_s``
+    ``requests`` is a sequence of :class:`Query` objects — or legacy
+    ``(vector, role, k)`` tuples, normalized here — and ``arrival_s``
     optionally gives each request's inter-arrival delay (an open-loop
     arrival process — exp16 uses exponential gaps).  Omitted, the whole
     stream is submitted back-to-back (closed-loop saturation).
     """
     futures = []
     try:
-        for i, (q, role, k) in enumerate(requests):
+        for i, req in enumerate(requests):
             if (arrival_s is not None and i < len(arrival_s)
                     and arrival_s[i] > 0):
                 await asyncio.sleep(arrival_s[i])
-            futures.append(scheduler.submit(q, role, k))
+            if not isinstance(req, Query):
+                q, role, k = req
+                req = Query(vector=q, roles=(int(role),), k=int(k),
+                            efs=scheduler.default_efs)
+            futures.append(scheduler.submit(req))
         return list(await asyncio.gather(*futures))
     finally:
         # drain even when a request failed: resolves queued futures and

@@ -20,9 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_smoke_config
-from ..core import (HNSWCostModel, batched_search, build_effveda,
-                    build_vector_storage, coordinated_search, exact_factory,
-                    SearchStats)
+from ..core import (HNSWCostModel, Query, build_effveda,
+                    build_vector_storage, exact_factory, SearchStats)
 from ..data import make_retrieval_dataset
 from ..models.config import ModelConfig
 from ..models.model import init_params, prefill_fn, decode_fn, init_cache
@@ -56,52 +55,51 @@ class RAGServer:
 
     def batched_capable(self) -> bool:
         """Whether retrieval can take the batched engine (every node engine
-        exposes the batch kernel path; leftover-only stores qualify — their
-        sweep is batch-amortized too)."""
-        return all(hasattr(e, "search_masked_batch")
-                   for e in self.store.engines.values())
+        is a :class:`~repro.core.BatchEngine`; leftover-only stores qualify —
+        their sweep is batch-amortized too)."""
+        return self.store.batched_capable()
 
     def retrieve_batch(self, queries: np.ndarray, roles: Sequence[int],
                        k: int, efs: int = 50,
                        stats: Optional[SearchStats] = None
                        ) -> List[List[Tuple[float, int]]]:
-        """Top-k authorized retrieval for the whole request batch.
-
-        ScoreScan stores take the batched engine (one lattice sweep, one
-        kernel launch per node for all touching queries); other engine types
-        fall back to per-query coordinated search.
+        """Top-k authorized retrieval for the whole request batch — a thin
+        wrapper that builds one single-role :class:`Query` per row and runs
+        ``store.search`` (the batched lattice engine when every node engine
+        supports it, per-query coordinated search otherwise).
         """
-        if self.batched_capable():
-            return batched_search(self.store, np.asarray(queries, np.float32),
-                                  [int(r) for r in roles], k, stats=stats)
-        return [coordinated_search(self.store, q, int(r), k, efs, stats=stats)
-                for q, r in zip(queries, roles)]
+        qlist = [Query(vector=q, roles=(int(r),), k=int(k), efs=int(efs))
+                 for q, r in zip(np.asarray(queries, np.float32), roles)]
+        results = self.store.search(qlist)
+        if stats is not None:
+            for res in results:
+                stats.merge(res.stats)
+        return [res.hits for res in results]
 
-    async def serve_stream(self, requests: Sequence[Tuple],
+    async def serve_stream(self, requests: Sequence,
                            max_batch: int = 16, max_wait_ms: float = 2.0,
                            arrival_s: Optional[Sequence[float]] = None,
-                           serve_stats: Optional["ServeStats"] = None
-                           ) -> List[List[Tuple[float, int]]]:
+                           serve_stats: Optional["ServeStats"] = None,
+                           min_packed_batch: Optional[int] = None):
         """Continuous-batching retrieval for an async request stream.
 
-        ``requests`` is a sequence of ``(query, role, k)``.  Each request is
-        submitted to a :class:`MicroBatchScheduler` (optionally paced by
-        ``arrival_s`` inter-arrival gaps); the scheduler cuts micro-batches
-        on ``max_batch``/``max_wait_ms`` and routes each through
-        :meth:`retrieve_batch` — the batched engine when the store supports
-        it (with the packed leftover shard if built), per-query coordinated
-        search otherwise.  Returns per-request sorted authorized (dist, id)
-        lists in submission order; latency/queue/flush accounting lands in
-        ``serve_stats``.
+        ``requests`` is a sequence of :class:`Query` objects (or legacy
+        ``(vector, role, k)`` tuples).  Each request is submitted to a
+        :class:`MicroBatchScheduler` (optionally paced by ``arrival_s``
+        inter-arrival gaps); the scheduler cuts micro-batches on
+        ``max_batch``/``max_wait_ms`` and routes each through
+        ``store.search`` — with the packed leftover shard only for flushes
+        of at least ``min_packed_batch`` rows.  Returns per-request
+        :class:`~repro.core.SearchResult`\\ s in submission order;
+        latency/queue/flush/path accounting lands in ``serve_stats``.
         """
         from .scheduler import MicroBatchScheduler, serve_requests
 
-        def _search(store, qs, roles, k, stats=None):
-            return self.retrieve_batch(qs, roles, k, stats=stats)
-
+        kw = {} if min_packed_batch is None else {
+            "min_packed_batch": int(min_packed_batch)}
         sched = MicroBatchScheduler(self.store, max_batch=max_batch,
                                     max_wait_ms=max_wait_ms,
-                                    search_fn=_search, stats=serve_stats)
+                                    stats=serve_stats, **kw)
         try:
             return await serve_requests(sched, requests, arrival_s=arrival_s)
         finally:

@@ -1,0 +1,315 @@
+"""Unified retrieval API (core/api.py + VectorStore.search, DESIGN.md
+§Query API): typed Query/SearchResult, Engine protocol capability checks,
+the single entry point across batched and sequential arms, heterogeneous
+per-query k, the min_packed_batch threshold, multi-role union-semantics
+parity vs merged per-role oracle searches (ISSUE acceptance: pure-only,
+impure-heavy, and leftover-only stores, batched and per-query modes), and
+the deprecation shims."""
+import dataclasses as dc
+
+import numpy as np
+import pytest
+
+from repro.ann.exact import ExactIndex
+from repro.ann.hnsw import HNSWIndex
+from repro.ann.scorescan import ScoreScanIndex, scorescan_factory
+from repro.core import (BatchEngine, Engine, HNSWCostModel, Lattice,
+                        MaskedEngine, MutableEngine, Query, ResumableEngine,
+                        SearchResult, SearchStats, batched_search,
+                        build_effveda, build_oracle_store,
+                        build_vector_storage, exact_factory, generate_policy,
+                        supports_batch)
+from repro.core.queryplan import build_all_plans
+from repro.core.veda import BuildResult
+
+
+# ------------------------------------------------------------------ fixtures
+@pytest.fixture(scope="module")
+def policy():
+    return generate_policy(n_vectors=1800, n_roles=8, n_permissions=20,
+                           seed=2)
+
+
+@pytest.fixture(scope="module")
+def vectors(policy):
+    rng = np.random.default_rng(0)
+    return rng.standard_normal((policy.n_vectors, 16)).astype(np.float32)
+
+
+def _store(policy, vectors, engine, kind):
+    """Build one of the three lattice shapes the acceptance criteria name."""
+    if kind == "pure_only":
+        # unmerged exclusive lattice: every node pure, zero leftovers
+        lat = Lattice.exclusive(policy)
+        cm = HNSWCostModel(lam_threshold=100)
+        res = BuildResult(lattice=lat, leftovers=frozenset(),
+                          plans=build_all_plans(lat, cm, 10), stats={})
+    elif kind == "impure_heavy":
+        res = build_effveda(policy, HNSWCostModel(lam_threshold=100),
+                            beta=1.1, k=10)
+    elif kind == "leftover_only":
+        # lam above every block size: nothing indexable, all leftovers
+        res = build_effveda(policy, HNSWCostModel(lam_threshold=10**6),
+                            beta=1.1, k=10)
+    factory = (scorescan_factory(policy) if engine == "scorescan"
+               else exact_factory())
+    return build_vector_storage(res, vectors, engine_factory=factory)
+
+
+STORE_KINDS = ("pure_only", "impure_heavy", "leftover_only")
+
+
+@pytest.fixture(scope="module")
+def stores(policy, vectors):
+    return {(kind, eng): _store(policy, vectors, eng, kind)
+            for kind in STORE_KINDS for eng in ("scorescan", "exact")}
+
+
+@pytest.fixture(scope="module")
+def oracle(policy, vectors):
+    """Per-role oracle indexes (Baseline 2): exact search over D(r)."""
+    return build_oracle_store(policy, vectors, engine_factory=exact_factory())
+
+
+def _merged_oracle_topk(oracle, roles, x, k):
+    """The ISSUE's reference: merge per-role oracle searches — dedup by id
+    keeping the smallest distance — and cut to the union top-k."""
+    best = {}
+    for r in roles:
+        for d, vid in oracle[r].search(x, k, efs=0):
+            vid = int(vid)
+            if vid not in best or d < best[vid]:
+                best[vid] = float(d)
+    return sorted(((d, v) for v, d in best.items()))[:k]
+
+
+def _check(got, want):
+    assert {v for _, v in got} == {v for _, v in want}
+    np.testing.assert_allclose(np.sort([d for d, _ in got]),
+                               np.sort([d for d, _ in want]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- Query dataclass
+def test_query_normalizes_roles_and_vector():
+    q = Query(vector=[1.0, 2.0], roles=3)
+    assert q.roles == (3,) and q.vector.dtype == np.float32
+    q = Query(vector=np.zeros(4), roles=(2, 5, 2, 1))
+    assert q.roles == (1, 2, 5)          # dedup + canonical (sorted) order
+    q = Query.single(np.zeros(4), role=np.int64(7), k=3)
+    assert q.roles == (7,) and q.k == 3
+    with pytest.raises(AssertionError):
+        Query(vector=np.zeros(4), roles=())
+
+
+# ------------------------------------------------------- protocol capability
+def test_engine_protocol_capabilities(policy, vectors):
+    rng = np.random.default_rng(1)
+    data = rng.standard_normal((30, 8)).astype(np.float32)
+    exact = ExactIndex(data)
+    hnsw = HNSWIndex(data, M=4, efc=20)
+    scan = scorescan_factory(policy)(vectors[:30],
+                                     np.arange(30, dtype=np.int64))
+    for eng in (exact, hnsw, scan):
+        assert isinstance(eng, Engine)
+        assert isinstance(eng, ResumableEngine)
+    assert isinstance(scan, MaskedEngine) and isinstance(scan, BatchEngine)
+    assert not isinstance(exact, BatchEngine)
+    assert isinstance(hnsw, MutableEngine)
+    assert not isinstance(exact, MutableEngine)
+    assert supports_batch([scan]) and not supports_batch([scan, exact])
+    assert supports_batch([])            # leftover-only stores qualify
+
+
+def test_store_batched_capable_and_path(stores):
+    scan = stores[("impure_heavy", "scorescan")]
+    exact = stores[("impure_heavy", "exact")]
+    assert scan.batched_capable() and not exact.batched_capable()
+    q = Query(vector=np.zeros(16, np.float32), roles=(0,), k=5)
+    assert scan.search([q])[0].path == "batched"
+    assert exact.search([q])[0].path == "sequential"
+    assert scan.search([]) == []
+    single = scan.search(q)              # bare Query accepted
+    assert isinstance(single, list) and isinstance(single[0], SearchResult)
+
+
+# ------------------------------------------- single entry point, single-role
+@pytest.mark.parametrize("kind", STORE_KINDS)
+@pytest.mark.parametrize("engine", ["scorescan", "exact"])
+def test_single_role_parity_vs_oracle(stores, oracle, policy, vectors,
+                                      kind, engine):
+    store = stores[(kind, engine)]
+    rng = np.random.default_rng(3)
+    for i in range(8):
+        r = int(rng.integers(policy.n_roles))
+        x = vectors[int(rng.integers(len(vectors)))] + 0.01
+        res = store.search([Query(vector=x, roles=(r,), k=10, efs=400)])[0]
+        _check(res.hits, _merged_oracle_topk(oracle, [r], x, 10))
+        mask = store.authorized_mask(r)
+        assert all(mask[v] for _, v in res.hits)
+
+
+# -------------------------------------------------- multi-role union queries
+@pytest.mark.parametrize("kind", STORE_KINDS)
+@pytest.mark.parametrize("engine", ["scorescan", "exact"])
+def test_multi_role_union_parity(stores, oracle, policy, vectors, kind,
+                                 engine):
+    """ISSUE acceptance: multi-role queries return the exact
+    authorized-union top-k — parity vs merging per-role oracle searches —
+    on pure-only, impure-heavy, and leftover-only stores, in both batched
+    (scorescan) and per-query (exact) modes."""
+    store = stores[(kind, engine)]
+    rng = np.random.default_rng(4)
+    queries, refs = [], []
+    for i in range(10):
+        nr = int(rng.integers(2, 5))
+        roles = tuple(int(r) for r in
+                      rng.choice(policy.n_roles, size=nr, replace=False))
+        x = vectors[int(rng.integers(len(vectors)))] + 0.01
+        queries.append(Query(vector=x, roles=roles, k=10, efs=400))
+        refs.append(_merged_oracle_topk(oracle, roles, x, 10))
+    results = store.search(queries)
+    for q, res, want in zip(queries, results, refs):
+        _check(res.hits, want)
+        mask = store.authorized_mask_multi(q.roles)
+        assert all(mask[v] for _, v in res.hits)
+        # leftover-only stores have no node engines, so even exact-built
+        # ones qualify for the (batch-amortized) leftover sweep
+        assert res.path == ("batched" if store.batched_capable()
+                            else "sequential")
+
+
+def test_multi_role_packed_shard_parity(stores, oracle, policy, vectors):
+    """Multi-role rows ride the packed leftover shard too (OR'd role bits),
+    with identical results."""
+    store = dc.replace(stores[("impure_heavy", "scorescan")],
+                       leftover_shard=None)
+    assert store.pack_leftover_shard() is not None
+    rng = np.random.default_rng(5)
+    queries = []
+    for _ in range(16):
+        roles = tuple(int(r) for r in
+                      rng.choice(policy.n_roles, size=2, replace=False))
+        x = vectors[int(rng.integers(len(vectors)))] + 0.01
+        queries.append(Query(vector=x, roles=roles, k=8))
+    packed = store.search(queries, packed=True)
+    unpacked = store.search(queries, packed=False)
+    for q, p, u in zip(queries, packed, unpacked):
+        assert p.path == "batched+packed" and u.path == "batched"
+        _check(p.hits, u.hits)
+        _check(p.hits, _merged_oracle_topk(oracle, q.roles, x=q.vector, k=8))
+
+
+def test_multi_role_mixed_with_single_role_batch(stores, oracle, policy,
+                                                 vectors):
+    """One batch freely mixes single- and multi-role queries."""
+    store = stores[("impure_heavy", "scorescan")]
+    rng = np.random.default_rng(6)
+    queries = []
+    for i in range(12):
+        if i % 2:
+            roles = (int(rng.integers(policy.n_roles)),)
+        else:
+            roles = tuple(int(r) for r in
+                          rng.choice(policy.n_roles, size=3, replace=False))
+        x = vectors[int(rng.integers(len(vectors)))] + 0.01
+        queries.append(Query(vector=x, roles=roles, k=6))
+    for q, res in zip(queries, store.search(queries)):
+        _check(res.hits, _merged_oracle_topk(oracle, q.roles, q.vector, 6))
+
+
+# ---------------------------------------------------------- heterogeneous k
+def test_heterogeneous_k_native_in_batched_path(stores, oracle, policy,
+                                                vectors):
+    """Per-query k is threaded through the batched engine (each row's bound
+    uses its own k-th distance), not max-k truncation at a scheduler."""
+    store = stores[("impure_heavy", "scorescan")]
+    rng = np.random.default_rng(7)
+    queries = []
+    for _ in range(10):
+        r = int(rng.integers(policy.n_roles))
+        x = vectors[int(rng.integers(len(vectors)))] + 0.01
+        queries.append(Query(vector=x, roles=(r,),
+                             k=int(rng.integers(1, 15))))
+    for q, res in zip(queries, store.search(queries)):
+        assert len(res.hits) <= q.k
+        _check(res.hits, _merged_oracle_topk(oracle, q.roles, q.vector, q.k))
+
+
+def test_per_query_stats_sum_to_sequential(stores, policy, vectors):
+    """SearchResult carries per-query stats whose schedule-independent
+    counters sum to the per-query sequential accounting."""
+    from repro.ann.scorescan import coordinated_scan_search
+    store = stores[("impure_heavy", "scorescan")]
+    rng = np.random.default_rng(8)
+    queries = [Query(vector=vectors[int(rng.integers(len(vectors)))] + 0.01,
+                     roles=(int(rng.integers(policy.n_roles)),), k=10)
+               for _ in range(12)]
+    results = store.search(queries)
+    sstats = SearchStats()
+    for q in queries:
+        coordinated_scan_search(store, q.vector, q.roles[0], q.k,
+                                stats=sstats)
+    merged = SearchStats()
+    for res in results:
+        merged.merge(res.stats)
+    for field in ("indices_visited", "leftover_vectors_scanned",
+                  "data_touched", "data_authorized_touched"):
+        assert getattr(merged, field) == getattr(sstats, field), field
+
+
+# ------------------------------------------------------- min_packed_batch
+def test_min_packed_batch_threshold(stores, policy, vectors):
+    store = dc.replace(stores[("impure_heavy", "scorescan")],
+                       leftover_shard=None)
+    assert store.pack_leftover_shard() is not None
+    rng = np.random.default_rng(9)
+    mk = lambda n: [Query(vector=vectors[int(rng.integers(len(vectors)))],
+                          roles=(int(rng.integers(policy.n_roles)),), k=5)
+                    for _ in range(n)]
+    # below the threshold: per-block path even though the shard exists
+    assert store.search(mk(4), min_packed_batch=8)[0].path == "batched"
+    # at/above: shard path
+    assert store.search(mk(8), min_packed_batch=8)[0].path \
+        == "batched+packed"
+    # packed=True forces the shard regardless of batch size
+    assert store.search(mk(2), packed=True,
+                        min_packed_batch=8)[0].path == "batched+packed"
+    # packed=False forces per-block
+    assert store.search(mk(32), packed=False)[0].path == "batched"
+
+
+# ----------------------------------------------------------- deprecation shims
+def test_batched_search_shim_warns_and_matches(stores, policy, vectors):
+    store = stores[("impure_heavy", "scorescan")]
+    rng = np.random.default_rng(10)
+    qs = vectors[rng.integers(len(vectors), size=6)] + 0.01
+    roles = [int(r) for r in rng.integers(policy.n_roles, size=6)]
+    stats = SearchStats()
+    with pytest.warns(DeprecationWarning, match="batched_search"):
+        legacy = batched_search(store, qs, roles, 10, stats=stats)
+    new = store.search([Query(vector=q, roles=(r,), k=10)
+                        for q, r in zip(qs, roles)])
+    for old_hits, res in zip(legacy, new):
+        _check(old_hits, res.hits)
+    assert stats.data_touched == sum(r.stats.data_touched for r in new)
+
+
+def test_retrieve_batch_wrapper_matches_store_search(stores, policy,
+                                                     vectors):
+    """RAGServer.retrieve_batch is a thin wrapper over store.search for
+    both engine families (old signature kept, hits lists returned)."""
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import RAGServer
+    cfg = get_smoke_config("smollm-360m")
+    rng = np.random.default_rng(11)
+    qs = vectors[rng.integers(len(vectors), size=5)] + 0.01
+    roles = [int(r) for r in rng.integers(policy.n_roles, size=5)]
+    for engine in ("scorescan", "exact"):
+        store = stores[("impure_heavy", engine)]
+        srv = RAGServer(cfg=cfg, params={}, store=store)
+        got = srv.retrieve_batch(qs, roles, k=7, efs=400)
+        want = store.search([Query(vector=q, roles=(r,), k=7, efs=400)
+                             for q, r in zip(qs, roles)])
+        for g, w in zip(got, want):
+            _check(g, w.hits)

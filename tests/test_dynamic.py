@@ -1,9 +1,12 @@
-"""Appendix I: inserts, deletes, grants/revocations without a rebuild."""
+"""Appendix I: inserts, deletes, grants/revocations without a rebuild —
+now routed through the unified ``store.search`` entry point, including the
+batched ScoreScan path, tombstone-aware over-fetch, fresh leftover blocks
+for unseen role combinations, and the n_roles > 32 packed-shard fallback."""
 import numpy as np
 import pytest
 
 from repro.core import (build_effveda, build_vector_storage, exact_factory,
-                        metrics, HNSWCostModel)
+                        generate_policy, metrics, HNSWCostModel)
 from repro.core.dynamic import DynamicStore
 
 
@@ -85,6 +88,178 @@ def test_correctness_after_mixed_churn(dyn, small_policy):
         x = rng.standard_normal(16).astype(np.float32)
         got = [i for _, i in dyn.search(x, r, k=8)]
         assert got == _truth(dyn, x, r, 8)[:len(got)]
+
+
+# ------------------------------------------------- unified API + satellites
+@pytest.fixture()
+def scan_dyn():
+    """ScoreScan-engine dynamic store: mutations rebuild MaskedEngines with
+    fresh auth bits and queries take the batched kernel path."""
+    from repro.ann.scorescan import scorescan_factory
+    policy = generate_policy(n_vectors=1200, n_roles=8, n_permissions=20,
+                             seed=3)
+    rng = np.random.default_rng(4)
+    vecs = rng.standard_normal((policy.n_vectors, 16)).astype(np.float32)
+    cm = HNSWCostModel(lam_threshold=100)
+    res = build_effveda(policy, cm, beta=1.1, k=10)
+    store = build_vector_storage(res, vecs,
+                                 engine_factory=scorescan_factory(policy))
+    return DynamicStore(store, cm)
+
+
+def test_scan_store_mutations_through_store_search(scan_dyn):
+    """Insert/delete/grant/revoke on a ScoreScan store, then search parity
+    vs exact rescan — the dynamic path now rides the batched engine."""
+    dyn = scan_dyn
+    policy = dyn.store.policy
+    rng = np.random.default_rng(5)
+    assert dyn.store.batched_capable()
+    v_new = rng.standard_normal(16).astype(np.float32)
+    vid = dyn.insert(v_new, frozenset({2}))
+    assert dyn.search(v_new, 2, k=5)[0][1] == vid
+    victim = int(policy.d_of_role(1)[0])
+    dyn.delete(victim)
+    only0 = [int(v) for v in policy.d_of_role(0)
+             if not dyn.store.authorized_mask(3)[v]
+             and v not in dyn.tombstones]
+    moved = only0[0]
+    dyn.grant(moved, 3)
+    dyn.revoke(moved, 0)
+    for _ in range(8):
+        r = int(rng.integers(policy.n_roles))
+        x = rng.standard_normal(16).astype(np.float32)
+        got = [i for _, i in dyn.search(x, r, k=8)]
+        assert got == _truth(dyn, x, r, 8)[:len(got)], r
+    # the entry point reports the batched path for this store
+    from repro.core import Query
+    res = dyn.store.search(Query(vector=x, roles=(0,), k=4))[0]
+    assert res.path.startswith("batched")
+
+
+def test_revoke_purges_stale_copies_from_node_engines(scan_dyn):
+    """Regression (code review): revoking a role must not leave the vector's
+    row — with auth bits still carrying the revoked role — in node engines
+    of the *old* block, where a pure-node search (no post-filter) would
+    leak it to the revoked role."""
+    dyn = scan_dyn
+    # a vector in a multi-role block that lives inside >= 1 node engine
+    vid = next(v for v, b in sorted(dyn.vec_block.items())
+               if len(dyn.block_roles[b]) >= 2 and dyn._containers(b)[0])
+    tau = dyn.block_roles[dyn.vec_block[vid]]
+    r = min(tau)
+    x = dyn.store.data[vid]
+    assert dyn.search(x, r, k=3)[0][1] == vid
+    dyn.revoke(vid, r)
+    assert all(i != vid for _, i in dyn.search(x, r, k=8)), "leak!"
+    got = [i for _, i in dyn.search(x, r, k=8)]
+    assert got == _truth(dyn, x, r, 8)[:len(got)]
+    # the remaining roles still reach it
+    other = next(iter(tau - {r}))
+    assert dyn.search(x, other, k=3)[0][1] == vid
+    # no stale copy remains outside the new block's containers
+    new_b = dyn.vec_block[vid]
+    for key, eng in dyn.store.engines.items():
+        if new_b not in dyn.store.lattice.nodes[key].blocks:
+            assert vid not in set(int(i) for i in eng.ids), key
+
+
+def test_scan_store_grant_revoke_churn_parity(scan_dyn):
+    """Randomized grant/revoke churn on the ScoreScan store: every role's
+    searches must match an exact rescan (catches stale rows and stale auth
+    bits in shared containers)."""
+    dyn = scan_dyn
+    policy = dyn.store.policy
+    rng = np.random.default_rng(11)
+    n = len(dyn.store.data)
+    for _ in range(30):
+        vid = int(rng.integers(n))
+        if vid in dyn.tombstones:
+            continue
+        r = int(rng.integers(policy.n_roles))
+        tau = dyn.block_roles[dyn.vec_block[vid]]
+        if r in tau and len(tau) > 1:
+            dyn.revoke(vid, r)
+        else:
+            dyn.grant(vid, r)
+    for _ in range(10):
+        r = int(rng.integers(policy.n_roles))
+        x = rng.standard_normal(16).astype(np.float32)
+        got = [i for _, i in dyn.search(x, r, k=8)]
+        assert got == _truth(dyn, x, r, 8)[:len(got)], r
+
+
+def test_unseen_role_combination_makes_fresh_leftover_block(scan_dyn):
+    """An insert under a never-seen role combination creates a fresh
+    leftover block that every role in the combination can search — and the
+    multi-role entry point sees it too."""
+    dyn = scan_dyn
+    policy = dyn.store.policy
+    combo = frozenset(range(policy.n_roles))        # all roles: surely unseen
+    assert combo not in dyn.block_roles
+    n_blocks_before = len(dyn.block_roles)
+    v = np.full(16, 7.0, np.float32)
+    vid = dyn.insert(v, combo)
+    assert len(dyn.block_roles) == n_blocks_before + 1
+    b = dyn.vec_block[vid]
+    assert b in dyn.store.leftover_ids               # fresh leftover block
+    for r in combo:
+        assert b in dyn.store.plans[r].leftover_blocks
+        assert dyn.search(v, r, k=3)[0][1] == vid
+    got = dyn.search(v, roles=(0, 1), k=3)           # multi-role union
+    assert got[0][1] == vid
+
+
+def test_many_roles_packed_shard_fallback(small_vectors):
+    """n_roles > 32: the packed shard is refused (role bits would alias) and
+    the dynamic store's batched searches take the per-block leftover path —
+    mutations and parity must hold there too."""
+    from repro.ann.scorescan import scorescan_factory
+    policy = generate_policy(n_vectors=1000, n_roles=40, n_permissions=90,
+                             seed=6)
+    rng = np.random.default_rng(7)
+    vecs = rng.standard_normal((policy.n_vectors, 16)).astype(np.float32)
+    cm = HNSWCostModel(lam_threshold=80)
+    res = build_effveda(policy, cm, beta=1.1, k=10)
+    store = build_vector_storage(res, vecs,
+                                 engine_factory=scorescan_factory(policy))
+    assert store.pack_leftover_shard() is None       # refused: would alias
+    dyn = DynamicStore(store, cm)
+    vid = dyn.insert(np.full(16, 3.0, np.float32), frozenset({35}))
+    dyn.delete(int(policy.d_of_role(2)[0]))
+    from repro.core import Query
+    for r in (35, 2, 33):
+        x = rng.standard_normal(16).astype(np.float32)
+        got = [i for _, i in dyn.search(x, r, k=6)]
+        assert got == _truth(dyn, x, r, 6)[:len(got)], r
+        res_q = store.search(Query(vector=x, roles=(r,), k=6))[0]
+        assert res_q.path == "batched"               # per-block, no shard
+    assert dyn.search(np.full(16, 3.0, np.float32), 35, k=1)[0][1] == vid
+
+
+def test_overfetch_only_counts_authorized_tombstones(dyn, small_policy):
+    """Regression (ISSUE satellite): deleting many vectors *outside* the
+    querying role's reach must not inflate its over-fetch k at all, while
+    in-role deletes still pad exactly."""
+    r = 2
+    mask = dyn.store.authorized_mask(r).copy()
+    out_of_role = [v for v in range(len(dyn.store.data)) if not mask[v]]
+    for v in out_of_role[:30]:
+        dyn.delete(int(v))
+    assert len(dyn.tombstones) == 30
+    assert dyn.tombstone_pad((r,)) == 0              # none can surface for r
+    x = dyn.store.data[int(small_policy.d_of_role(r)[0])]
+    got = [i for _, i in dyn.search(x, r, k=6)]
+    assert got == _truth(dyn, x, r, 6)[:len(got)]
+    # an in-role delete pads by exactly one
+    in_role = [v for v in range(len(dyn.store.data))
+               if mask[v] and v not in dyn.tombstones]
+    dyn.delete(int(in_role[0]))
+    assert dyn.tombstone_pad((r,)) == 1
+    got = [i for _, i in dyn.search(x, r, k=6)]
+    assert got == _truth(dyn, x, r, 6)[:len(got)]
+    # multi-role pad: union semantics
+    other = int((r + 1) % small_policy.n_roles)
+    assert dyn.tombstone_pad((r, other)) >= dyn.tombstone_pad((r,))
 
 
 def test_reoptimization_trigger(dyn, small_policy):

@@ -1,6 +1,7 @@
 """Continuous-batching scheduler (launch/scheduler.py): result parity with
 per-query coordinated search for randomized multi-role streams, flush
-policy, per-request k truncation, ServeStats accounting, and the
+policy, per-request k, ServeStats accounting (leftover-path counts
+included), the min_packed_batch threshold, the legacy submit shim, and the
 RAGServer.serve_stream / retrieve_batch fallback plumbing."""
 import asyncio
 
@@ -9,8 +10,9 @@ import pytest
 
 from repro.ann.exact import ExactIndex
 from repro.ann.scorescan import scorescan_factory, coordinated_scan_search
-from repro.core import (HNSWCostModel, build_effveda, build_vector_storage,
-                        coordinated_search, exact_factory, generate_policy)
+from repro.core import (HNSWCostModel, Query, SearchResult, build_effveda,
+                        build_vector_storage, coordinated_search,
+                        exact_factory, generate_policy)
 from repro.launch.scheduler import (MicroBatchScheduler, ServeStats,
                                     serve_requests)
 
@@ -147,11 +149,13 @@ def test_scheduler_restarts_after_drain(scan_store, policy, vectors):
 
     async def main():
         sched = MicroBatchScheduler(scan_store, max_batch=4, max_wait_ms=1.0)
-        first = await asyncio.gather(*[sched.submit(q, r, k)
-                                       for q, r, k in reqs[:3]])
+        first = await asyncio.gather(
+            *[sched.submit(Query(vector=q, roles=(r,), k=k))
+              for q, r, k in reqs[:3]])
         await sched.drain()
-        second = await asyncio.gather(*[sched.submit(q, r, k)
-                                       for q, r, k in reqs[3:]])
+        second = await asyncio.gather(
+            *[sched.submit(Query(vector=q, roles=(r,), k=k))
+              for q, r, k in reqs[3:]])
         await sched.close()
         return list(first) + list(second)
 
@@ -159,10 +163,68 @@ def test_scheduler_restarts_after_drain(scan_store, policy, vectors):
     _assert_matches_reference(scan_store, reqs, results)
 
 
+def test_legacy_submit_shim_warns_and_serves(scan_store, policy, vectors):
+    """The PR 2 positional submit(vector, role, k) survives as a deprecation
+    shim that wraps the arguments in a single-role Query."""
+    reqs = _stream(policy, vectors, 3, seed=13)
+
+    async def main():
+        sched = MicroBatchScheduler(scan_store, max_batch=4, max_wait_ms=1.0)
+        with pytest.warns(DeprecationWarning, match="submit"):
+            futures = [sched.submit(q, r, k) for q, r, k in reqs]
+        out = await asyncio.gather(*futures)
+        await sched.close()
+        return list(out)
+
+    results = asyncio.run(main())
+    _assert_matches_reference(scan_store, reqs, results)
+
+
+def test_results_are_search_results_with_stats(scan_store, policy, vectors):
+    """Futures resolve to SearchResult: per-request hits + stats + path."""
+    reqs = _stream(policy, vectors, 8, seed=14)
+    results = _run(scan_store, reqs, max_batch=4)
+    for res in results:
+        assert isinstance(res, SearchResult)
+        assert res.path in ("batched", "batched+packed")
+        assert res.stats.data_touched > 0 or not res.hits
+
+
+def test_serve_stats_records_leftover_path(scan_store, policy, vectors):
+    """min_packed_batch gates the packed shard per flush, and ServeStats
+    records which path each flush ran (ISSUE satellite)."""
+    reqs = _stream(policy, vectors, 24, seed=15)
+    # threshold above any flush size: every flush takes the per-block path
+    stats = ServeStats()
+    _run_kw(scan_store, reqs, max_batch=8, stats=stats, min_packed_batch=64)
+    assert stats.paths.get("batched", 0) == stats.batches_flushed
+    assert "batched+packed" not in stats.paths
+    # threshold 1: full flushes ride the packed shard
+    stats = ServeStats()
+    _run_kw(scan_store, reqs, max_batch=8, max_wait_ms=10_000.0, stats=stats,
+            min_packed_batch=1)
+    assert stats.paths.get("batched+packed", 0) >= 1
+    assert sum(stats.paths.values()) == stats.batches_flushed
+    assert "path_batched+packed" in stats.summary()
+
+
+def _run_kw(store, reqs, *, max_batch=8, max_wait_ms=2.0, stats=None,
+            min_packed_batch=1):
+    async def main():
+        sched = MicroBatchScheduler(store, max_batch=max_batch,
+                                    max_wait_ms=max_wait_ms, stats=stats,
+                                    min_packed_batch=min_packed_batch)
+        try:
+            return await serve_requests(sched, reqs)
+        finally:
+            await sched.close()
+    return asyncio.run(main())
+
+
 def test_search_error_propagates_to_futures(scan_store, policy, vectors):
     reqs = _stream(policy, vectors, 3, seed=10)
 
-    def boom(store, qs, roles, k, stats=None):
+    def boom(store, queries):
         raise RuntimeError("engine down")
 
     with pytest.raises(RuntimeError, match="engine down"):
