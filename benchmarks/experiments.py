@@ -333,14 +333,12 @@ def exp16_continuous_batching(bc: BenchConfig):
     # hit: query batches pad to multiples of the kernel's bq=8, so each
     # engine (nodes + packed shard) compiles one trace per {8,16,24,32}
     # bucket — scheduler batch compositions are timing-dependent, so every
-    # bucket must be warm or a single recompile pollutes p99
-    warm = np.ascontiguousarray(np.repeat(qs[:8], 4, axis=0))
+    # bucket must be warm or a single recompile pollutes p99.  The utility
+    # is mask-width-aware (launch/serve.py): multi-word stores trace their
+    # real (B, W) mask operands.
+    from repro.launch.serve import warm_batch_shapes
+    warm_batch_shapes(store, sizes=(1, 8, 16, 24, 32), k=sbc.k)
     for B in (1, 8, 16, 24, 32):
-        bits = np.full(B, 1, np.uint32)
-        bounds = np.full(B, np.inf, np.float32)
-        for eng in list(store.engines.values()) + [store.leftover_shard]:
-            if eng is not None and len(eng):
-                eng.search_masked_batch(warm[:B], sbc.k, bits, bounds=bounds)
         store.search(qobjs[:B], packed=True)
         store.search(qobjs[:B], packed=False)
 
@@ -389,6 +387,88 @@ def exp16_continuous_batching(bc: BenchConfig):
              f"packed_flushes={packed_n};"
              f"perblock_flushes={stats.paths.get('batched', 0)};"
              f"recall={rec(results):.3f}")
+
+
+def exp17_role_scaling(bc: BenchConfig):
+    """Lattice-width scaling (the paper's core axis, unblocked by multi-word
+    auth masks): QPS/recall vs n_roles at a fixed serving budget, plus the
+    isolated kernel-level cost of mask width W.
+
+      * ``exp17_roles/R{8,32,64,256}`` — batched ``store.search`` (B=32,
+        packed leftovers) on a fixed-size corpus whose role universe widens;
+        W = ceil(n_roles/32) goes 1 → 8.  Recall is measured against the
+        brute-force authorized oracle (exact by construction on this path —
+        emitting it makes the claim checkable from the report and gates the
+        multi-word path in CI via scripts/check_perf.py).
+      * ``exp17_kernel/W{1,2,8}`` — one ``l2_topk`` launch on identical
+        (B, N, d) operands where ONLY the auth-mask width changes: the
+        marginal in-kernel cost of the multi-word compare vs the W=1 fast
+        path (W=1 operands take the original single-word code path).
+    """
+    import dataclasses as dc
+    from repro.ann.scorescan import scorescan_factory
+    from repro.core import (Query, build_effveda, generate_policy,
+                            mask_words)
+    from repro.core import HNSWCostModel
+    from repro.kernels.l2_topk import l2_topk, L2TopKConfig
+
+    n_vec, dim, k, B, total = 2000, 16, bc.k, 32, 64
+    rng = np.random.default_rng(17)
+    for n_roles in (8, 32, 64, 256):
+        policy = generate_policy(n_vectors=n_vec, n_roles=n_roles,
+                                 n_permissions=n_roles + 24, seed=0)
+        vecs = rng.standard_normal((n_vec, dim)).astype(np.float32)
+        cm = HNSWCostModel(lam_threshold=min(bc.lam, 50))
+        res = build_effveda(policy, cm, beta=1.1, k=k)
+        store = build_vector_storage(
+            res, vecs, engine_factory=scorescan_factory(policy),
+            pack_leftovers=True)
+        roles = [int(r) for r in rng.integers(n_roles, size=total)]
+        qs = vecs[rng.integers(n_vec, size=total)] + 0.01
+        qobjs = [Query(vector=qs[i], roles=(roles[i],), k=k)
+                 for i in range(total)]
+        from repro.launch.serve import warm_batch_shapes
+        warm_batch_shapes(store, sizes=(B,), k=k)  # (B, W) operand traces
+        times = []
+        for rep in range(4):                   # round 0 warms the jit caches
+            t0 = time.perf_counter()
+            results = []
+            for lo in range(0, total, B):
+                results += store.search(qobjs[lo:lo + B])
+            if rep:
+                times.append(time.perf_counter() - t0)
+        recalls = []
+        for q, res_q in zip(qobjs, results):
+            mask = store.authorized_mask(q.roles[0])
+            truth = metrics.brute_force_topk(vecs, mask, q.vector, k)
+            recalls.append(metrics.recall_at_k(
+                [i for _, i in res_q], [i for _, i in truth], k))
+        dt = min(times)
+        emit(f"exp17_roles/R{n_roles}", dt / total * 1e6,
+             f"qps={total / dt:.1f};recall={np.mean(recalls):.3f};"
+             f"W={mask_words(n_roles)}")
+
+    # isolated kernel cost of mask width (same data, same padding, same k)
+    Bk, N, d = 32, 4096, 32
+    q = rng.standard_normal((Bk, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    cfg = L2TopKConfig()
+    for W in (1, 2, 8):
+        auth = rng.integers(1, 2 ** 16, size=(N, W)).astype(np.uint32)
+        masks = np.zeros((Bk, W), np.uint32)
+        masks[:, W - 1] = 1            # top word: the full W-word compare
+        a_op = auth[:, 0] if W == 1 else auth
+        m_op = masks[:, 0] if W == 1 else masks
+        times = []
+        for rep in range(6):
+            t0 = time.perf_counter()
+            d_, i_ = l2_topk(q, db, a_op, m_op, bc.k, config=cfg)
+            np.asarray(d_)             # block on the result
+            if rep:
+                times.append(time.perf_counter() - t0)
+        dt = min(times)
+        emit(f"exp17_kernel/W{W}", dt * 1e6,
+             f"qps={Bk / dt:.1f}")
 
 
 def exp14_multirole(bc: BenchConfig, suite: MethodSuite):

@@ -29,3 +29,36 @@ else
   echo "== fast tier: pytest -m 'not slow' =="
   python -m pytest -x -q -m "not slow" --junitxml=junit.xml
 fi
+
+echo "== many-role smoke: n_roles=64 multi-word auth masks =="
+python - <<'PY'
+# a 64-role store (W=2 packed mask words) must serve exact authorized
+# results through the batched path and the packed leftover shard — the
+# quick end-to-end guard that the multi-word kernel path stays wired up
+import numpy as np
+from repro.ann.scorescan import scorescan_factory
+from repro.core import (HNSWCostModel, Query, build_effveda,
+                        build_vector_storage, generate_policy, metrics)
+
+policy = generate_policy(n_vectors=600, n_roles=64, n_permissions=80, seed=0)
+rng = np.random.default_rng(1)
+vecs = rng.standard_normal((policy.n_vectors, 8)).astype(np.float32)
+res = build_effveda(policy, HNSWCostModel(lam_threshold=60), beta=1.1, k=5)
+store = build_vector_storage(res, vecs,
+                             engine_factory=scorescan_factory(policy),
+                             pack_leftovers=True)
+assert store.mask_width == 2, store.mask_width
+roles = [1, 31, 32, 33, 63] + [int(r) for r in rng.integers(64, size=11)]
+qs = [Query(vector=vecs[i * 7] + 0.01, roles=(r,), k=5)
+      for i, r in enumerate(roles)]
+for packed in (False, True):
+    results = store.search(qs, packed=packed)
+    assert all(r.path.startswith("batched") for r in results)
+    for q, r in zip(qs, results):
+        mask = store.authorized_mask(q.roles[0])
+        want = [i for _, i in metrics.brute_force_topk(vecs, mask,
+                                                       q.vector, 5)]
+        got = [i for _, i in r]
+        assert got == want[:len(got)] and len(got) == len(want), q.roles
+print("many-role smoke OK (n_roles=64, W=2, batched + packed paths)")
+PY

@@ -54,7 +54,7 @@ def run(n_vectors=20000, dim=32, n_roles=12, n_permissions=40, beta=1.1,
         nodes = [(store.engines[nk], store.is_pure(nk, mask))
                  for nk in plan.nodes if nk in store.engines]
         nodes.sort(key=lambda t: (not t[1], t[0].lower_bound(q)))
-        role_mask = np.uint32(1 << (r % 32))
+        role_mask = store.kernel_role_mask((r,))
         for eng, pure in nodes:
             if eng.lower_bound(q) > rs.kth_dist():
                 continue

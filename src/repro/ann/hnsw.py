@@ -40,14 +40,29 @@ class SearchState:
 
 
 class HNSWIndex:
-    """HNSW over an ``(n, d)`` float32 array of vectors with external ids."""
+    """HNSW over an ``(n, d)`` float32 array of vectors with external ids.
+
+    ``auth_bits`` optionally carries per-vector authorization mask words —
+    ``(n,)`` uint32 for role universes up to 32 roles or ``(n, W)`` packed
+    words beyond (same layout as the ScoreScan engine, DESIGN.md §Role
+    Masks).  When present the index is a ``MaskedEngine``:
+    :meth:`search_masked` filters the beam's results by word-mask
+    intersection.  The attribute is only set when bits are supplied, so a
+    plain HNSW index does not satisfy the ``MaskedEngine`` protocol.
+    """
 
     def __init__(self, data: np.ndarray, ids: Optional[np.ndarray] = None,
-                 M: int = 16, efc: int = 100, seed: int = 0):
+                 M: int = 16, efc: int = 100, seed: int = 0,
+                 auth_bits: Optional[np.ndarray] = None):
         assert data.ndim == 2
         self.data = np.ascontiguousarray(data, dtype=np.float32)
         self.ids = (np.arange(len(data), dtype=np.int64) if ids is None
                     else np.asarray(ids, dtype=np.int64))
+        if auth_bits is not None:
+            auth_bits = np.ascontiguousarray(auth_bits, dtype=np.uint32)
+            assert len(auth_bits) == len(self.data), \
+                (auth_bits.shape, self.data.shape)
+            self.auth_bits = auth_bits
         self.M = int(M)
         self.M0 = 2 * int(M)
         self.efc = int(efc)
@@ -204,23 +219,76 @@ class HNSWIndex:
         return ep
 
     # ------------------------------------------------- MutableEngine (App. I)
-    def insert(self, vid: int, vec: np.ndarray) -> None:
+    def insert(self, vid: int, vec: np.ndarray,
+               auth_bits=None) -> None:
         """Incremental insert of one vector with external id ``vid``.
 
         Re-inserting an id that is already linked (a tombstoned vector being
         re-granted) only clears its tombstone mark — the graph keeps the
-        original row.
+        original row.  For auth-carrying indexes ``auth_bits`` supplies the
+        new row's mask words (scalar / ``(W,)``); callers that track
+        authorization (DynamicStore) pass the row's role-combination mask.
         """
         vid = int(vid)
         if np.any(self.ids == vid):
             self.tombstoned.discard(vid)
+            # the row is kept, but its authorization may have changed (e.g.
+            # a revoke-then-grant cycle): refresh the auth words so the
+            # documented contract holds on this path too
+            if auth_bits is not None and hasattr(self, "auth_bits"):
+                self.auth_bits[self.ids == np.int64(vid)] = \
+                    np.asarray(auth_bits, np.uint32)
             return
         self.data = np.vstack([self.data,
                                np.asarray(vec, np.float32)[None]])
         self.ids = np.append(self.ids, np.int64(vid))
         self.levels = np.append(self.levels, 0)
+        if hasattr(self, "auth_bits"):
+            row = (np.zeros(self.auth_bits.shape[1:], np.uint32)
+                   if auth_bits is None
+                   else np.asarray(auth_bits, np.uint32))
+            assert row.shape == self.auth_bits.shape[1:], \
+                (row.shape, self.auth_bits.shape)
+            if self.auth_bits.ndim == 1:
+                self.auth_bits = np.append(self.auth_bits, row)
+            else:
+                self.auth_bits = np.vstack([self.auth_bits, row[None]])
         self.tombstoned.discard(vid)
         self._insert(len(self.data) - 1)
+
+    # -------------------------------------------------- MaskedEngine surface
+    def _mask_hits(self, internal: Sequence[int], role_mask) -> np.ndarray:
+        """Word-mask intersection test for internal row indices."""
+        m = np.atleast_1d(np.asarray(role_mask, np.uint32))
+        rows = self.auth_bits[np.asarray(internal, np.int64)]
+        if rows.ndim == 1:
+            rows = rows[:, None]
+        assert m.shape[0] == rows.shape[1], \
+            (m.shape, self.auth_bits.shape)
+        return ((rows & m[None, :]) != 0).any(axis=1)
+
+    def search_masked(self, q: np.ndarray, k: int, role_mask,
+                      bound: Optional[float] = None, efs: Optional[int] = None
+                      ) -> List[Tuple[float, int]]:
+        """Authorized top-k: beam search, then filter by the query's role
+        mask words (and the optional coordinated-search ``bound``).  The
+        beam is approximate like any HNSW search; authorization is exact —
+        an unauthorized vector can never be returned."""
+        assert hasattr(self, "auth_bits"), \
+            "HNSWIndex built without auth_bits cannot search_masked"
+        res, _ = self.begin_search(q, max(int(efs or 0), 4 * k, 64))
+        if not res:
+            return []
+        keep = self._mask_hits([i for _, i in res], role_mask)
+        out = []
+        for ok, (d, i) in zip(keep, res):
+            vid = int(self.ids[i])
+            if not ok or vid in self.tombstoned:
+                continue
+            if bound is not None and d >= bound:
+                continue
+            out.append((float(d), vid))
+        return out[:k]
 
     def tombstone(self, vid: int) -> None:
         """Mark external id ``vid`` deleted: the row stays in the graph (it

@@ -23,15 +23,25 @@ from ..kernels.l2_topk import l2_topk, L2TopKConfig
 
 @dataclasses.dataclass
 class ScoreScanIndex:
-    """Engine-compatible dense scan index over one lattice node."""
+    """Engine-compatible dense scan index over one lattice node.
+
+    ``auth_bits`` is the per-vector in-kernel authorization mask: ``(n,)``
+    uint32 for role universes up to 32 roles (the single-word fast path) or
+    ``(n, W)`` packed uint32 words for wider universes (W = ceil(n_roles/32),
+    DESIGN.md §Role Masks).  Role-mask operands to the search methods carry
+    the matching width: a scalar / ``(B,)`` for single-word indexes, a
+    ``(W,)`` / ``(B, W)`` word array otherwise.
+    """
 
     data: np.ndarray                 # (n, d) float32
     ids: np.ndarray                  # (n,) int64 external ids
-    auth_bits: np.ndarray            # (n,) uint32 role bitmask
+    auth_bits: np.ndarray            # (n,) or (n, W) uint32 role mask words
     config: L2TopKConfig = dataclasses.field(default_factory=L2TopKConfig)
 
     def __post_init__(self):
         self.data = np.ascontiguousarray(self.data, dtype=np.float32)
+        self.auth_bits = np.ascontiguousarray(self.auth_bits,
+                                              dtype=np.uint32)
         self.centroid = self.data.mean(axis=0) if len(self.data) else None
         if self.centroid is not None:
             d = self.data - self.centroid
@@ -49,6 +59,17 @@ class ScoreScanIndex:
     def __len__(self) -> int:
         return len(self.data)
 
+    @property
+    def mask_width(self) -> int:
+        """Auth-mask width in packed uint32 words (1 = single-word path)."""
+        return 1 if self.auth_bits.ndim == 1 else self.auth_bits.shape[1]
+
+    def _full_mask(self):
+        """Role mask admitting every vector (engine-interface parity)."""
+        if self.mask_width == 1:
+            return np.uint32(0xFFFFFFFF)
+        return np.full(self.mask_width, 0xFFFFFFFF, np.uint32)
+
     # ---------------------------------------------------------------- bounds
     def lower_bound(self, q: np.ndarray) -> float:
         """min possible squared distance from q to any member (triangle)."""
@@ -65,16 +86,20 @@ class ScoreScanIndex:
         return np.maximum(0.0, dc - self.radius) ** 2
 
     # ---------------------------------------------------------------- search
-    def search_masked(self, q: np.ndarray, k: int, role_mask: int,
+    def search_masked(self, q: np.ndarray, k: int, role_mask,
                       bound: Optional[float] = None
                       ) -> List[Tuple[float, int]]:
-        """Exact authorized top-k via the Pallas kernel; ids are external."""
+        """Exact authorized top-k via the Pallas kernel; ids are external.
+
+        ``role_mask`` is a uint32 scalar (single-word indexes) or a ``(W,)``
+        word array matching :attr:`mask_width`.
+        """
         if not len(self.data):
             return []
         self._distance_computations += len(self.data)
         qc = (q - self.centroid).astype(np.float32)
         d, i = l2_topk(qc[None, :], self._centered, self.auth_bits,
-                       np.uint32(role_mask), k, bound=bound,
+                       np.asarray(role_mask, np.uint32), k, bound=bound,
                        config=self.config)
         d = np.asarray(d)[0]
         i = np.asarray(i)[0]
@@ -90,7 +115,8 @@ class ScoreScanIndex:
 
         Args:
           qs: (B, d) float32 query batch.
-          role_masks: (B,) uint32 per-query role bitmask.
+          role_masks: (B,) uint32 per-query role bitmask, or (B, W) packed
+            word rows for multi-word indexes (:attr:`mask_width`).
           bounds: optional (B,) float32 per-query coordinated-search bound.
 
         Returns:
@@ -118,22 +144,30 @@ class ScoreScanIndex:
 
     # engine-interface parity (used when plugged into the generic store)
     def search(self, q: np.ndarray, k: int, efs: int = 0):
-        return self.search_masked(q, k, role_mask=0xFFFFFFFF)
+        return self.search_masked(q, k, role_mask=self._full_mask())
 
     def begin_search(self, q: np.ndarray, efs: int):
-        res = self.search_masked(q, max(efs, 1), role_mask=0xFFFFFFFF)
+        res = self.search_masked(q, max(efs, 1), role_mask=self._full_mask())
         internal = {int(e): j for j, e in enumerate(self.ids)}
         out = [(dd, internal[vid]) for dd, vid in res]
         return out, ("scorescan", out)
 
     def resume_search(self, q: np.ndarray, state, efs: int):
-        res = self.search_masked(q, max(efs, 1), role_mask=0xFFFFFFFF)
+        res = self.search_masked(q, max(efs, 1), role_mask=self._full_mask())
         internal = {int(e): j for j, e in enumerate(self.ids)}
         return [(dd, internal[vid]) for dd, vid in res]
 
 
+def policy_auth_words(policy) -> np.ndarray:
+    """Per-vector in-kernel auth mask for a policy: ``(n,)`` uint32 when the
+    role universe fits one word (the kernel's single-word fast path), else
+    ``(n, W)`` packed words (DESIGN.md §Role Masks).  Exact at any width —
+    no role aliasing."""
+    words = policy.role_words()                       # (n, W) uint32, exact
+    return words[:, 0] if words.shape[1] == 1 else words
+
+
 def pack_leftover_shard(leftover_vectors, leftover_ids, policy,
-                        max_roles: int = 32,
                         config: Optional[L2TopKConfig] = None
                         ) -> Optional[ScoreScanIndex]:
     """Concatenate every leftover block into one auth-masked ScoreScan shard.
@@ -143,28 +177,28 @@ def pack_leftover_shard(leftover_vectors, leftover_ids, policy,
     merge — per (block, micro-batch).  Packing them into a single
     :class:`ScoreScanIndex` whose per-vector ``auth_bits`` carry each block's
     role combination lets a whole micro-batch's leftover phase ride **one**
-    ``l2_topk`` launch: each query row filters by its own role bit in-kernel
+    ``l2_topk`` launch: each query row filters by its own role mask in-kernel
     (DESIGN.md §Continuous Batching).
 
-    Returns ``None`` when there are no leftover vectors.  Callers must not
-    pack when ``policy.n_roles > max_roles`` — role bits would alias and the
-    in-kernel top-k could crowd out authorized candidates (the per-block scan
-    path has no such failure mode, so the store falls back to it).
+    Returns ``None`` when there are no leftover vectors.  Role universes of
+    any width pack exactly: the shard's auth masks are multi-word past 32
+    roles (``W = ceil(n_roles/32)`` packed words), so the former
+    ``n_roles <= 32`` refusal is gone.
     """
     blocks = [b for b in sorted(leftover_ids) if len(leftover_ids[b])]
     if not blocks:
         return None
     data = np.concatenate([leftover_vectors[b] for b in blocks])
     ids = np.concatenate([leftover_ids[b] for b in blocks])
-    bits = policy.role_bitmask(max_roles=max_roles).astype(np.uint32)
+    bits = policy_auth_words(policy)
     return ScoreScanIndex(data=data, ids=ids, auth_bits=bits[ids],
                           config=config or L2TopKConfig())
 
 
-def scorescan_factory(policy, max_roles: int = 32,
-                      config: Optional[L2TopKConfig] = None):
-    """Engine factory wiring the per-vector role bitmask from the policy."""
-    bits = policy.role_bitmask(max_roles=max_roles).astype(np.uint32)
+def scorescan_factory(policy, config: Optional[L2TopKConfig] = None):
+    """Engine factory wiring the per-vector auth mask words from the
+    policy (single-word up to 32 roles, multi-word beyond)."""
+    bits = policy_auth_words(policy)
     cfg = config or L2TopKConfig()
 
     def make(data: np.ndarray, ids: np.ndarray) -> ScoreScanIndex:
@@ -189,7 +223,7 @@ def coordinated_scan_search(store, q: np.ndarray, role: int, k: int,
     q = np.asarray(q, dtype=np.float32)
     plan = store.plans[role]
     mask = store.authorized_mask(role)
-    role_mask = np.uint32(1 << (role % 32))
+    role_mask = store.kernel_role_mask((role,))
     rs = _TopK(k)
     _scan_leftovers(store, plan, q, rs, stats)
     pure, impure = [], []

@@ -13,7 +13,8 @@ Public API:
   batched_search                     — deprecated shim over store.search
   metrics                            — SA / QA / recall / purity
 """
-from .policy import AccessPolicy, generate_policy
+from .policy import (MASK_WORD_BITS, AccessPolicy, generate_policy,
+                     mask_words, roles_kernel_mask, roles_word_mask)
 from .lattice import Lattice, Node
 from .costmodel import HNSWCostModel, ScanCostModel, calibrate
 from .queryplan import Plan, build_all_plans, greedy_plan, plan_cost, avg_cost
@@ -23,7 +24,7 @@ from .api import (DEFAULT_MIN_PACKED_BATCH, BatchEngine, Engine,
                   MaskedEngine, MutableEngine, Query, ResumableEngine,
                   SearchResult, SearchStats, supports_batch)
 from .store import (VectorStore, build_vector_storage, build_oracle_store,
-                    hnsw_factory, exact_factory)
+                    hnsw_factory, hnsw_masked_factory, exact_factory)
 from .coordinated import (coordinated_search, independent_search,
                           global_filtered_search, routed_search)
 from .batched import BatchTopK, batched_search, execute_queries
@@ -32,6 +33,7 @@ from . import metrics
 
 __all__ = [
     "AccessPolicy", "generate_policy", "Lattice", "Node",
+    "MASK_WORD_BITS", "mask_words", "roles_word_mask", "roles_kernel_mask",
     "HNSWCostModel", "ScanCostModel", "calibrate",
     "Plan", "build_all_plans", "greedy_plan", "plan_cost", "avg_cost",
     "BuildResult", "VedaBuilder", "build_veda",
@@ -40,7 +42,7 @@ __all__ = [
     "Engine", "ResumableEngine", "MaskedEngine", "BatchEngine",
     "MutableEngine", "supports_batch", "DEFAULT_MIN_PACKED_BATCH",
     "VectorStore", "build_vector_storage", "build_oracle_store",
-    "hnsw_factory", "exact_factory",
+    "hnsw_factory", "hnsw_masked_factory", "exact_factory",
     "coordinated_search", "independent_search",
     "global_filtered_search", "routed_search", "metrics",
     "BatchTopK", "batched_search", "execute_queries",

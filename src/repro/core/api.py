@@ -30,7 +30,8 @@ from typing import (Iterable, Iterator, List, Optional, Protocol, Sequence,
 
 import numpy as np
 
-from .policy import Role
+from .policy import (MASK_WORD_BITS, Role, mask_words, roles_kernel_mask,
+                     roles_word_mask)
 
 # Packed-leftover-shard batch threshold: below this micro-batch size the
 # per-block leftover path wins (calibrated from benchmarks exp16, interpret
@@ -191,7 +192,7 @@ class MaskedEngine(Engine, Protocol):
 
     auth_bits: np.ndarray
 
-    def search_masked(self, q: np.ndarray, k: int, role_mask: int,
+    def search_masked(self, q: np.ndarray, k: int, role_mask,
                       bound: Optional[float] = ...
                       ) -> List[Tuple[float, int]]: ...
 
@@ -226,9 +227,20 @@ def supports_batch(engines: Iterable[object]) -> bool:
 
 
 def roles_bitmask(roles: Sequence[Role], max_roles: int = 32) -> np.uint32:
-    """In-kernel role filter bits for a role set (bits alias past
-    ``max_roles``; the exact-mask post-filter is the ground truth)."""
+    """Legacy single-word in-kernel role filter bits for a role set.
+
+    Only valid when every role fits ``max_roles`` bits; a wider role is a
+    hard error (the ``1 << (r % max_roles)`` wraparound this replaces made
+    role 33 alias role 1, admitting unauthorized vectors in-kernel).  Wide
+    role universes carry ``(W,)``/``(B, W)`` word arrays instead — see
+    :func:`roles_word_mask` / :func:`roles_kernel_mask` and
+    ``VectorStore.role_mask_rows``."""
     bits = 0
     for r in roles:
-        bits |= 1 << (int(r) % max_roles)
+        r = int(r)
+        if not 0 <= r < max_roles:
+            raise ValueError(
+                f"role {r} does not fit a {max_roles}-bit mask; use "
+                f"multi-word masks (roles_word_mask) instead of aliasing")
+        bits |= 1 << r
     return np.uint32(bits)

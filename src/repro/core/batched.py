@@ -43,7 +43,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .api import Query, SearchResult, SearchStats, roles_bitmask
+from .api import Query, SearchResult, SearchStats
 from .queryplan import Plan
 from .store import VectorStore
 
@@ -147,8 +147,9 @@ def _scan_leftovers_batched(store: VectorStore, queries: np.ndarray,
 def _filter_unauthorized(d: np.ndarray, ids: np.ndarray, rows: np.ndarray,
                          row_masks: Sequence[np.ndarray]) -> None:
     """In-place exact-mask post-filter on kernel results (the authorization
-    ground truth: role bits alias at 32 roles, the mask never does).  For a
-    multi-role row the mask is the authorized *union*."""
+    ground truth; the in-kernel word masks are exact too — DESIGN.md §Role
+    Masks — this is defense in depth on impure visits).  For a multi-role
+    row the mask is the authorized *union*."""
     for j, qi in enumerate(rows):
         ok = (ids[j] >= 0) & row_masks[qi][np.maximum(ids[j], 0)]
         d[j] = np.where(ok, d[j], _INF)
@@ -190,8 +191,8 @@ def _scan_leftovers_packed(store: VectorStore, queries: np.ndarray,
         return
     rows = np.asarray(rows)
     d, ids = shard.search_masked_batch(queries[rows], topk.k, role_bits[rows])
-    # defense in depth against role-bit aliasing (the shard is only built
-    # for n_roles <= 32, where bits are exact)
+    # defense in depth: the shard's word masks are exact at any n_roles
+    # (multi-word past 32 roles), but the bool mask stays the ground truth
     _filter_unauthorized(d, ids, rows, row_masks)
     topk.push_rows(rows, d, ids)
 
@@ -230,7 +231,10 @@ def execute_queries(store: VectorStore, queries: Sequence[Query], *,
             mask_cache[t] = (store.authorized_mask(t[0]) if len(t) == 1
                              else store.authorized_mask_multi(t))
     row_masks = [mask_cache[t] for t in role_sets]
-    role_bits = np.array([roles_bitmask(t) for t in role_sets], np.uint32)
+    # (B,) uint32 single-word rows, or (B, W) packed word rows past 32 roles
+    # (exact either way — no role aliasing); row selection `role_bits[rows]`
+    # works identically for both layouts
+    role_bits = store.role_mask_rows(role_sets)
     stats_rows = [SearchStats() for _ in range(b)]
 
     topk = BatchTopK(b, kmax, ks=ks)

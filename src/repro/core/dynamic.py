@@ -35,7 +35,7 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from .api import (MaskedEngine, MutableEngine, Query, SearchResult,
-                  roles_bitmask)
+                  roles_word_mask)
 from .policy import AccessPolicy, Role, RoleSet
 from .queryplan import Plan, build_all_plans
 from .store import VectorStore
@@ -109,16 +109,30 @@ class DynamicStore:
         self.store.leftover_ids[b] = ids[keep]
         self.store.leftover_vectors[b] = self.store.leftover_vectors[b][keep]
 
+    @staticmethod
+    def _auth_row(eng, tau: RoleSet):
+        """The auth-mask row for role combination ``tau`` in the layout of
+        ``eng.auth_bits``: a uint32 scalar for single-word engines, a ``(W,)``
+        word array for multi-word ones (DESIGN.md §Role Masks).  A role that
+        does not fit the engine's mask width is a hard error — never an
+        aliased bit."""
+        if eng.auth_bits.ndim == 1:
+            return roles_word_mask(tau, width=1)[0]
+        return roles_word_mask(tau, width=eng.auth_bits.shape[1])
+
     def _engine_with(self, eng, vid: int, vec: np.ndarray, tau: RoleSet):
         """Rebuild a non-mutable engine with one extra row.  MaskedEngine
-        rebuilds carry per-vector auth bits: existing rows keep theirs, the
-        new row's bits come from its role combination ``tau``."""
+        rebuilds carry per-vector auth mask words: existing rows keep
+        theirs, the new row's words come from its role combination ``tau``."""
         data = np.vstack([eng.data, vec[None]])
         ids = np.append(eng.ids, np.int64(vid))
         if isinstance(eng, MaskedEngine):
-            auth = np.append(eng.auth_bits,
-                             roles_bitmask(tau)).astype(np.uint32)
-            return type(eng)(data, ids=ids, auth_bits=auth,
+            row = self._auth_row(eng, tau)
+            auth = (np.append(eng.auth_bits, row)
+                    if eng.auth_bits.ndim == 1
+                    else np.vstack([eng.auth_bits, row[None]]))
+            return type(eng)(data, ids=ids,
+                             auth_bits=auth.astype(np.uint32),
                              config=eng.config)
         return type(eng)(data, ids=ids)
 
@@ -160,7 +174,10 @@ class DynamicStore:
         for key in nodes:
             eng = self.store.engines[key]
             if isinstance(eng, MutableEngine):     # HNSW native incremental
-                eng.insert(vid, vec)
+                if isinstance(eng, MaskedEngine):  # auth words ride along
+                    eng.insert(vid, vec, auth_bits=self._auth_row(eng, tau))
+                else:
+                    eng.insert(vid, vec)
             else:                                  # exact/scan: rebuild
                 self.store.engines[key] = self._engine_with(eng, vid, vec,
                                                             tau)
@@ -217,12 +234,17 @@ class DynamicStore:
             eng = self.store.engines[key]
             if isinstance(eng, MutableEngine):
                 eng.insert(vid, vec)       # clears the tombstone mark too
+                if isinstance(eng, MaskedEngine):
+                    # refresh the (possibly pre-existing) row's auth words
+                    # so the in-kernel filter tracks new_tau
+                    eng.auth_bits[eng.ids == np.int64(vid)] = \
+                        self._auth_row(eng, new_tau)
             elif vid in set(int(i) for i in eng.ids):
                 # old and new block share this container: refresh the row's
-                # auth bits in place so the in-kernel filter tracks new_tau
+                # auth words in place so the in-kernel filter tracks new_tau
                 if isinstance(eng, MaskedEngine):
                     eng.auth_bits[eng.ids == np.int64(vid)] = \
-                        roles_bitmask(new_tau)
+                        self._auth_row(eng, new_tau)
             else:
                 self.store.engines[key] = self._engine_with(eng, vid, vec,
                                                             new_tau)

@@ -19,6 +19,45 @@ import numpy as np
 Role = int
 RoleSet = FrozenSet[Role]
 
+# Packed auth-mask word size.  The in-kernel authorization filter carries
+# uint32 words; a role universe wider than one word uses W = ceil(n_roles/32)
+# packed words per vector / per query row (DESIGN.md §Role Masks).
+MASK_WORD_BITS = 32
+
+
+def mask_words(n_roles: int) -> int:
+    """Auth-mask width in uint32 words for a role universe of ``n_roles``."""
+    return max(1, -(-int(n_roles) // MASK_WORD_BITS))
+
+
+def roles_word_mask(roles: Sequence[Role], width: int) -> np.ndarray:
+    """Exact ``(width,)`` uint32 word-array mask for a role set.
+
+    Role ``r`` sets bit ``r % 32`` of word ``r // 32``.  A role that does not
+    fit the given width is a hard error — masks never alias (the silent
+    ``1 << (r % 32)`` wraparound this replaces made role 33 alias role 1).
+    """
+    out = np.zeros(int(width), dtype=np.uint32)
+    for r in roles:
+        r = int(r)
+        if not 0 <= r < width * MASK_WORD_BITS:
+            raise ValueError(
+                f"role {r} does not fit a {width}-word auth mask "
+                f"(max role {width * MASK_WORD_BITS - 1}); widen the mask "
+                f"instead of aliasing")
+        out[r // MASK_WORD_BITS] |= np.uint32(1) << np.uint32(
+            r % MASK_WORD_BITS)
+    return out
+
+
+def roles_kernel_mask(roles: Sequence[Role], n_roles: int):
+    """In-kernel filter operand for one role set: a ``np.uint32`` scalar when
+    the role universe fits one word (the kernel's single-word fast path),
+    else a ``(W,)`` uint32 word array."""
+    w = mask_words(n_roles)
+    words = roles_word_mask(roles, width=w)
+    return np.uint32(words[0]) if w == 1 else words
+
 
 @dataclasses.dataclass(frozen=True)
 class AccessPolicy:
@@ -86,16 +125,38 @@ class AccessPolicy:
         return mask
 
     def role_bitmask(self, max_roles: int = 64) -> np.ndarray:
-        """Per-vector uint64 role bitmask (roles >= ``max_roles`` hash-folded).
+        """Legacy per-vector single-word uint64 role bitmask.
 
-        Used by the TPU ScoreScan engine to filter authorization in-kernel.
+        Only valid when the role universe fits ``max_roles`` bits; a wider
+        universe is a hard error (the silent ``r % max_roles`` fold this
+        replaces made role 33 alias role 1 in-kernel).  Wide universes use
+        :meth:`role_words` instead.
         """
+        if self.n_roles > max_roles:
+            raise ValueError(
+                f"n_roles={self.n_roles} does not fit a {max_roles}-bit "
+                f"mask; use role_words() (multi-word auth masks)")
         out = np.zeros(self.n_vectors, dtype=np.uint64)
         for b, tau in enumerate(self.block_roles):
             bits = np.uint64(0)
             for r in tau:
-                bits |= np.uint64(1) << np.uint64(r % max_roles)
+                bits |= np.uint64(1) << np.uint64(r)
             out[self.block_members[b]] = bits
+        return out
+
+    def role_words(self) -> np.ndarray:
+        """Exact per-vector packed auth words: ``(n_vectors, W)`` uint32 with
+        ``W = ceil(n_roles / 32)`` — the multi-word mask the ScoreScan engine
+        filters on in-kernel (DESIGN.md §Role Masks).  Works for any role
+        universe width; no aliasing."""
+        w = mask_words(self.n_roles)
+        # sized to the max id like authorized_mask: dynamic stores (App. I)
+        # tombstone deletions, so live ids can exceed the live-vector count
+        top = max((int(m.max()) + 1 for m in self.block_members if len(m)),
+                  default=0)
+        out = np.zeros((max(self.n_vectors, top), w), dtype=np.uint32)
+        for b, tau in enumerate(self.block_roles):
+            out[self.block_members[b]] = roles_word_mask(tau, width=w)
         return out
 
     def oracle_storage(self) -> int:

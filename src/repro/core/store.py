@@ -22,7 +22,8 @@ import numpy as np
 from ..ann.exact import ExactIndex
 from ..ann.hnsw import HNSWIndex
 from .api import (DEFAULT_MIN_PACKED_BATCH, Query, QueryLike, SearchResult,
-                  SearchStats, as_queries, supports_batch)
+                  SearchStats, as_queries, mask_words, roles_kernel_mask,
+                  roles_word_mask, supports_batch)
 from .lattice import Lattice, NodeKey
 from .policy import AccessPolicy, Role
 from .queryplan import Plan
@@ -33,6 +34,17 @@ EngineFactory = Callable[[np.ndarray, np.ndarray], object]
 
 def hnsw_factory(M: int = 16, efc: int = 100, seed: int = 0) -> EngineFactory:
     return lambda data, ids: HNSWIndex(data, ids=ids, M=M, efc=efc, seed=seed)
+
+
+def hnsw_masked_factory(policy, M: int = 16, efc: int = 100,
+                        seed: int = 0) -> EngineFactory:
+    """HNSW engines carrying per-vector auth mask words from the policy
+    (single-word up to 32 roles, multi-word beyond — DESIGN.md §Role Masks),
+    so they satisfy the ``MaskedEngine`` protocol like ScoreScan."""
+    from ..ann.scorescan import policy_auth_words
+    bits = policy_auth_words(policy)
+    return lambda data, ids: HNSWIndex(data, ids=ids, M=M, efc=efc,
+                                       seed=seed, auth_bits=bits[ids])
 
 
 def exact_factory() -> EngineFactory:
@@ -66,6 +78,28 @@ class VectorStore:
         for r in roles:
             mask |= self.authorized_mask(r)
         return mask
+
+    # --------------------------------------------------------- role masks
+    @property
+    def mask_width(self) -> int:
+        """In-kernel auth-mask width in packed uint32 words
+        (``W = ceil(n_roles/32)``; 1 = the single-word fast path)."""
+        return mask_words(self.policy.n_roles)
+
+    def kernel_role_mask(self, roles: Sequence[Role]):
+        """In-kernel filter operand for one role set: ``np.uint32`` scalar
+        when the store's role universe fits one word, else a ``(W,)`` uint32
+        word array (exact — roles never alias)."""
+        return roles_kernel_mask(roles, self.policy.n_roles)
+
+    def role_mask_rows(self, role_sets: Sequence[Sequence[Role]]
+                       ) -> np.ndarray:
+        """Per-query in-kernel role filter rows for a batch: ``(B,)`` uint32
+        when the role universe fits one word, else ``(B, W)`` word rows —
+        the layout ``search_masked_batch`` threads into one launch."""
+        w = self.mask_width
+        rows = np.stack([roles_word_mask(t, width=w) for t in role_sets])
+        return rows[:, 0] if w == 1 else rows
 
     def invalidate_caches(self) -> None:
         """Drop every derived structure that depends on policy/plan/leftover
@@ -160,25 +194,22 @@ class VectorStore:
         total, auth = self.node_total_and_auth(key, mask)
         return auth == total
 
-    def pack_leftover_shard(self, max_roles: int = 32,
-                            config: Optional[object] = None):
+    def pack_leftover_shard(self, config: Optional[object] = None):
         """Build (once) the packed leftover shard: every leftover block
         concatenated into one auth-masked ScoreScan index, so a micro-batch's
         leftover phase is a single ``l2_topk`` launch instead of one scan +
         merge per block (DESIGN.md §Continuous Batching).
 
-        Returns the shard, or ``None`` when there are no leftovers or when
-        ``n_roles > max_roles`` (role bits would alias in-kernel, which can
-        crowd authorized candidates out of the shard-wide top-k; the
-        per-block scan path stays exact, so callers fall back to it).
+        Returns the shard, or ``None`` when there are no leftovers.  Role
+        universes of any width pack exactly — the shard's auth masks are
+        multi-word past 32 roles (DESIGN.md §Role Masks), so the former
+        ``n_roles <= 32`` refusal is gone.
         """
         if self.leftover_shard is None:
-            if self.policy.n_roles > max_roles:
-                return None
             from ..ann.scorescan import pack_leftover_shard
             self.leftover_shard = pack_leftover_shard(
                 self.leftover_vectors, self.leftover_ids, self.policy,
-                max_roles=max_roles, config=config)
+                config=config)
         return self.leftover_shard
 
     def stored_vectors(self) -> int:

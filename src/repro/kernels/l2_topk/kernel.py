@@ -3,9 +3,12 @@
 This is the compute hot-spot of the TPU-native ScoreScan engine (DESIGN.md
 §3): each lattice node's vectors are streamed HBM→VMEM in (BN, d) tiles, the
 MXU computes the query-tile × db-tile distance block, authorization and the
-coordinated-search bound are applied *in-kernel* — both as per-query (BQ, 1)
-columns, so one launch serves a batch of queries with distinct roles and
-distinct bounds (DESIGN.md §Batched Execution) — and a per-query running
+coordinated-search bound are applied *in-kernel* — per-query (BQ, W) role
+words against (W, BN) db auth words (W = ceil(n_roles/32) packed uint32
+words, statically unrolled; W=1 is the original single-word compare) and a
+per-query (BQ, 1) bound column, so one launch serves a batch of queries
+with distinct roles and distinct bounds (DESIGN.md §Batched Execution,
+§Role Masks) — and a per-query running
 top-k is maintained across the sequential db-tile grid dimension in the
 revisited output block (classic Pallas reduction pattern).
 
@@ -54,7 +57,8 @@ def _extract_topk(dist, ids, k: int, kpad: int):
 def _l2_topk_kernel(n_total_ref,
                     q_ref, qn_ref, role_mask_ref, bound_ref,
                     db_ref, dbn_ref, auth_ref,
-                    out_d_ref, out_i_ref, *, k: int, kpad: int, bn: int):
+                    out_d_ref, out_i_ref, *, k: int, kpad: int, bn: int,
+                    n_words: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -72,8 +76,14 @@ def _l2_topk_kernel(n_total_ref,
 
     bq = q.shape[0]
     col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
-    # per-query role bits / bounds: (BQ, 1) columns broadcast over the tile
-    auth = (auth_ref[...] & role_mask_ref[...]) != 0           # (BQ, BN)
+    # per-query role words / bounds broadcast over the tile: auth is
+    # (n_words, BN) db words, role_mask is (BQ, n_words) query words, and a
+    # vector is authorized when ANY word intersects.  n_words is static, so
+    # the word loop unrolls; n_words == 1 is exactly the old single-word
+    # compare (one (1, BN) & (BQ, 1) broadcast).
+    auth = (auth_ref[0:1, :] & role_mask_ref[:, 0:1]) != 0     # (BQ, BN)
+    for w in range(1, n_words):
+        auth |= (auth_ref[w:w + 1, :] & role_mask_ref[:, w:w + 1]) != 0
     valid = auth & (col < n_total_ref[0, 0]) & (dist < bound_ref[...])
     dist = jnp.where(valid, dist, INF)
 
@@ -90,27 +100,31 @@ def _l2_topk_kernel(n_total_ref,
 
 @functools.partial(jax.jit, static_argnames=("k", "kpad", "bq", "bn",
                                              "interpret"))
-def l2_topk_pallas(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
+def l2_topk_pallas(queries: jax.Array, db: jax.Array, auth_words: jax.Array,
                    role_mask: jax.Array, bound: jax.Array, n_total: int,
                    k: int, kpad: int = 128, bq: int = 8, bn: int = 512,
                    interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
     """Launch the kernel on padded operands (see ops.l2_topk for padding).
 
-    ``role_mask`` and ``bound`` are (B, 1) per-query columns — the wrapper
-    broadcasts scalars before the call — tiled along the query grid axis like
-    the query norms, so a batch of queries with distinct roles and distinct
+    ``auth_words`` is the (W, N) word-major per-vector auth mask and
+    ``role_mask`` the (B, W) per-query word rows (W = 1 reproduces the
+    original single-word operands bit-exactly); ``bound`` is a (B, 1)
+    per-query column.  All are tiled along the grid axes like the query/db
+    norms, so a batch of queries with distinct roles and distinct
     coordinated-search bounds shares one launch.
     """
     b, d = queries.shape
     n = db.shape[0]
+    w = auth_words.shape[0]
     assert b % bq == 0 and n % bn == 0, (b, n, bq, bn)
-    assert role_mask.shape == (b, 1) and bound.shape == (b, 1)
+    assert auth_words.shape == (w, n)
+    assert role_mask.shape == (b, w) and bound.shape == (b, 1)
     qn = jnp.sum(queries * queries, axis=1, keepdims=True)       # (B, 1)
     dbn = jnp.sum(db * db, axis=1)[None, :]                      # (1, N)
-    auth2 = auth_bits[None, :]                                   # (1, N)
     n_total2 = jnp.asarray(n_total, jnp.int32).reshape(1, 1)
     grid = (b // bq, n // bn)
-    kernel = functools.partial(_l2_topk_kernel, k=k, kpad=kpad, bn=bn)
+    kernel = functools.partial(_l2_topk_kernel, k=k, kpad=kpad, bn=bn,
+                               n_words=w)
     out_d, out_i = pl.pallas_call(
         kernel,
         grid=grid,
@@ -118,11 +132,11 @@ def l2_topk_pallas(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),           # n_total
             pl.BlockSpec((bq, d), lambda i, j: (i, 0)),          # queries
             pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),          # |q|^2
-            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),          # role bits
+            pl.BlockSpec((bq, w), lambda i, j: (i, 0)),          # role words
             pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),          # bounds
             pl.BlockSpec((bn, d), lambda i, j: (j, 0)),          # db tile
             pl.BlockSpec((1, bn), lambda i, j: (0, j)),          # |v|^2 tile
-            pl.BlockSpec((1, bn), lambda i, j: (0, j)),          # auth tile
+            pl.BlockSpec((w, bn), lambda i, j: (0, j)),          # auth words
         ],
         out_specs=[
             pl.BlockSpec((bq, kpad), lambda i, j: (i, 0)),       # revisited
@@ -133,5 +147,5 @@ def l2_topk_pallas(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
             jax.ShapeDtypeStruct((b, kpad), jnp.int32),
         ],
         interpret=interpret,
-    )(n_total2, queries, qn, role_mask, bound, db, dbn, auth2)
+    )(n_total2, queries, qn, role_mask, bound, db, dbn, auth_words)
     return out_d[:, :k], out_i[:, :k]

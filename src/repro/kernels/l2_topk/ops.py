@@ -1,9 +1,17 @@
 """jit'd public wrapper for the authorized L2 top-k scan kernel.
 
 Handles padding (queries to BQ, db to BN, d to 128 lanes), masks padded
-database rows via the in-kernel validity predicate (auth bit 0), and exposes
-an ``interpret`` switch so the kernel body runs in Python on CPU for
-validation while targeting TPU VMEM tiling in production.
+database rows via the in-kernel validity predicate (all-zero auth words) and
+padded query rows via all-zero role masks (+inf bounds), and exposes an
+``interpret`` switch so the kernel body runs in Python on CPU for validation
+while targeting TPU VMEM tiling in production.
+
+Auth masks are single-word (``(N,)`` + scalar/``(B,)`` role mask — role
+universes up to 32 roles, the original layout) or multi-word (``(N, W)``
+packed uint32 words + ``(W,)``/``(B, W)`` role masks, W = ceil(n_roles/32));
+see DESIGN.md §Role Masks.  W == 1 operands take exactly the original
+single-word kernel path — same block shapes, same compare — so existing
+perf baselines hold.
 """
 from __future__ import annotations
 
@@ -16,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .kernel import l2_topk_pallas
-from .ref import l2_topk_ref
+from .ref import l2_topk_ref, normalize_masks
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,9 +54,10 @@ def l2_topk(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
     Args:
       queries: (B, d) float32.
       db: (N, d) float32 node shard.
-      auth_bits: (N,) uint32 role bitmask per vector.
-      role_mask: uint32 bitmask of the querying role(s) — scalar, or (B,)
-        with one bitmask per query (batched multi-role execution).
+      auth_bits: (N,) uint32 single-word role masks, or (N, W) packed
+        uint32 words for role universes wider than 32 roles.
+      role_mask: querying-role mask — scalar uint32 or (B,) per query for
+        single-word masks; (W,) shared or (B, W) per query for multi-word.
       k: neighbours to return (k <= config.kpad).
       bound: optional float32 coordinated-search global k-th distance;
         candidates at or beyond it are pruned in-kernel.  Scalar, or (B,)
@@ -62,18 +71,20 @@ def l2_topk(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
     n = db.shape[0]
     if bound is None:
         bound = jnp.float32(jnp.inf)
+    auth, mask, w = normalize_masks(auth_bits, role_mask)
     qp = _pad_to(queries.astype(jnp.float32), config.bq, 0)
     qp = _pad_to(qp, config.lane, 1)
-    # padded query rows carry role bits 0 (nothing authorized) and bound +inf
-    rp = _pad_to(jnp.broadcast_to(
-        jnp.asarray(role_mask, jnp.uint32).reshape(-1), (b,))[:, None],
-        config.bq, 0)
+    # padded query rows carry all-zero role masks (nothing authorized) and
+    # bound +inf
+    rp = _pad_to(jnp.broadcast_to(mask, (b, w)), config.bq, 0)
     bp = _pad_to(jnp.broadcast_to(
         jnp.asarray(bound, jnp.float32).reshape(-1), (b,))[:, None],
         config.bq, 0, value=jnp.inf)
     dbp = _pad_to(db.astype(jnp.float32), config.bn, 0)
     dbp = _pad_to(dbp, config.lane, 1)
-    ap = _pad_to(auth_bits.astype(jnp.uint32), config.bn, 0)  # pad rows: bit 0
+    # padded db rows carry all-zero auth words; word-major (W, N) layout so
+    # each word is a contiguous lane row for the kernel's auth tile
+    ap = _pad_to(auth.T, config.bn, 1)
     out_d, out_i = l2_topk_pallas(
         qp, dbp, ap, rp, bp, n, k,
         kpad=config.kpad, bq=config.bq, bn=config.bn,
@@ -83,6 +94,5 @@ def l2_topk(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
 
 def l2_topk_oracle(queries, db, auth_bits, role_mask, k, bound=None):
     bound = jnp.inf if bound is None else bound
-    return l2_topk_ref(queries, db, auth_bits,
-                       jnp.asarray(role_mask, jnp.uint32),
+    return l2_topk_ref(queries, db, auth_bits, role_mask,
                        jnp.asarray(bound, jnp.float32), k)

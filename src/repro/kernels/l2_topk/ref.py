@@ -2,16 +2,22 @@
 
 Semantics (shared with the Pallas kernel):
   * distance = ||q - v||^2 over the database,
-  * a vector is a candidate iff (auth_bits & role_mask) != 0 AND its distance
-    is strictly below ``bound`` (the coordinated-search global k-th distance;
-    +inf disables the bound),
+  * a vector is a candidate iff its auth mask intersects the query's role
+    mask in ANY packed word AND its distance is strictly below ``bound``
+    (the coordinated-search global k-th distance; +inf disables the bound),
   * non-candidates get distance +inf and id -1,
   * ties broken toward the smaller database id (deterministic).
 
-``role_mask`` and ``bound`` may each be a scalar (shared by every query) or a
-``(B,)`` vector (one value per query row) — the batched execution engine
-(DESIGN.md §Batched Execution) threads per-query coordinated-search bounds and
-per-query role bitmasks through a single kernel launch.
+Auth masks come in two layouts (DESIGN.md §Role Masks):
+  * single word (role universes up to 32 roles): ``auth_bits`` is ``(N,)``
+    and ``role_mask`` a scalar or ``(B,)`` vector — the original layout,
+  * multi-word (W = ceil(n_roles/32) packed uint32 words): ``auth_bits`` is
+    ``(N, W)`` and ``role_mask`` ``(W,)`` (shared by every query) or
+    ``(B, W)`` (one word row per query).
+
+``bound`` may be a scalar or ``(B,)`` — the batched execution engine
+(DESIGN.md §Batched Execution) threads per-query coordinated-search bounds
+and per-query role masks through a single kernel launch.
 """
 from __future__ import annotations
 
@@ -27,6 +33,37 @@ def _per_query(x, dtype) -> jax.Array:
     return x[:, None]                              # broadcasts over (B, N)
 
 
+def normalize_masks(auth_bits, role_mask):
+    """Common (N, W) auth / (·, W) role-mask normalization for ref + ops.
+
+    Returns ``(auth (N, W) uint32, mask (B'|1, W) uint32, W)``.  Single-word
+    operands keep their legacy forms: ``(N,)`` auth with a scalar or ``(B,)``
+    mask.  For ``W > 1`` the mask must carry all W words — ``(W,)`` shared or
+    ``(B, W)`` per query; a bare scalar/(B,) would silently drop roles >= 32,
+    so it is rejected.
+    """
+    auth = jnp.asarray(auth_bits, jnp.uint32)
+    if auth.ndim == 1:
+        auth = auth[:, None]                                     # (N, 1)
+    w = auth.shape[1]
+    mask = jnp.asarray(role_mask, jnp.uint32)
+    if w == 1:
+        mask = mask.reshape(-1)[:, None]                         # (B'|1, 1)
+    elif mask.ndim == 1:
+        if mask.shape[0] != w:
+            raise ValueError(
+                f"role_mask must carry all {w} mask words: got shape "
+                f"{mask.shape} (per-query masks are (B, {w}))")
+        mask = mask[None, :]                                     # (1, W)
+    elif mask.ndim == 2 and mask.shape[1] == w:
+        pass                                                     # (B, W)
+    else:
+        raise ValueError(
+            f"role_mask shape {mask.shape} incompatible with {w}-word "
+            f"auth masks")
+    return auth, mask, w
+
+
 def l2_topk_ref(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
                 role_mask: jax.Array, bound: jax.Array, k: int):
     """Reference top-k.
@@ -34,8 +71,9 @@ def l2_topk_ref(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
     Args:
       queries: (B, d) float32.
       db: (N, d) float32.
-      auth_bits: (N,) uint32 per-vector role bitmask.
-      role_mask: uint32 querying-role bit(s) — scalar or (B,) per query.
+      auth_bits: (N,) uint32 single-word masks, or (N, W) packed words.
+      role_mask: querying-role mask — scalar or (B,) single-word, or
+        (W,) / (B, W) word rows (see module docstring).
       bound: float32 global k-th distance bound (inf = no bound) — scalar or
         (B,) per query.
       k: number of neighbours.
@@ -48,7 +86,10 @@ def l2_topk_ref(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
     qn = jnp.sum(queries * queries, axis=1, keepdims=True)      # (B, 1)
     dn = jnp.sum(db * db, axis=1)[None, :]                      # (1, N)
     dist = qn + dn - 2.0 * queries @ db.T                       # (B, N)
-    ok = (auth_bits[None, :] & _per_query(role_mask, jnp.uint32)) != 0
+    auth, mask, _ = normalize_masks(auth_bits, role_mask)
+    # (B', N, W) word intersections -> any-word OR; W == 1 reduces to the
+    # original single-word (auth & mask) != 0 compare
+    ok = ((auth[None, :, :] & mask[:, None, :]) != 0).any(axis=-1)
     dist = jnp.where(ok, dist, INF)
     dist = jnp.where(dist < _per_query(bound, jnp.float32), dist, INF)
     # tie-break toward smaller id: sort by (dist, id) lexicographically

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_smoke_config
-from ..core import (HNSWCostModel, Query, build_effveda,
+from ..core import (BatchEngine, HNSWCostModel, Query, build_effveda,
                     build_vector_storage, exact_factory, SearchStats)
 from ..data import make_retrieval_dataset
 from ..models.config import ModelConfig
@@ -138,6 +138,52 @@ class RAGServer:
         t_generate = time.time() - t0
         return {"retrieved": retrieved, "tokens": out_tokens,
                 "t_retrieval_s": t_retrieval, "t_generate_s": t_generate}
+
+
+def warm_batch_shapes(store, sizes: Sequence[int] = (1, 8, 16, 24, 32),
+                      k: int = 10) -> int:
+    """Pre-trace the ``l2_topk`` jit cache for every padded query-tile
+    bucket a serving run can hit.
+
+    Query batches pad to multiples of the kernel's ``bq`` tile, so each
+    engine (lattice nodes + the packed leftover shard, when built) compiles
+    one trace per *padded* bucket — ``sizes`` that land in the same bucket
+    (e.g. 1 and 8 at bq=8) are deduplicated, since an interpret-mode warm
+    call costs a real O(N) scan per engine.  Scheduler batch compositions are
+    timing-dependent, so a cold bucket means a mid-serving recompile that
+    pollutes p99 — warm them all up front.  The warm-up role masks come
+    from ``store.role_mask_rows``, so multi-word stores (> 32 roles,
+    DESIGN.md §Role Masks) trace the real ``(B, W)`` operand shapes — a
+    hand-rolled single-word warm-up would compile the wrong signatures and
+    leave every real launch cold.  Returns the number of engine×bucket
+    warm calls issued.
+    """
+    engines = [e for e in store.engines.values()
+               if isinstance(e, BatchEngine) and len(e)]
+    shard = store.leftover_shard
+    if shard is not None and len(shard):
+        engines.append(shard)
+    if not engines:
+        return 0
+
+    def _buckets(eng):
+        bq = getattr(getattr(eng, "config", None), "bq", 8)
+        return sorted({-(-int(s) // bq) * bq for s in sizes})
+
+    per_engine = [(eng, _buckets(eng)) for eng in engines]
+    d = store.data.shape[1]
+    rng = np.random.default_rng(0)
+    cap = max(b for _, bks in per_engine for b in bks)
+    base = np.ascontiguousarray(
+        rng.standard_normal((cap, d)).astype(np.float32))
+    calls = 0
+    for eng, buckets in per_engine:
+        for b in buckets:
+            masks = store.role_mask_rows([(0,)] * b)
+            bounds = np.full(b, np.inf, np.float32)
+            eng.search_masked_batch(base[:b], k, masks, bounds=bounds)
+            calls += 1
+    return calls
 
 
 def build_demo_server(arch: str = "smollm-360m", n_vectors: int = 4000,

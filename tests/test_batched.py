@@ -218,12 +218,31 @@ def test_leftover_visits_counted_once_per_row_block(impure_store,
             assert {v for _, v in got[i]} == {v for _, v in want[i]}
 
 
-def test_packed_shard_refused_when_roles_alias(impure_store):
-    """n_roles > max_roles would alias role bits in-kernel: no shard."""
-    import dataclasses as dc
-    clone = dc.replace(impure_store, leftover_shard=None)
-    assert clone.pack_leftover_shard(max_roles=4) is None
-    assert clone.leftover_shard is None
+def test_packed_shard_many_roles_uses_word_masks():
+    """n_roles > 32 packs exactly with multi-word auth masks (the former
+    single-word refusal is gone): packed results match per-block results
+    and the sequential reference on a 40-role store."""
+    from repro.core import generate_policy
+    policy = generate_policy(n_vectors=1200, n_roles=40, n_permissions=90,
+                             seed=12)
+    rng = np.random.default_rng(13)
+    vecs = rng.standard_normal((policy.n_vectors, 16)).astype(np.float32)
+    cm = HNSWCostModel(lam_threshold=80)
+    res = build_effveda(policy, cm, beta=1.1, k=10)
+    store = build_vector_storage(res, vecs,
+                                 engine_factory=scorescan_factory(policy))
+    shard = store.pack_leftover_shard()
+    assert shard is not None
+    assert shard.mask_width == 2                     # ceil(40/32)
+    assert shard.auth_bits.shape == (len(shard), 2)
+    qs, roles = _batch(store, policy, 8, seed=14)
+    roles = [33, 1, 39] + roles[3:]                  # word-boundary roles
+    packed = batched_search(store, qs, roles, 10, packed=True)
+    unpacked = batched_search(store, qs, roles, 10, packed=False)
+    for i, (q, r) in enumerate(zip(qs, roles)):
+        assert {v for _, v in packed[i]} == {v for _, v in unpacked[i]}, i
+        ref = coordinated_scan_search(store, q, r, 10)
+        assert {v for _, v in packed[i]} == {v for _, v in ref}, i
 
 
 def test_batch_topk_dedups_and_sorts():

@@ -1,7 +1,7 @@
 """Appendix I: inserts, deletes, grants/revocations without a rebuild —
 now routed through the unified ``store.search`` entry point, including the
 batched ScoreScan path, tombstone-aware over-fetch, fresh leftover blocks
-for unseen role combinations, and the n_roles > 32 packed-shard fallback."""
+for unseen role combinations, and n_roles > 32 multi-word auth masks."""
 import numpy as np
 import pytest
 
@@ -209,10 +209,11 @@ def test_unseen_role_combination_makes_fresh_leftover_block(scan_dyn):
     assert got[0][1] == vid
 
 
-def test_many_roles_packed_shard_fallback(small_vectors):
-    """n_roles > 32: the packed shard is refused (role bits would alias) and
-    the dynamic store's batched searches take the per-block leftover path —
-    mutations and parity must hold there too."""
+def test_many_roles_dynamic_store_multi_word_masks(small_vectors):
+    """n_roles > 32: auth masks go multi-word (W=2) end-to-end — the packed
+    shard now builds instead of refusing, mutations rebuild engines with
+    word arrays, and batched searches match the exact oracle for roles on
+    both sides of the 32-bit word boundary."""
     from repro.ann.scorescan import scorescan_factory
     policy = generate_policy(n_vectors=1000, n_roles=40, n_permissions=90,
                              seed=6)
@@ -222,7 +223,9 @@ def test_many_roles_packed_shard_fallback(small_vectors):
     res = build_effveda(policy, cm, beta=1.1, k=10)
     store = build_vector_storage(res, vecs,
                                  engine_factory=scorescan_factory(policy))
-    assert store.pack_leftover_shard() is None       # refused: would alias
+    assert store.mask_width == 2
+    shard = store.pack_leftover_shard()              # no more refusal
+    assert shard is not None and shard.mask_width == 2
     dyn = DynamicStore(store, cm)
     vid = dyn.insert(np.full(16, 3.0, np.float32), frozenset({35}))
     dyn.delete(int(policy.d_of_role(2)[0]))
@@ -232,7 +235,12 @@ def test_many_roles_packed_shard_fallback(small_vectors):
         got = [i for _, i in dyn.search(x, r, k=6)]
         assert got == _truth(dyn, x, r, 6)[:len(got)], r
         res_q = store.search(Query(vector=x, roles=(r,), k=6))[0]
-        assert res_q.path == "batched"               # per-block, no shard
+        assert res_q.path.startswith("batched")
+        # forcing the packed shard (rebuilt after the mutations) agrees
+        res_p = store.search(Query(vector=x, roles=(r,), k=6),
+                             packed=True)[0]
+        assert res_p.path == "batched+packed"
+        assert [i for _, i in res_p.hits] == [i for _, i in res_q.hits], r
     assert dyn.search(np.full(16, 3.0, np.float32), 35, k=1)[0][1] == vid
 
 

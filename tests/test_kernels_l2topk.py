@@ -159,6 +159,134 @@ def test_per_query_masks_with_k_exceeding_authorized():
     assert (i_[2] == -1).all()
 
 
+# ------------------------------------------------- multi-word auth masks
+def _word_mask(roles, W):
+    out = np.zeros(W, np.uint32)
+    for r in roles:
+        out[r // 32] |= np.uint32(1) << np.uint32(r % 32)
+    return out
+
+
+def _mw_case(B, N, d, k, W, seed=0, bound=None, cfg=None):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    auth = rng.integers(0, 2 ** 16, size=(N, W)).astype(np.uint32)
+    roles = rng.integers(0, 32 * W, size=B)
+    masks = np.stack([_word_mask([r], W) for r in roles])
+    dk, ik = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), masks, k,
+                     bound=bound, config=cfg or L2TopKConfig())
+    dr, ir = l2_topk_ref(jnp.array(q), jnp.array(db), jnp.array(auth),
+                         jnp.asarray(masks),
+                         jnp.float32(np.inf if bound is None else bound), k)
+    return (np.array(dk), np.array(ik), np.array(dr), np.array(ir),
+            auth, masks)
+
+
+@pytest.mark.parametrize("B,N,d,k,W", [
+    (3, 513, 17, 5, 2),      # unaligned everything, 64-role universe
+    (6, 700, 24, 8, 2),
+    (5, 300, 16, 6, 8),      # 256-role universe
+    (1, 100, 8, 1, 3),
+])
+def test_multi_word_matches_ref(B, N, d, k, W):
+    dk, ik, dr, ir, auth, masks = _mw_case(B, N, d, k, W)
+    assert (ik == ir).all()
+    finite = np.isfinite(dr)
+    np.testing.assert_allclose(dk[finite], dr[finite], rtol=1e-4, atol=1e-4)
+    # every hit authorized for ITS row's word mask
+    for row, m in zip(ik, masks):
+        for v in row[row >= 0]:
+            assert (auth[v] & m).any()
+
+
+def test_multi_word_padding_semantics():
+    """Padded db rows carry all-zero auth words and padded query rows
+    all-zero masks: results on unaligned operands equal the same search over
+    explicitly padded operands, and no padding row/id ever surfaces."""
+    rng = np.random.default_rng(20)
+    B, N, d, k, W = 5, 700, 24, 8, 2       # B % bq != 0, N % bn != 0
+    cfg = L2TopKConfig(bq=8, bn=512)
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    auth = rng.integers(1, 2 ** 16, size=(N, W)).astype(np.uint32)
+    masks = np.stack([_word_mask([r], W)
+                      for r in rng.integers(0, 32 * W, size=B)])
+    d1, i1 = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), masks, k,
+                     config=cfg)
+    i1 = np.array(i1)
+    assert (i1 < N).all()                  # no padded db id surfaces
+    # explicit padding with all-zero auth words / all-zero mask rows must
+    # reproduce the implicit padding bit-exactly
+    Npad, Bpad = 1024, 8
+    dbp = np.zeros((Npad, d), np.float32)
+    dbp[:N] = db
+    authp = np.zeros((Npad, W), np.uint32)   # zero words: never authorized
+    authp[:N] = auth
+    qp = np.zeros((Bpad, d), np.float32)
+    qp[:B] = q
+    maskp = np.zeros((Bpad, W), np.uint32)   # zero masks: nothing authorized
+    maskp[:B] = masks
+    d2, i2 = l2_topk(jnp.array(qp), jnp.array(dbp), jnp.array(authp), maskp,
+                     k, config=cfg)
+    assert (np.array(i2)[:B] == i1).all()
+    assert (np.array(i2)[B:] == -1).all()    # zero-mask rows return nothing
+    assert (np.array(d1) == np.array(d2)[:B]).all()
+
+
+def test_single_word_shapes_bit_exact():
+    """(N, 1) auth + (B, 1) masks must reproduce the legacy (N,) + (B,)
+    single-word kernel path bit-exactly (W == 1 dispatch)."""
+    rng = np.random.default_rng(21)
+    B, N, d, k = 6, 700, 24, 8
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    auth = rng.integers(0, 2 ** 16, size=N).astype(np.uint32)
+    masks = (np.uint32(1) << rng.integers(0, 16, size=B).astype(np.uint32))
+    d1, i1 = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), masks, k,
+                     bound=9.0)
+    d2, i2 = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth[:, None]),
+                     masks[:, None], k, bound=9.0)
+    assert (np.array(i1) == np.array(i2)).all()
+    assert (np.array(d1) == np.array(d2)).all()
+
+
+def test_word_boundary_roles_do_not_alias():
+    """Roles 31/32/33/63/64 in one batch: each row only sees vectors tagged
+    with its exact role — bit 33 must not admit role-1 vectors (the old
+    single-word `1 << (r % 32)` wraparound did exactly that)."""
+    roles = [1, 31, 32, 33, 63, 64]
+    W = 3
+    rng = np.random.default_rng(22)
+    B, N, d, k = len(roles), 300, 8, 10
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    vec_roles = np.asarray(roles)[rng.integers(0, len(roles), size=N)]
+    auth = np.stack([_word_mask([r], W) for r in vec_roles])
+    masks = np.stack([_word_mask([r], W) for r in roles])
+    d_, i_ = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), masks, k)
+    i_ = np.array(i_)
+    dr, ir = l2_topk_ref(jnp.array(q), jnp.array(db), jnp.array(auth),
+                         jnp.asarray(masks), jnp.float32(np.inf), k)
+    assert (i_ == np.array(ir)).all()
+    for row, r in zip(i_, roles):
+        got = row[row >= 0]
+        assert len(got)                      # every role has vectors here
+        assert (vec_roles[got] == r).all()   # and sees ONLY its own
+
+
+def test_scalar_mask_rejected_for_multi_word_auth():
+    """A bare scalar role mask cannot address roles >= 32: multi-word auth
+    requires all-W-words mask operands (hard error, never silent)."""
+    rng = np.random.default_rng(23)
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    db = rng.standard_normal((64, 8)).astype(np.float32)
+    auth = np.ones((64, 2), np.uint32)
+    with pytest.raises(ValueError):
+        l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth),
+                np.uint32(1), 5)
+
+
 def test_multi_role_mask():
     """A multi-role query ORs role bits — union semantics in-kernel."""
     rng = np.random.default_rng(5)
