@@ -471,6 +471,140 @@ def exp17_role_scaling(bc: BenchConfig):
              f"qps={Bk / dt:.1f}")
 
 
+def exp18_sharded_scaling(bc: BenchConfig):
+    """Sharded lattice execution: QPS vs device count × placement policy,
+    plus overlapping scheduler flushes (DESIGN.md §Sharded Execution).
+
+      * ``exp18_sharded/mesh{M}_{policy}`` — batched ``store.search``
+        (B=32) through a :class:`ShardedVectorStore` at mesh size M with
+        greedy cost bin-packing (``cost``) vs ``round_robin`` placement.
+        ``mesh1_cost`` is the degenerate single-device path (the exp15
+        engine) — the scaling denominator.  Recall is measured against the
+        brute-force authorized oracle (exact by construction; emitting it
+        gates the sharded path in CI via scripts/check_perf.py).
+      * ``exp18_overlap/mesh{M}_inflightN`` — closed-loop saturation
+        through the MicroBatchScheduler with N flushes allowed in flight:
+        N=2 overlaps flush dispatch with execution across the mesh's
+        per-device streams (``overlaps`` must be > 0 — the counter proves
+        the overlap machinery engages).
+
+    What CPU CI can and cannot measure (benchmarks/README.md#exp18): with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` the placement,
+    per-device pinning, concurrent dispatch, and bound-propagating merge
+    all execute for real — but XLA:CPU runs independent executions from a
+    single serialized queue (measured: two concurrent 2048² matmuls on two
+    forced host devices take the *sum* of their solo times; pmap is the
+    same), so interpret-mode wall-clock CANNOT show device speedup, only
+    the mesh machinery's bounded overhead.  The committed baseline
+    therefore gates each row against itself (sharded execution must not
+    get *slower*); wall-clock QPS scaling with device count is a real-TPU
+    measurement (ROADMAP).  The ``phys`` field records how many physical
+    devices backed the mesh.
+    """
+    import asyncio
+    import dataclasses as dc
+    import jax
+    from repro.ann.scorescan import scorescan_factory
+    from repro.core import Query, shard_store
+    from repro.launch.mesh import DeviceMesh
+    from repro.launch.scheduler import MicroBatchScheduler, ServeStats, \
+        serve_requests
+    from repro.launch.serve import warm_batch_shapes
+
+    # larger nodes than exp15's corpus: per-launch compute must dominate
+    # the host-side merge for device parallelism to show
+    sbc = dc.replace(bc, n_vectors=max(bc.n_vectors, 6000), dim=32,
+                     n_queries=max(bc.n_queries, 32), lam=min(bc.lam, 50))
+    ds = dataset(sbc)
+    cm = cost_model(sbc)
+    res = build_effveda(ds.policy, cm, beta=1.1, k=sbc.k)
+    base_store = build_vector_storage(
+        res, ds.vectors, engine_factory=scorescan_factory(ds.policy),
+        pack_leftovers=True)
+    total, B = 96, 32
+    idx = np.arange(total) % len(ds.queries)
+    qs = np.asarray(ds.queries, np.float32)[idx]
+    roles = [int(r) for r in np.asarray(ds.query_roles)[idx]]
+    qobjs = [Query(vector=qs[i], roles=(roles[i],), k=sbc.k)
+             for i in range(total)]
+    truths = truth_for(ds, sbc.k)
+
+    def rec(results):
+        return float(np.mean([metrics.recall_at_k(
+            [vid for _, vid in r], truths[i % len(ds.queries)], sbc.k)
+            for i, r in enumerate(results)]))
+
+    n_phys = len(jax.devices())
+    sharded = {}
+    for mesh_size in (1, 2):
+        for policy in (("cost",) if mesh_size == 1
+                       else ("cost", "round_robin")):
+            store = shard_store(base_store, DeviceMesh.host(mesh_size),
+                                placement_policy=policy)
+            sharded[(mesh_size, policy)] = store
+            warm_batch_shapes(store, sizes=(B,), k=sbc.k)
+            times = []
+            for rep in range(5):           # round 0 warms any residual jit
+                t0 = time.perf_counter()
+                results = []
+                for lo in range(0, total, B):
+                    results += [r.hits for r in store.search(
+                        qobjs[lo:lo + B], packed=True)]
+                if rep:
+                    times.append(time.perf_counter() - t0)
+            dt = min(times)
+            emit(f"exp18_sharded/mesh{mesh_size}_{policy}",
+                 dt / total * 1e6,
+                 f"qps={total / dt:.1f};recall={rec(results):.3f};"
+                 f"phys={min(n_phys, mesh_size)};"
+                 f"imbalance={store.placement.imbalance():.2f}")
+
+    # overlapping flushes: per-device streams let flush N run on devices
+    # flush N-1 is not using; max_inflight=1 is the serial baseline.
+    # Throughput is emitted as `sat_qps` (NOT `qps`): flush timing on a
+    # shared 2-core runner swings several-x between runs, so the hard gate
+    # covers recall + the overlap counters only — the same reasoning that
+    # keeps p50/p99 ungated in scripts/check_perf.py.
+    store = sharded[(2, "cost")]
+    for inflight in (1, 2):
+        best = None
+        for rep in range(3):
+            stats = ServeStats()
+
+            async def run():
+                sched = MicroBatchScheduler(store, max_batch=B,
+                                            max_wait_ms=2.0,
+                                            max_inflight=inflight,
+                                            stats=stats)
+                try:
+                    return await serve_requests(sched, qobjs)
+                finally:
+                    await sched.close()
+
+            t0 = time.perf_counter()
+            results = asyncio.run(run())
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[0]:
+                best = (dt, stats, results)
+        dt, stats, results = best
+        # hard-assert the overlap machinery engaged (check_perf.py only
+        # gates qps/recall fields, so a dead dispatch path must fail HERE,
+        # in the benchmark step, not slip through the gate)
+        if inflight > 1:
+            assert stats.overlap_flushes > 0 and stats.inflight_peak > 1, (
+                "max_inflight=2 produced no overlapping flushes — the "
+                "scheduler dispatch path regressed", stats.summary())
+        else:
+            assert stats.overlap_flushes == 0, stats.summary()
+        emit(f"exp18_overlap/mesh2_inflight{inflight}", dt / total * 1e6,
+             f"sat_qps={total / dt:.1f};p99={stats.p99_ms:.1f};"
+             f"overlaps={stats.overlap_flushes};"
+             f"inflight_peak={stats.inflight_peak};"
+             f"recall={rec([r.hits for r in results]):.3f}")
+    for store in sharded.values():
+        store.close()
+
+
 def exp14_multirole(bc: BenchConfig, suite: MethodSuite):
     """Figs 8a/8b: multi-role queries + global-fallback routing (the
     partitioning ↔ filtered-global crossover)."""

@@ -71,6 +71,7 @@ def main() -> None:
     go("exp15", lambda: E.exp15_batched_throughput(bc))
     go("exp16", lambda: E.exp16_continuous_batching(bc))
     go("exp17", lambda: E.exp17_role_scaling(bc))
+    go("exp18", lambda: E.exp18_sharded_scaling(bc))
 
     go("kernels", K.run_all)
 

@@ -42,3 +42,25 @@ print(f"all results authorized ✓  (purity={stats.purity:.2f}, "
 # 4. the same query as a different role sees different data ------------------
 other = coordinated_search(store, q, (role + 1) % ROLES, k=10, efs=50)
 print(f"role {(role + 1) % ROLES} sees: {[vid for _, vid in other]}")
+
+# 5. the typed entry point: one batch, mixed roles and ks --------------------
+from repro.core import Query
+batch = [Query(vector=q, roles=(role,), k=5),
+         Query(vector=q, roles=(role, (role + 1) % ROLES), k=3)]  # union
+for query, res in zip(batch, store.search(batch)):
+    print(f"roles {query.roles} k={query.k} -> {res.ids}  (path={res.path})")
+
+# 6. the same store on the TPU kernel engine, sharded across a mesh ----------
+# (interpret-mode Pallas on CPU; the identical call sites compile to the
+#  real kernel on TPU — see DESIGN.md §3 and §Sharded Execution)
+from repro.ann.scorescan import scorescan_factory
+from repro.launch.mesh import DeviceMesh
+kstore = build_vector_storage(result, vectors,
+                              engine_factory=scorescan_factory(policy))
+sharded = kstore.sharded(DeviceMesh.host(2))   # 2 slots (virtual on 1 device)
+sres = sharded.search(batch)
+assert [r.ids for r in sres] == [r.ids for r in store.search(batch)]
+print(f"sharded mesh: {sharded.mesh.describe()}, "
+      f"placement imbalance {sharded.placement.imbalance():.2f}, "
+      f"same authorized results ✓")
+sharded.close()

@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Docs link checker (CI): intra-repo markdown links must resolve.
+
+Scans the given markdown files (default: README.md, DESIGN.md,
+benchmarks/README.md) for ``[text](target)`` links and fails when
+
+  * a relative ``target`` path does not exist in the repo, or
+  * a ``target#anchor`` names a heading that does not exist in the target
+    file (GitHub anchor slugs: lowercase, punctuation stripped, spaces to
+    hyphens — so ``DESIGN.md#sharded-execution...`` must match a real
+    ``## §Sharded Execution ...`` heading).
+
+External links (http/https/mailto) are skipped — this gate is about the
+repo's own cross-references staying alive through refactors, not the
+internet.  Exit code 0 on success, 1 with a per-link report otherwise.
+
+Usage:
+  python scripts/check_docs_links.py [FILE.md ...]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Dict, List, Set
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+DEFAULT_FILES = ("README.md", "DESIGN.md", "benchmarks/README.md")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's markdown heading → anchor id transform."""
+    s = heading.strip().lower()
+    # drop markdown emphasis/code markers before slugging
+    s = re.sub(r"[`*_]", "", s)
+    # keep word chars, spaces and hyphens; drop everything else (§, —, :, .)
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def anchors_of(path: str, cache: Dict[str, Set[str]]) -> Set[str]:
+    if path not in cache:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        slugs: Set[str] = set()
+        counts: Dict[str, int] = {}
+        for m in HEADING_RE.finditer(text):
+            slug = github_slug(m.group(1))
+            n = counts.get(slug, 0)
+            counts[slug] = n + 1
+            slugs.add(slug if n == 0 else f"{slug}-{n}")
+        cache[path] = slugs
+    return cache[path]
+
+
+def check_file(md_path: str, cache: Dict[str, Set[str]]) -> List[str]:
+    errors: List[str] = []
+    base = os.path.dirname(os.path.abspath(md_path))
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            resolved = os.path.normpath(os.path.join(base, path_part))
+            if not os.path.exists(resolved):
+                errors.append(f"{md_path}: broken path link '{target}'")
+                continue
+        else:
+            resolved = os.path.abspath(md_path)     # same-file anchor
+        if anchor:
+            if os.path.isdir(resolved) or not resolved.endswith(".md"):
+                continue          # anchors only checked in markdown files
+            if anchor not in anchors_of(resolved, cache):
+                errors.append(
+                    f"{md_path}: anchor '#{anchor}' not found in "
+                    f"{os.path.relpath(resolved)}")
+    return errors
+
+
+def main() -> int:
+    files = sys.argv[1:] or [f for f in DEFAULT_FILES if os.path.exists(f)]
+    cache: Dict[str, Set[str]] = {}
+    errors: List[str] = []
+    checked = 0
+    for md in files:
+        if not os.path.exists(md):
+            errors.append(f"{md}: file not found")
+            continue
+        errors.extend(check_file(md, cache))
+        checked += 1
+    if errors:
+        print(f"DOCS LINK CHECK FAILED ({len(errors)} broken):",
+              file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print(f"docs link check passed: {checked} files, all intra-repo links "
+          f"resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,3 +1,6 @@
+"""QUARANTINED LM training scaffold (README.md "Repository layout"):
+checkpointing for the demo LM trainer.  Not part of the retrieval
+surface."""
 from .manager import CheckpointManager
 
 __all__ = ["CheckpointManager"]

@@ -1,3 +1,6 @@
+"""QUARANTINED LM training scaffold (README.md "Repository layout"):
+gradient-compression experiments for the demo LM trainer.  Not part of
+the retrieval surface."""
 from .compress import CompressionState, compress_grads, decompress_grads, ef_compress_update
 
 __all__ = ["CompressionState", "compress_grads", "decompress_grads",

@@ -9,6 +9,8 @@ Public API:
   Query / SearchResult / Engine protocols — the typed retrieval contract
                                        (DESIGN.md §Query API)
   VectorStore.search(queries)        — THE retrieval entry point
+  ShardedVectorStore / shard_store   — multi-device sharded execution
+                                       (DESIGN.md §Sharded Execution)
   coordinated_search / independent_search / routed_search — §6.2 reference
   batched_search                     — deprecated shim over store.search
   metrics                            — SA / QA / recall / purity
@@ -28,6 +30,8 @@ from .store import (VectorStore, build_vector_storage, build_oracle_store,
 from .coordinated import (coordinated_search, independent_search,
                           global_filtered_search, routed_search)
 from .batched import BatchTopK, batched_search, execute_queries
+from .sharded import (DeviceShard, Placement, ShardAssignment,
+                      ShardedVectorStore, place_shards, shard_store)
 from .dynamic import DynamicStore
 from . import metrics
 
@@ -46,5 +50,7 @@ __all__ = [
     "coordinated_search", "independent_search",
     "global_filtered_search", "routed_search", "metrics",
     "BatchTopK", "batched_search", "execute_queries",
+    "ShardedVectorStore", "DeviceShard", "Placement", "ShardAssignment",
+    "place_shards", "shard_store",
     "DynamicStore",
 ]

@@ -21,6 +21,9 @@ The entry point itself is ``VectorStore.search(queries)`` (core/store.py):
 it builds a plan cover for each query's role set, routes the whole batch
 through the batched engine when every node engine is a :class:`BatchEngine`,
 and falls back to per-query coordinated search otherwise.
+:class:`~repro.core.sharded.ShardedVectorStore` keeps the identical
+contract while executing across a device mesh (DESIGN.md §Sharded
+Execution).
 """
 from __future__ import annotations
 
@@ -43,7 +46,16 @@ DEFAULT_MIN_PACKED_BATCH = 16
 # --------------------------------------------------------------------- stats
 @dataclasses.dataclass
 class SearchStats:
-    """Per-query accounting used by Exp 9 (skip rate, efs savings)."""
+    """Per-query retrieval accounting (Exp 9: skip rate, efs savings).
+
+    ``indices_visited`` / ``data_touched`` / ``data_authorized_touched`` /
+    ``leftover_vectors_scanned`` are *deterministic*: they count logical
+    (row, node/block) visits and match across the sequential, batched, and
+    sharded engines for identical queries.  ``impure_visits`` /
+    ``phase2_skipped`` / ``efs_*`` depend on the visit schedule (bounds
+    tighten in execution order), so they may differ between engines —
+    see DESIGN.md §Batched Execution.
+    """
 
     impure_visits: int = 0
     phase2_skipped: int = 0
@@ -55,22 +67,30 @@ class SearchStats:
     data_authorized_touched: int = 0
 
     def merge(self, o: "SearchStats") -> None:
+        """Accumulate another query's counters into this one (field-wise
+        sum) — how serving layers aggregate a batch into one record."""
         for f in dataclasses.fields(self):
             setattr(self, f.name, getattr(self, f.name) + getattr(o, f.name))
 
     @property
     def skip_rate(self) -> float:
+        """Fraction of impure-node visit opportunities pruned by the
+        coordinated bound (paper Table 5)."""
         return (self.phase2_skipped / self.impure_visits
                 if self.impure_visits else 1.0)
 
     @property
     def efs_savings(self) -> float:
+        """Relative beam-width saving on impure nodes vs the worst case
+        (paper Table 6; beam engines only — scan engines report 0)."""
         if self.efs_worst_case <= 0:
             return 0.0
         return 1.0 - self.efs_used / self.efs_worst_case
 
     @property
     def purity(self) -> float:
+        """Fraction of touched vectors the querying role was authorized
+        for (paper Fig. 6b) — 1.0 means no wasted scanning."""
         if self.data_touched == 0:
             return 1.0
         return self.data_authorized_touched / self.data_touched
@@ -124,8 +144,10 @@ class SearchResult:
     Sequence-like over ``hits`` so call sites that consumed the old bare
     result lists (``for d, vid in res``) keep working unchanged.  ``path``
     names the execution strategy that produced the result:
-    ``"batched+packed"`` / ``"batched"`` (batched engine, packed vs per-block
-    leftovers) or ``"sequential"`` (per-query coordinated search).
+    ``"batched+packed"`` / ``"batched"`` (batched engine, packed vs
+    per-block leftovers), ``"sharded+packed"`` / ``"sharded"`` (the
+    multi-device engine, DESIGN.md §Sharded Execution), or
+    ``"sequential"`` (per-query coordinated search).
     """
 
     hits: List[Tuple[float, int]]
@@ -150,6 +172,8 @@ class SearchResult:
         return self.hits[i]
 
 
+#: What ``VectorStore.search`` / ``ShardedVectorStore.search`` accept: one
+#: :class:`Query` or any sequence of them (normalized by :func:`as_queries`).
 QueryLike = Union[Query, Sequence[Query]]
 
 

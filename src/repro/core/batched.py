@@ -156,6 +156,27 @@ def _filter_unauthorized(d: np.ndarray, ids: np.ndarray, rows: np.ndarray,
         ids[j] = np.where(ok, ids[j], -1)
 
 
+def _packed_leftover_rows(store: VectorStore, plans: Sequence[Plan],
+                          stats_rows: Sequence[SearchStats]) -> np.ndarray:
+    """Rows whose plan touches leftover blocks, with the logical per-(row,
+    plan-block) stats accounted — shared by the single-shard packed path
+    below and the per-device packed path in :mod:`~repro.core.sharded`.
+    Returns an int row-index array (possibly empty)."""
+    rows: List[int] = []
+    for qi, plan in enumerate(plans):
+        blocks = dict.fromkeys(plan.leftover_blocks)
+        if not blocks:
+            continue
+        rows.append(qi)
+        st = stats_rows[qi]
+        for b in blocks:
+            m = len(store.leftover_vectors.get(b, ()))
+            st.leftover_vectors_scanned += m
+            st.data_touched += m
+            st.data_authorized_touched += m
+    return np.asarray(rows, dtype=np.int64)
+
+
 def _scan_leftovers_packed(store: VectorStore, queries: np.ndarray,
                            plans: Sequence[Plan],
                            row_masks: Sequence[np.ndarray],
@@ -175,26 +196,66 @@ def _scan_leftovers_packed(store: VectorStore, queries: np.ndarray,
     (row, plan-block) visit is accounted once, exactly like the per-block
     scan path, regardless of what the shard physically touches.
     """
-    rows: List[int] = []
-    for qi, plan in enumerate(plans):
-        blocks = dict.fromkeys(plan.leftover_blocks)
-        if not blocks:
-            continue
-        rows.append(qi)
-        st = stats_rows[qi]
-        for b in blocks:
-            m = len(store.leftover_vectors.get(b, ()))
-            st.leftover_vectors_scanned += m
-            st.data_touched += m
-            st.data_authorized_touched += m
-    if not rows:
+    rows = _packed_leftover_rows(store, plans, stats_rows)
+    if not len(rows):
         return
-    rows = np.asarray(rows)
     d, ids = shard.search_masked_batch(queries[rows], topk.k, role_bits[rows])
     # defense in depth: the shard's word masks are exact at any n_roles
     # (multi-word past 32 roles), but the bool mask stays the ground truth
     _filter_unauthorized(d, ids, rows, row_masks)
     topk.push_rows(rows, d, ids)
+
+
+def _prepare_batch(store: VectorStore, queries: Sequence[Query]):
+    """Shared batch setup for the batched and sharded engines: stacked query
+    rows, per-row k (heterogeneous-k native), per-row plan covers, exact
+    authorized-union masks, in-kernel role-bit rows, and fresh per-row
+    stats.  Returns ``(qs, ks, kmax, role_sets, plans, row_masks, role_bits,
+    stats_rows)``."""
+    b = len(queries)
+    qs = np.ascontiguousarray(
+        np.stack([q.vector for q in queries]), dtype=np.float32)
+    ks = np.asarray([q.k for q in queries], dtype=np.int64)
+    kmax = int(ks.max())
+    role_sets = [q.roles for q in queries]
+    plans = [store.plan_for_roles(t) for t in role_sets]
+    mask_cache: Dict[Tuple[int, ...], np.ndarray] = {}
+    for t in role_sets:
+        if t not in mask_cache:
+            mask_cache[t] = (store.authorized_mask(t[0]) if len(t) == 1
+                             else store.authorized_mask_multi(t))
+    row_masks = [mask_cache[t] for t in role_sets]
+    # (B,) uint32 single-word rows, or (B, W) packed word rows past 32 roles
+    # (exact either way — no role aliasing); row selection `role_bits[rows]`
+    # works identically for both layouts
+    role_bits = store.role_mask_rows(role_sets)
+    stats_rows = [SearchStats() for _ in range(b)]
+    return qs, ks, kmax, role_sets, plans, row_masks, role_bits, stats_rows
+
+
+def _classify_waves(store: VectorStore, plans: Sequence[Plan],
+                    role_sets: Sequence[Tuple[int, ...]],
+                    row_masks: Sequence[np.ndarray],
+                    stats_rows: Sequence[SearchStats]):
+    """Invert plans into per-node row groups split by per-(row, node) purity
+    against each row's (multi-role) authorized mask.  Returns
+    ``(pure_rows, impure_rows, sizes_cache)`` where ``sizes_cache`` maps
+    ``(node key, role set) -> (total, auth)``.  Shared by the batched and
+    sharded engines."""
+    pure_rows: Dict = defaultdict(list)
+    impure_rows: Dict = defaultdict(list)
+    sizes_cache: Dict = {}           # (key, role set) -> (total, auth)
+    for qi, (plan, t) in enumerate(zip(plans, role_sets)):
+        for key in plan.nodes:
+            if key not in store.engines:
+                continue
+            if (key, t) not in sizes_cache:
+                sizes_cache[(key, t)] = store.node_total_and_auth(
+                    key, row_masks[qi])
+            total, auth = sizes_cache[(key, t)]
+            (pure_rows if auth == total else impure_rows)[key].append(qi)
+            stats_rows[qi].indices_visited += 1
+    return pure_rows, impure_rows, sizes_cache
 
 
 def execute_queries(store: VectorStore, queries: Sequence[Query], *,
@@ -219,23 +280,8 @@ def execute_queries(store: VectorStore, queries: Sequence[Query], *,
     ``coordinated_scan_search(store, q.vector, q.roles, q.k)``.
     """
     b = len(queries)
-    qs = np.ascontiguousarray(
-        np.stack([q.vector for q in queries]), dtype=np.float32)
-    ks = np.asarray([q.k for q in queries], dtype=np.int64)
-    kmax = int(ks.max())
-    role_sets = [q.roles for q in queries]
-    plans = [store.plan_for_roles(t) for t in role_sets]
-    mask_cache: Dict[Tuple[int, ...], np.ndarray] = {}
-    for t in role_sets:
-        if t not in mask_cache:
-            mask_cache[t] = (store.authorized_mask(t[0]) if len(t) == 1
-                             else store.authorized_mask_multi(t))
-    row_masks = [mask_cache[t] for t in role_sets]
-    # (B,) uint32 single-word rows, or (B, W) packed word rows past 32 roles
-    # (exact either way — no role aliasing); row selection `role_bits[rows]`
-    # works identically for both layouts
-    role_bits = store.role_mask_rows(role_sets)
-    stats_rows = [SearchStats() for _ in range(b)]
+    (qs, ks, kmax, role_sets, plans, row_masks, role_bits,
+     stats_rows) = _prepare_batch(store, queries)
 
     topk = BatchTopK(b, kmax, ks=ks)
     if packed is True:
@@ -253,19 +299,8 @@ def execute_queries(store: VectorStore, queries: Sequence[Query], *,
 
     # invert plans: node -> rows, split per (row, node) purity against the
     # row's (multi-role) authorized mask
-    pure_rows: Dict = defaultdict(list)
-    impure_rows: Dict = defaultdict(list)
-    sizes_cache: Dict = {}           # (key, role set) -> (total, auth)
-    for qi, (plan, t) in enumerate(zip(plans, role_sets)):
-        for key in plan.nodes:
-            if key not in store.engines:
-                continue
-            if (key, t) not in sizes_cache:
-                sizes_cache[(key, t)] = store.node_total_and_auth(
-                    key, row_masks[qi])
-            total, auth = sizes_cache[(key, t)]
-            (pure_rows if auth == total else impure_rows)[key].append(qi)
-            stats_rows[qi].indices_visited += 1
+    pure_rows, impure_rows, sizes_cache = _classify_waves(
+        store, plans, role_sets, row_masks, stats_rows)
 
     def _wave(groups: Dict, impure: bool) -> None:
         # nearest-first across the batch: tightening close rows' bounds early

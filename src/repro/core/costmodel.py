@@ -112,6 +112,24 @@ class ScanCostModel:
 CostModel = HNSWCostModel  # default model type used across core/
 
 
+def shard_placement_cost(n_rows: int, dim: int,
+                         model: Optional[ScanCostModel] = None) -> float:
+    """Placement weight of one row shard on the serving mesh.
+
+    The sharded store bin-packs lattice-node shards across devices by
+    estimated per-launch cost (DESIGN.md §Sharded Execution).  ScoreScan
+    engines scan every resident row per launch, so the right weight is the
+    :class:`ScanCostModel` roofline — per-row compute/bytes plus the fixed
+    launch overhead (which is why many tiny shards on one device cost more
+    than their row count suggests).  ``model=None`` uses v5e defaults at the
+    store's dimensionality.
+    """
+    if n_rows <= 0:
+        return 0.0
+    m = model if model is not None else ScanCostModel(dim=dim)
+    return m.role_query_cost(int(n_rows), int(n_rows), 10)
+
+
 # --------------------------------------------------------------------------
 # Appendix B calibration (Algorithm 8): two one-dimensional sweeps.
 # --------------------------------------------------------------------------

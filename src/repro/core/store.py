@@ -212,6 +212,17 @@ class VectorStore:
                 config=config)
         return self.leftover_shard
 
+    def sharded(self, mesh, **kw) -> "object":
+        """Place this store's node engines across a device mesh and return
+        the :class:`~repro.core.sharded.ShardedVectorStore` drop-in
+        (DESIGN.md §Sharded Execution).  ``mesh`` is a
+        :class:`~repro.launch.mesh.DeviceMesh`, an int slot count, or a
+        device sequence; ``**kw`` forwards ``placement_policy`` /
+        ``split_threshold`` / ``cost_model``.  Requires ScoreScan node
+        engines (the kernel-backed factory)."""
+        from .sharded import shard_store
+        return shard_store(self, mesh, **kw)
+
     def stored_vectors(self) -> int:
         n = sum(len(e.ids) for e in self.engines.values())
         n += sum(len(v) for v in self.leftover_vectors.values())

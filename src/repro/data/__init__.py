@@ -1,3 +1,7 @@
+"""Datasets.  ``RetrievalDataset`` / ``make_retrieval_dataset`` (synthetic
+RBAC corpora) are live retrieval infrastructure used by benchmarks and
+the demo server; ``SyntheticLMDataset`` is QUARANTINED LM scaffold
+(README.md "Repository layout")."""
 from .pipeline import (SyntheticLMDataset, RetrievalDataset,
                        make_retrieval_dataset)
 

@@ -1,3 +1,6 @@
+"""QUARANTINED LM training scaffold (README.md "Repository layout"):
+fault-tolerance harness for the demo LM trainer.  Not part of the
+retrieval surface."""
 from .straggler import StragglerMonitor
 from .elastic import ElasticPlan, plan_mesh
 from .preempt import PreemptionHandler

@@ -23,6 +23,15 @@ This module adds the missing layer between callers and the engine:
   * :class:`ServeStats` — per-request queue/latency samples (p50/p99),
     flush-reason counts, leftover-path counts, batch-size and queue-depth
     tracking, plus the merged :class:`SearchStats` of every micro-batch.
+  * **Overlapping flushes** (``max_inflight``): with the default 1, flushes
+    execute strictly one at a time (the PR 2 behavior).  On a multi-device
+    :class:`~repro.core.sharded.ShardedVectorStore`, ``max_inflight > 1``
+    lets flush N dispatch while flush N-1 is still executing — the two
+    searches contend only at the store's per-device executor slots, so
+    different devices serve different flushes concurrently and the mesh
+    stays occupied across flush boundaries (DESIGN.md §Sharded Execution).
+    :class:`ServeStats` counts overlapped dispatches (``overlap_flushes``),
+    the in-flight peak, and snapshots the store's per-device occupancy.
 
 Fairness: the queue is FIFO across roles.  A micro-batch freely mixes
 roles — the batched engine unions their plans, so co-scheduled roles share
@@ -60,15 +69,33 @@ class ServeStats:
     batch_size_sum: int = 0
     batch_size_max: int = 0
     queue_depth_peak: int = 0
+    # overlapping-flush accounting (max_inflight > 1, sharded stores):
+    # flushes dispatched while at least one other was still executing,
+    # and the highest number of concurrently executing flushes observed
+    overlap_flushes: int = 0
+    inflight_peak: int = 0
     queue_ms: List[float] = dataclasses.field(default_factory=list)
     latency_ms: List[float] = dataclasses.field(default_factory=list)
     search: SearchStats = dataclasses.field(default_factory=SearchStats)
-    # execution-path counts per flush: "batched+packed" / "batched" /
-    # "sequential" (which leftover strategy / engine arm served the batch)
+    # execution-path counts per flush: "sharded+packed" / "sharded" /
+    # "batched+packed" / "batched" / "sequential" (which engine arm /
+    # leftover strategy served the batch)
     paths: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # latest per-device occupancy snapshot from a sharded store: device
+    # slot -> cumulative busy seconds / kernel launches
+    device_busy_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    device_launches: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     def record_path(self, path: str) -> None:
         self.paths[path] = self.paths.get(path, 0) + 1
+
+    def record_devices(self, device_stats: Dict[int, Dict[str, float]]
+                       ) -> None:
+        """Snapshot a sharded store's cumulative per-device occupancy
+        (:meth:`~repro.core.sharded.ShardedVectorStore.device_stats`)."""
+        for slot, rec in device_stats.items():
+            self.device_busy_s[slot] = float(rec["busy_s"])
+            self.device_launches[slot] = int(rec["launches"])
 
     @property
     def avg_batch(self) -> float:
@@ -97,10 +124,15 @@ class ServeStats:
             "flush_timeout": self.flush_timeout,
             "flush_drain": self.flush_drain,
             "queue_depth_peak": self.queue_depth_peak,
+            "overlap_flushes": self.overlap_flushes,
+            "inflight_peak": self.inflight_peak,
             "p50_ms": self.p50_ms, "p99_ms": self.p99_ms,
         }
         for path, n in sorted(self.paths.items()):
             out[f"path_{path}"] = n
+        for slot in sorted(self.device_busy_s):
+            out[f"dev{slot}_busy_s"] = round(self.device_busy_s[slot], 4)
+            out[f"dev{slot}_launches"] = self.device_launches.get(slot, 0)
         return out
 
 
@@ -125,33 +157,47 @@ class MicroBatchScheduler:
     default executor thread, so the event loop keeps accepting submissions
     *while a batch executes* — the backlog that accumulates during one
     search becomes the next flush's batch, which is what makes the batch
-    size track the arrival rate.  Micro-batches execute one at a time (no
-    search overlap), so ``stats.search`` merging stays race-free.
+    size track the arrival rate.
+
+    ``max_inflight`` bounds how many micro-batch searches may execute
+    concurrently.  The default 1 keeps the PR 2 behavior: flushes strictly
+    one at a time.  Values above 1 overlap flushes — flush N dispatches
+    while flush N-1 is still executing — which pays off on a
+    :class:`~repro.core.sharded.ShardedVectorStore`, whose per-device
+    executor slots let different devices serve different flushes (single
+    kernel launches still serialize per device).  All ``stats`` mutation
+    happens on the event loop (the executor only runs the search), so
+    accounting stays race-free at any ``max_inflight``.
     """
 
     def __init__(self, store, *, max_batch: int = 32,
                  max_wait_ms: float = 2.0, default_k: int = 10,
                  default_efs: int = 50,
                  min_packed_batch: int = DEFAULT_MIN_PACKED_BATCH,
+                 max_inflight: int = 1,
                  search_fn: Optional[SearchFn] = None,
                  stats: Optional[ServeStats] = None,
                  clock: Callable[[], float] = time.perf_counter):
         assert max_batch >= 1, max_batch
+        assert max_inflight >= 1, max_inflight
         self.store = store
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
         self.default_k = int(default_k)
         self.default_efs = int(default_efs)
         self.min_packed_batch = int(min_packed_batch)
+        self.max_inflight = int(max_inflight)
         self.search_fn = search_fn
         self.stats = stats if stats is not None else ServeStats()
         self._clock = clock
         self._queue: List[_Request] = []
         self._wake: Optional[asyncio.Event] = None
+        self._slot_free: Optional[asyncio.Event] = None
         self._task: Optional[asyncio.Task] = None
         self._closed = False
         self._draining = False
-        self._busy = False
+        self._inflight = 0
+        self._exec_tasks: set = set()
 
     # ------------------------------------------------------------ submission
     def submit(self, query: Union[Query, np.ndarray],
@@ -190,7 +236,7 @@ class MicroBatchScheduler:
         if self._wake is not None:
             self._wake.set()
         try:
-            while self._queue or self._busy:
+            while self._queue or self._inflight:
                 await asyncio.sleep(0.0005)
         finally:
             self._draining = False
@@ -225,6 +271,14 @@ class MicroBatchScheduler:
                     await asyncio.wait_for(self._wake.wait(), timeout=budget)
                 except asyncio.TimeoutError:
                     break
+            # respect the overlap cap: park until an in-flight search
+            # retires (max_inflight=1 degenerates to strictly serial
+            # flushes, the pre-overlap behavior)
+            while self._queue and self._inflight >= self.max_inflight:
+                if self._slot_free is None:
+                    self._slot_free = asyncio.Event()
+                self._slot_free.clear()
+                await self._slot_free.wait()
             if self._queue:
                 if len(self._queue) >= self.max_batch:
                     reason = "full"
@@ -232,7 +286,7 @@ class MicroBatchScheduler:
                     reason = "drain"
                 else:
                     reason = "timeout"
-                await self._flush(reason)
+                self._dispatch(reason)
             await asyncio.sleep(0)       # let submitters run between flushes
 
     def _search(self, queries: Sequence[Query]) -> List[SearchResult]:
@@ -241,16 +295,36 @@ class MicroBatchScheduler:
         return self.store.search(queries,
                                  min_packed_batch=self.min_packed_batch)
 
-    async def _flush(self, reason: str) -> None:
+    def _dispatch(self, reason: str) -> None:
+        """Cut one micro-batch off the queue and launch its search as a
+        task.  The flusher loop continues immediately, so the next flush
+        can dispatch while this one executes (bounded by ``max_inflight``);
+        overlap accounting happens here, at dispatch time."""
         batch, self._queue = (self._queue[:self.max_batch],
                               self._queue[self.max_batch:])
         if not batch:
             return
         st = self.stats
-        self._busy = True
+        self._inflight += 1
+        st.inflight_peak = max(st.inflight_peak, self._inflight)
+        if self._inflight > 1:
+            st.overlap_flushes += 1
         t0 = self._clock()
         for r in batch:
             st.queue_ms.append((t0 - r.t_submit) * 1e3)
+        task = asyncio.get_running_loop().create_task(
+            self._execute(batch, reason))
+        # hold a strong reference until done (create_task alone is not
+        # enough to keep a task alive across GC)
+        self._exec_tasks.add(task)
+        task.add_done_callback(self._exec_tasks.discard)
+
+    async def _execute(self, batch: List[_Request], reason: str) -> None:
+        """Run one dispatched micro-batch to completion and account it.
+        Only the search itself leaves the event loop (executor thread);
+        every ``stats`` mutation happens back on the loop, so overlapping
+        flushes never race on accounting."""
+        st = self.stats
         error: Optional[Exception] = None
         results: List = []
         try:
@@ -261,7 +335,9 @@ class MicroBatchScheduler:
         except Exception as e:         # propagate to callers, keep serving
             error = e
         finally:
-            self._busy = False
+            self._inflight -= 1
+            if self._slot_free is not None:
+                self._slot_free.set()
         # the batch was dequeued either way: account it so queue_ms and
         # latency_ms stay paired per request and flush counts stay honest
         t1 = self._clock()
@@ -273,6 +349,9 @@ class MicroBatchScheduler:
             st.record_path(results[0].path)
             for res in results:
                 st.search.merge(res.stats)
+        from ..core import ShardedVectorStore
+        if isinstance(self.store, ShardedVectorStore):
+            st.record_devices(self.store.device_stats())
         for i, r in enumerate(batch):
             st.latency_ms.append((t1 - r.t_submit) * 1e3)
             if r.future.done():          # caller may have been cancelled

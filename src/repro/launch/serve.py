@@ -80,7 +80,8 @@ class RAGServer:
                            max_batch: int = 16, max_wait_ms: float = 2.0,
                            arrival_s: Optional[Sequence[float]] = None,
                            serve_stats: Optional["ServeStats"] = None,
-                           min_packed_batch: Optional[int] = None):
+                           min_packed_batch: Optional[int] = None,
+                           max_inflight: int = 1):
         """Continuous-batching retrieval for an async request stream.
 
         ``requests`` is a sequence of :class:`Query` objects (or legacy
@@ -89,9 +90,13 @@ class RAGServer:
         inter-arrival gaps); the scheduler cuts micro-batches on
         ``max_batch``/``max_wait_ms`` and routes each through
         ``store.search`` — with the packed leftover shard only for flushes
-        of at least ``min_packed_batch`` rows.  Returns per-request
+        of at least ``min_packed_batch`` rows.  ``max_inflight > 1`` lets
+        flushes overlap (worthwhile on a multi-device
+        :class:`~repro.core.ShardedVectorStore`; see DESIGN.md §Sharded
+        Execution).  Returns per-request
         :class:`~repro.core.SearchResult`\\ s in submission order;
-        latency/queue/flush/path accounting lands in ``serve_stats``.
+        latency/queue/flush/path/occupancy accounting lands in
+        ``serve_stats``.
         """
         from .scheduler import MicroBatchScheduler, serve_requests
 
@@ -99,6 +104,7 @@ class RAGServer:
             "min_packed_batch": int(min_packed_batch)}
         sched = MicroBatchScheduler(self.store, max_batch=max_batch,
                                     max_wait_ms=max_wait_ms,
+                                    max_inflight=max_inflight,
                                     stats=serve_stats, **kw)
         try:
             return await serve_requests(sched, requests, arrival_s=arrival_s)
@@ -155,14 +161,22 @@ def warm_batch_shapes(store, sizes: Sequence[int] = (1, 8, 16, 24, 32),
     from ``store.role_mask_rows``, so multi-word stores (> 32 roles,
     DESIGN.md §Role Masks) trace the real ``(B, W)`` operand shapes — a
     hand-rolled single-word warm-up would compile the wrong signatures and
-    leave every real launch cold.  Returns the number of engine×bucket
-    warm calls issued.
+    leave every real launch cold.  On a
+    :class:`~repro.core.ShardedVectorStore` the per-device
+    :class:`~repro.core.DeviceShard`\\ s are warmed instead of the host
+    engines — each device compiles its own executable per operand shape, so
+    warming the wrapped store would leave every mesh launch cold.  Returns
+    the number of engine×bucket warm calls issued.
     """
-    engines = [e for e in store.engines.values()
-               if isinstance(e, BatchEngine) and len(e)]
-    shard = store.leftover_shard
-    if shard is not None and len(shard):
-        engines.append(shard)
+    from repro.core import ShardedVectorStore
+    if isinstance(store, ShardedVectorStore) and store.mesh_size > 1:
+        engines = [s for s in store.device_shards() if len(s)]
+    else:
+        engines = [e for e in store.engines.values()
+                   if isinstance(e, BatchEngine) and len(e)]
+        shard = store.leftover_shard
+        if shard is not None and len(shard):
+            engines.append(shard)
     if not engines:
         return 0
 

@@ -1,15 +1,21 @@
-"""Logical-axis sharding rules (MaxText-style) for the multi-pod mesh.
+"""Logical-axis sharding rules (MaxText-style) for the multi-pod mesh,
+plus the row-placement utilities of the retrieval serving mesh.
 
 Model code annotates tensors with *logical* axis names; a :class:`Rules`
 object maps logical names to mesh axes per shape profile and applies
 ``with_sharding_constraint``.  Divisibility is checked at constraint time —
 an axis that does not divide the dimension is dropped (replicated), which is
 how e.g. minicpm's 36 heads degrade gracefully on a 16-way model axis.
-"""
+
+Retrieval sharding is much simpler than the training rules: lattice nodes
+are disjoint, so a node shard is just a contiguous row range pinned to one
+device (:func:`pin_rows`), and row-splitting a node across devices is an
+even partition of its row count (:func:`even_row_splits`) — no named axes,
+no collectives (DESIGN.md §Sharded Execution)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -124,6 +130,42 @@ def make_rules(mesh: Optional[Mesh], kind: str = "train") -> Rules:
 
 
 NO_RULES = Rules(mesh=None, table={})
+
+
+# --------------------------------------------------------------------------
+# Retrieval serving-mesh placement (DESIGN.md §Sharded Execution)
+# --------------------------------------------------------------------------
+def even_row_splits(n: int, parts: int) -> List[Tuple[int, int]]:
+    """Partition ``n`` rows into ``parts`` contiguous ``(lo, hi)`` ranges.
+
+    Sizes differ by at most one row (the first ``n % parts`` ranges get the
+    extra), and empty ranges are dropped — splitting 5 rows 4 ways yields
+    ``[(0, 2), (2, 3), (3, 4), (4, 5)]``, splitting 2 rows 4 ways yields
+    ``[(0, 1), (1, 2)]``.  The sharded store uses this to row-split lattice
+    nodes larger than its split threshold across mesh slots.
+    """
+    assert n >= 0 and parts >= 1, (n, parts)
+    parts = min(parts, n) or 1
+    base, extra = divmod(n, parts)
+    out: List[Tuple[int, int]] = []
+    lo = 0
+    for i in range(parts):
+        hi = lo + base + (1 if i < extra else 0)
+        if hi > lo:
+            out.append((lo, hi))
+        lo = hi
+    return out
+
+
+def pin_rows(arrays: Sequence[np.ndarray], device) -> Tuple[jax.Array, ...]:
+    """Commit host arrays to ``device`` (``jax.device_put``).
+
+    Committed operands make every jit launch that consumes them execute on
+    that device — the pinning step behind each
+    :class:`~repro.core.sharded.DeviceShard`.  Returns jax arrays in input
+    order."""
+    return tuple(jax.device_put(np.ascontiguousarray(a), device)
+                 for a in arrays)
 
 
 def tree_shardings(rules: Rules, axes_tree):

@@ -1,3 +1,6 @@
+"""QUARANTINED LM scaffold (README.md "Repository layout"): the generator
+LM for the RAG demo + its training graph.  Not part of the retrieval
+surface; retrieval PRs should neither extend nor depend on it."""
 from .config import ModelConfig, ShapeConfig, SHAPES
 from .model import (init_params, param_axes, forward, train_step_fn,
                     prefill_fn, decode_fn, init_cache_shapes, loss_fn)

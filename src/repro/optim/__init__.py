@@ -1,3 +1,6 @@
+"""QUARANTINED LM training scaffold (README.md "Repository layout"):
+optimizers/schedules for the demo LM.  Not part of the retrieval
+surface."""
 from .adamw import AdamW, OptConfig
 from .schedules import cosine_schedule, wsd_schedule, constant_schedule
 

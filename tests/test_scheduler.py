@@ -231,6 +231,107 @@ def test_search_error_propagates_to_futures(scan_store, policy, vectors):
         _run(scan_store, reqs, search_fn=boom)
 
 
+# ------------------------------------------- overlapping flushes (mesh)
+def _overlap_run(max_inflight, n=8, max_batch=2):
+    """Drive the scheduler with a search_fn that blocks until released,
+    tracking how many searches execute concurrently.  Deterministic: the
+    release only fires once the expected concurrency is observed (or a
+    poll deadline passes)."""
+    import threading
+    from repro.core import SearchResult, SearchStats
+
+    lock = threading.Lock()
+    release = threading.Event()
+    state = {"active": 0, "peak": 0}
+
+    def search_fn(store, queries):
+        with lock:
+            state["active"] += 1
+            state["peak"] = max(state["peak"], state["active"])
+        release.wait(timeout=10.0)
+        with lock:
+            state["active"] -= 1
+        return [SearchResult(hits=[], stats=SearchStats(), path="batched")
+                for _ in queries]
+
+    reqs = [Query(vector=np.zeros(4, np.float32), roles=(0,), k=1)
+            for _ in range(n)]
+    stats = ServeStats()
+
+    async def main():
+        sched = MicroBatchScheduler(object(), max_batch=max_batch,
+                                    max_wait_ms=0.5,
+                                    max_inflight=max_inflight,
+                                    search_fn=search_fn, stats=stats)
+        try:
+            futures = [sched.submit(q) for q in reqs]
+            # wait until the scheduler has dispatched as many concurrent
+            # searches as the cap allows, then let them all run to the end
+            for _ in range(2000):
+                if state["peak"] >= max_inflight:
+                    break
+                await asyncio.sleep(0.002)
+            release.set()
+            await asyncio.gather(*futures)
+        finally:
+            release.set()
+            await sched.close()
+
+    asyncio.run(main())
+    return stats, state["peak"]
+
+
+def test_overlapping_flushes_dispatch_before_completion():
+    """ISSUE acceptance: with max_inflight=2, flush N dispatches while
+    flush N-1 is still executing — counters pinned."""
+    stats, peak = _overlap_run(max_inflight=2)
+    assert peak == 2                      # two searches truly concurrent
+    assert stats.inflight_peak == 2
+    assert stats.overlap_flushes >= 1
+    assert stats.completed == 8
+    assert stats.batches_flushed == 4
+
+
+def test_serial_flushes_never_overlap():
+    """The default max_inflight=1 keeps the strict PR 2 serialization."""
+    stats, peak = _overlap_run(max_inflight=1)
+    assert peak == 1
+    assert stats.inflight_peak == 1
+    assert stats.overlap_flushes == 0
+    assert stats.completed == 8
+
+
+def test_overlap_on_sharded_store_records_device_occupancy(policy, vectors):
+    """End-to-end: overlapping flushes on a real 2-slot sharded store keep
+    exact parity and land per-device occupancy in ServeStats."""
+    from repro.core import build_vector_storage as build_store
+    from repro.core import shard_store
+    from repro.ann.scorescan import scorescan_factory
+    base = build_store(
+        build_effveda(policy, HNSWCostModel(lam_threshold=100),
+                      beta=1.1, k=10),
+        vectors, engine_factory=scorescan_factory(policy))
+    sharded = shard_store(base, 2)
+    reqs = _stream(policy, vectors, 24, seed=6)
+    stats = ServeStats()
+
+    async def main():
+        sched = MicroBatchScheduler(sharded, max_batch=6, max_wait_ms=1.0,
+                                    max_inflight=2, stats=stats)
+        try:
+            return await serve_requests(sched, reqs)
+        finally:
+            await sched.close()
+
+    results = asyncio.run(main())
+    _assert_matches_reference(sharded.store, reqs, results)
+    assert stats.completed == len(reqs)
+    assert set(stats.device_busy_s) == {0, 1}
+    assert sum(stats.device_launches.values()) > 0
+    assert any(path.startswith("sharded") for path in stats.paths)
+    sharded.close()
+
+
 # --------------------------------------------------- RAGServer plumbing
 @pytest.fixture(scope="module")
 def server_pair(scan_store, exact_store):

@@ -1,0 +1,279 @@
+"""Sharded lattice execution (DESIGN.md §Sharded Execution): exact parity
+with single-device ``VectorStore.search`` across mesh sizes {1, 2, 4} on
+pure-only / impure-heavy / leftover-only stores (W>1 role masks included),
+row-splitting, placement policies, per-device occupancy accounting, and the
+DeviceMesh / even_row_splits utilities.
+
+Runs on any device count: meshes over fewer physical devices use repeated
+(virtual) slots, which exercises identical placement/merge code; the CI
+sharded leg re-runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` for 2 real devices.
+"""
+import numpy as np
+import pytest
+
+from repro.ann.scorescan import scorescan_factory
+from repro.core import (HNSWCostModel, Lattice, Query, ShardedVectorStore,
+                        build_effveda, build_vector_storage, exact_factory,
+                        generate_policy, place_shards, shard_store)
+from repro.core.queryplan import build_all_plans
+from repro.core.sharded import LEFTOVER_KEY
+from repro.core.veda import BuildResult
+from repro.launch.mesh import DeviceMesh
+from repro.launch.sharding import even_row_splits
+
+DETERMINISTIC = ("indices_visited", "data_touched",
+                 "data_authorized_touched", "leftover_vectors_scanned")
+STORE_KINDS = ("pure_only", "impure_heavy", "leftover_only")
+
+
+@pytest.fixture(scope="module")
+def policy():
+    return generate_policy(n_vectors=1600, n_roles=8, n_permissions=20,
+                           seed=2)
+
+
+@pytest.fixture(scope="module")
+def vectors(policy):
+    rng = np.random.default_rng(0)
+    return rng.standard_normal((policy.n_vectors, 16)).astype(np.float32)
+
+
+def _build(policy, vectors, kind):
+    if kind == "pure_only":
+        lat = Lattice.exclusive(policy)
+        cm = HNSWCostModel(lam_threshold=100)
+        res = BuildResult(lattice=lat, leftovers=frozenset(),
+                          plans=build_all_plans(lat, cm, 10), stats={})
+    elif kind == "impure_heavy":
+        res = build_effveda(policy, HNSWCostModel(lam_threshold=100),
+                            beta=1.1, k=10)
+    else:                                  # leftover_only
+        res = build_effveda(policy, HNSWCostModel(lam_threshold=10**6),
+                            beta=1.1, k=10)
+    return build_vector_storage(res, vectors,
+                                engine_factory=scorescan_factory(policy))
+
+
+@pytest.fixture(scope="module")
+def stores(policy, vectors):
+    """Reference single-device store per lattice shape (left untouched) and
+    a second identical store to wrap in meshes (the wrap pre-builds the
+    packed shard, which would perturb the reference's packed=None arm)."""
+    return {kind: (_build(policy, vectors, kind),
+                   _build(policy, vectors, kind))
+            for kind in STORE_KINDS}
+
+
+@pytest.fixture(scope="module")
+def meshed(stores):
+    out = {}
+    for kind, (_, wrapped) in stores.items():
+        for size in (1, 2, 4):
+            out[(kind, size)] = shard_store(wrapped, DeviceMesh.host(size))
+    yield out
+    for s in out.values():
+        s.close()
+
+
+def _queries(policy, vectors, b, seed=0, k=10, multirole=False):
+    rng = np.random.default_rng(seed)
+    qs = vectors[rng.integers(len(vectors), size=b)] + 0.01
+    out = []
+    for i in range(b):
+        if multirole and i % 3 == 0:
+            roles = tuple(int(r) for r in rng.choice(
+                policy.n_roles, size=2, replace=False))
+        else:
+            roles = (int(rng.integers(policy.n_roles)),)
+        kk = int(rng.integers(4, k + 1)) if multirole else k
+        out.append(Query(vector=qs[i].astype(np.float32), roles=roles, k=kk))
+    return out
+
+
+def _assert_parity(sharded, ref, qobjs, packed):
+    got = sharded.search(qobjs, packed=packed)
+    want = ref.search(qobjs, packed=packed)
+    for i, (g, w) in enumerate(zip(got, want)):
+        assert g.hits == w.hits, (i, qobjs[i].roles)   # bit-identical
+        for f in DETERMINISTIC:
+            assert getattr(g.stats, f) == getattr(w.stats, f), (i, f)
+    return got
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("kind", STORE_KINDS)
+@pytest.mark.parametrize("size", (1, 2, 4))
+def test_parity_mesh_sizes(stores, meshed, policy, vectors, kind, size):
+    """ISSUE acceptance: bit-identical hits/distances at mesh {1, 2, 4} on
+    every lattice shape, for both leftover strategies."""
+    ref, _ = stores[kind]
+    sharded = meshed[(kind, size)]
+    qobjs = _queries(policy, vectors, 12, seed=size)
+    has_left = bool(ref.leftover_vectors)
+    for packed in (False, True):
+        got = _assert_parity(sharded, ref, qobjs, packed)
+        want_path = ("sharded" if size > 1 else "batched") + \
+            ("+packed" if packed and has_left else "")
+        assert all(r.path == want_path for r in got), got[0].path
+
+
+def test_parity_multirole_heterogeneous_k(stores, meshed, policy, vectors):
+    """Multi-role union queries + per-query k through the sharded waves."""
+    ref, _ = stores["impure_heavy"]
+    sharded = meshed[("impure_heavy", 2)]
+    qobjs = _queries(policy, vectors, 12, seed=9, multirole=True)
+    _assert_parity(sharded, ref, qobjs, packed=None)
+
+
+def test_results_always_authorized(meshed, policy, vectors):
+    sharded = meshed[("impure_heavy", 4)]
+    qobjs = _queries(policy, vectors, 8, seed=3)
+    for q, res in zip(qobjs, sharded.search(qobjs, packed=True)):
+        mask = sharded.authorized_mask(q.roles[0])
+        assert all(mask[vid] for _, vid in res.hits)
+
+
+def test_degenerate_mesh_delegates(stores, meshed, policy, vectors):
+    """mesh_size == 1 must route through the unchanged single-device path
+    (same engine object, 'batched' path tag, no device accounting)."""
+    sharded = meshed[("impure_heavy", 1)]
+    assert sharded.mesh_size == 1
+    qobjs = _queries(policy, vectors, 6, seed=4)
+    res = sharded.search(qobjs)
+    assert all(r.path.startswith("batched") for r in res)
+    assert sharded.device_launches == [0]
+
+
+# ------------------------------------------------- W > 1 multi-word masks
+def test_parity_wide_role_universe():
+    """64-role store (W=2 packed auth words): sharded parity incl. roles on
+    both sides of the word boundary, against the brute-force oracle."""
+    from repro.core import metrics
+    policy = generate_policy(n_vectors=700, n_roles=64, n_permissions=80,
+                             seed=0)
+    rng = np.random.default_rng(1)
+    vecs = rng.standard_normal((policy.n_vectors, 8)).astype(np.float32)
+    res = build_effveda(policy, HNSWCostModel(lam_threshold=60),
+                        beta=1.1, k=5)
+    ref = build_vector_storage(res, vecs,
+                               engine_factory=scorescan_factory(policy))
+    wrapped = build_vector_storage(res, vecs,
+                                   engine_factory=scorescan_factory(policy))
+    sharded = shard_store(wrapped, DeviceMesh.host(2))
+    assert sharded.mask_width == 2
+    for shard in sharded.device_shards():
+        assert shard.auth_width == 2
+    roles = [1, 31, 32, 33, 63, 5, 40, 62]
+    qobjs = [Query(vector=vecs[i * 11] + 0.01, roles=(r,), k=5)
+             for i, r in enumerate(roles)]
+    for packed in (False, True):
+        got = _assert_parity(sharded, ref, qobjs, packed)
+        for q, r in zip(qobjs, got):
+            mask = ref.authorized_mask(q.roles[0])
+            want = [i for _, i in metrics.brute_force_topk(vecs, mask,
+                                                           q.vector, 5)]
+            assert [i for _, i in r] == want[:len(r)], q.roles
+    sharded.close()
+
+
+# --------------------------------------------------------- row-splitting
+def test_row_split_parity_and_coverage(stores, policy, vectors):
+    """A tiny split threshold forces multi-shard nodes; shards must tile
+    the node's rows exactly and results stay bit-identical."""
+    ref, _ = stores["impure_heavy"]
+    wrapped = _build(policy, vectors, "impure_heavy")
+    sharded = shard_store(wrapped, DeviceMesh.host(4), split_threshold=64)
+    split = {k: s for k, s in sharded.node_shards.items() if len(s) > 1}
+    assert split, "threshold 64 must split at least one node"
+    for key, shards in sharded.node_shards.items():
+        spans = sorted((s.lo, s.hi) for s in shards)
+        assert spans[0][0] == 0 and spans[-1][1] == len(wrapped.engines[key])
+        assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+        n_ids = sum(len(s.ids) for s in shards)
+        assert n_ids == len(wrapped.engines[key])
+    qobjs = _queries(policy, vectors, 10, seed=7)
+    _assert_parity(sharded, ref, qobjs, packed=True)
+    sharded.close()
+
+
+# -------------------------------------------------------------- placement
+def test_placement_policies():
+    sizes = {f"n{i}": n for i, n in
+             enumerate((4000, 2500, 1200, 900, 700, 300, 120, 60))}
+    greedy = place_shards(sizes, 4, dim=32, policy="cost",
+                          split_threshold=10**9)
+    rr = place_shards(sizes, 4, dim=32, policy="round_robin",
+                      split_threshold=10**9)
+    assert greedy.policy == "cost" and rr.policy == "round_robin"
+    # greedy LPT never packs worse than blind round-robin on this instance
+    assert greedy.imbalance() <= rr.imbalance() + 1e-9
+    assert len({a.slot for a in greedy.assignments}) == 4   # all slots used
+    # every input shard placed exactly once, un-split
+    assert sorted(a.key for a in greedy.assignments) == sorted(sizes)
+
+
+def test_placement_split_threshold():
+    pl = place_shards({"big": 10_000, "small": 100}, 4, dim=16,
+                      split_threshold=2_000)
+    by_key = pl.by_key()
+    assert len(by_key["big"]) == 4            # capped at n_slots chunks
+    assert len(by_key["small"]) == 1
+    rows = sum(a.rows for a in by_key["big"])
+    assert rows == 10_000
+    # split chunks spread across distinct slots (that is the point)
+    assert len({a.slot for a in by_key["big"]}) == 4
+
+
+def test_leftover_shard_is_placed(meshed):
+    sharded = meshed[("leftover_only", 2)]
+    assert sharded.leftover_shards, "leftover-only store must place a shard"
+    assert {s.key for s in sharded.leftover_shards} == {LEFTOVER_KEY}
+    assert not sharded.node_shards
+
+
+def test_non_scan_engines_rejected(policy, vectors):
+    store = _build(policy, vectors, "impure_heavy")
+    exact = build_vector_storage(
+        build_effveda(policy, HNSWCostModel(lam_threshold=100),
+                      beta=1.1, k=10),
+        vectors, engine_factory=exact_factory())
+    if exact.engines:
+        with pytest.raises(TypeError):
+            shard_store(exact, 2)
+    assert isinstance(shard_store(store, 1), ShardedVectorStore)
+
+
+# ------------------------------------------------------------- accounting
+def test_device_occupancy_counters(meshed, policy, vectors):
+    sharded = meshed[("impure_heavy", 2)]
+    before = list(sharded.device_launches)
+    sharded.search(_queries(policy, vectors, 8, seed=11), packed=True)
+    after = sharded.device_launches
+    assert sum(after) > sum(before)
+    stats = sharded.device_stats()
+    assert set(stats) == {0, 1}
+    assert sum(rec["busy_s"] for rec in stats.values()) > 0
+
+
+# ------------------------------------------------------------ mesh utils
+def test_device_mesh_virtual_slots():
+    m1 = DeviceMesh.host(1)
+    assert m1.size == 1 and len(list(m1)) == 1
+    m4 = DeviceMesh.host(4)
+    assert m4.size == 4
+    assert m4.n_physical <= 4
+    if m4.n_physical < 4:
+        assert m4.is_virtual
+    assert "DeviceMesh" in m4.describe()
+
+
+def test_even_row_splits():
+    assert even_row_splits(5, 4) == [(0, 2), (2, 3), (3, 4), (4, 5)]
+    assert even_row_splits(2, 4) == [(0, 1), (1, 2)]
+    assert even_row_splits(0, 3) == []
+    assert even_row_splits(9, 3) == [(0, 3), (3, 6), (6, 9)]
+    for n, p in ((17, 4), (1, 1), (8, 8)):
+        spans = even_row_splits(n, p)
+        assert spans[0][0] == 0 and spans[-1][1] == n
+        assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
