@@ -72,6 +72,7 @@ def main() -> None:
     go("exp16", lambda: E.exp16_continuous_batching(bc))
     go("exp17", lambda: E.exp17_role_scaling(bc))
     go("exp18", lambda: E.exp18_sharded_scaling(bc))
+    go("exp19", lambda: E.exp19_sustained_churn(bc))
 
     go("kernels", K.run_all)
 

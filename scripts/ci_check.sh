@@ -62,3 +62,60 @@ for packed in (False, True):
         assert got == want[:len(got)] and len(got) == len(want), q.roles
 print("many-role smoke OK (n_roles=64, W=2, batched + packed paths)")
 PY
+
+echo "== churn smoke: dynamic mutations + compaction =="
+python - <<'PY'
+# sustained churn through DynamicStore with a LatticeCompactor maintaining
+# the lattice: every answer must match the brute-force authorized oracle,
+# a maintain() cycle must purge tombstones and fold oversized leftovers
+# without changing any answer, and a block emptied by deletes must stay
+# searchable (the members[0] regression)
+import numpy as np
+from repro.ann.scorescan import scorescan_factory
+from repro.core import (CompactionConfig, DynamicStore, HNSWCostModel,
+                        LatticeCompactor, build_effveda,
+                        build_vector_storage, generate_policy, metrics)
+
+policy = generate_policy(n_vectors=600, n_roles=8, n_permissions=20, seed=0)
+rng = np.random.default_rng(2)
+vecs = rng.standard_normal((policy.n_vectors, 8)).astype(np.float32)
+cm = HNSWCostModel(lam_threshold=60)
+res = build_effveda(policy, cm, beta=1.1, k=5)
+store = build_vector_storage(res, vecs,
+                             engine_factory=scorescan_factory(policy))
+dyn = DynamicStore(store, cm)
+comp = LatticeCompactor(dyn, CompactionConfig(tombstone_purge_threshold=8,
+                                              leftover_fold_threshold=30))
+
+def oracle(x, roles, k):
+    mask = store.authorized_mask_multi(roles).copy()
+    for t in dyn.tombstones:
+        mask[t] = False
+    return [v for _, v in metrics.brute_force_topk(store.data, mask, x, k)]
+
+combo = frozenset({0, 5})
+for _ in range(35):
+    dyn.insert(rng.standard_normal(8).astype(np.float32), combo)
+for v in range(0, 20, 2):
+    dyn.delete(v)
+hosted = [b for b in range(len(dyn.block_members))
+          if dyn.block_members[b] and dyn._containers(b)[0]]
+b_empty = min(hosted, key=lambda i: len(dyn.block_members[i]))
+for vid in list(dyn.block_members[b_empty]):
+    dyn.delete(int(vid))
+queries = [(rng.standard_normal(8).astype(np.float32),
+            (r,) if i % 2 else (0, 5))
+           for i, r in enumerate(list(range(8)) * 2)]
+pre = [[v for _, v in dyn.search(x, roles=roles, k=5)]
+       for x, roles in queries]
+for (x, roles), got in zip(queries, pre):
+    want = oracle(x, roles, 5)
+    assert got == want[:len(got)] and len(got) == len(want), roles
+delta = comp.maintain(budget_s=5.0)
+assert delta["tombstones_purged"] > 0 and delta["folds"] >= 1, delta
+assert len(dyn.tombstones) == 0
+post = [[v for _, v in dyn.search(x, roles=roles, k=5)]
+        for x, roles in queries]
+assert post == pre, "compaction changed answers"
+print("churn smoke OK (oracle parity, emptied block, purge+fold invariant)")
+PY

@@ -25,6 +25,14 @@ class ExactIndex:
         self._distance_computations += len(self.data)
         return self._norms - 2.0 * (self.data @ q) + float(q @ q)
 
+    def purged(self, drop) -> "ExactIndex":
+        """Copy of this index with the rows whose external id is in ``drop``
+        physically removed (compaction's tombstone purge)."""
+        drop = set(int(v) for v in drop)
+        keep = np.fromiter((int(v) not in drop for v in self.ids),
+                           bool, len(self.ids))
+        return ExactIndex(self.data[keep], ids=self.ids[keep])
+
     def search(self, q: np.ndarray, k: int, efs: int = 0
                ) -> List[Tuple[float, np.int64]]:
         d = self._all_dists(q)

@@ -67,6 +67,7 @@ class HNSWIndex:
         self.M0 = 2 * int(M)
         self.efc = int(efc)
         self.mL = 1.0 / math.log(self.M)
+        self._seed = int(seed)               # kept for purge-time rebuilds
         self._rng = np.random.default_rng(seed)
         self.levels = np.zeros(len(data), dtype=np.int32)
         # neighbors[layer][node] -> list of internal ids
@@ -255,6 +256,25 @@ class HNSWIndex:
                 self.auth_bits = np.vstack([self.auth_bits, row[None]])
         self.tombstoned.discard(vid)
         self._insert(len(self.data) - 1)
+
+    def purged(self, drop) -> "HNSWIndex":
+        """Rebuild without the rows whose external id is in ``drop``
+        (compaction's tombstone purge).  A graph cannot cheaply unlink rows,
+        so this is a full O(n log n) rebuild with the same M/efc/seed; the
+        compactor amortizes it over many deletes.  Tombstone marks for
+        surviving rows (there should be none after a full purge) carry over;
+        auth words follow their rows."""
+        drop = set(int(v) for v in drop)
+        keep = np.fromiter((int(v) not in drop for v in self.ids),
+                           bool, len(self.ids))
+        bits = (self.auth_bits[keep] if hasattr(self, "auth_bits")
+                else None)
+        out = HNSWIndex(self.data[keep], ids=self.ids[keep], M=self.M,
+                        efc=self.efc, seed=self._seed, auth_bits=bits)
+        survivors = set(int(i) for i in out.ids)
+        out.tombstoned = {v for v in self.tombstoned
+                          if v not in drop and v in survivors}
+        return out
 
     # -------------------------------------------------- MaskedEngine surface
     def _mask_hits(self, internal: Sequence[int], role_mask) -> np.ndarray:

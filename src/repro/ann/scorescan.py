@@ -142,6 +142,17 @@ class ScoreScanIndex:
         ext = np.where(i >= 0, self.ids[np.maximum(i, 0)], np.int64(-1))
         return d, ext
 
+    def purged(self, drop) -> "ScoreScanIndex":
+        """Copy of this index with the rows whose external id is in ``drop``
+        physically removed (compaction's tombstone purge); auth words follow
+        their rows."""
+        drop = set(int(v) for v in drop)
+        keep = np.fromiter((int(v) not in drop for v in self.ids),
+                           bool, len(self.ids))
+        return ScoreScanIndex(self.data[keep], ids=self.ids[keep],
+                              auth_bits=self.auth_bits[keep],
+                              config=self.config)
+
     # engine-interface parity (used when plugged into the generic store)
     def search(self, q: np.ndarray, k: int, efs: int = 0):
         return self.search_masked(q, k, role_mask=self._full_mask())

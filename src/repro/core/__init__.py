@@ -11,6 +11,9 @@ Public API:
   VectorStore.search(queries)        — THE retrieval entry point
   ShardedVectorStore / shard_store   — multi-device sharded execution
                                        (DESIGN.md §Sharded Execution)
+  DynamicStore / LatticeCompactor    — Appendix I mutations + background
+                                       compaction (DESIGN.md §Dynamic
+                                       Maintenance)
   coordinated_search / independent_search / routed_search — §6.2 reference
   batched_search                     — deprecated shim over store.search
   metrics                            — SA / QA / recall / purity
@@ -33,6 +36,7 @@ from .batched import BatchTopK, batched_search, execute_queries
 from .sharded import (DeviceShard, Placement, ShardAssignment,
                       ShardedVectorStore, place_shards, shard_store)
 from .dynamic import DynamicStore
+from .compaction import (CompactionConfig, CompactionStats, LatticeCompactor)
 from . import metrics
 
 __all__ = [
@@ -53,4 +57,5 @@ __all__ = [
     "ShardedVectorStore", "DeviceShard", "Placement", "ShardAssignment",
     "place_shards", "shard_store",
     "DynamicStore",
+    "CompactionConfig", "CompactionStats", "LatticeCompactor",
 ]

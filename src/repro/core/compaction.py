@@ -1,0 +1,263 @@
+"""Background lattice maintenance under churn (ROADMAP: dynamic lattice
+evolution; HoneyBee/Curator identify this as the operational gap).
+
+A :class:`DynamicStore` preserves *correctness* under any mutation stream —
+every authorized vector reachable, no leaks — but degrades physically:
+
+  * inserts under fresh role combinations accumulate in leftover blocks
+    that are linearly scanned by every covering plan, long after they cross
+    the size threshold where an indexed node would win;
+  * deletes only tombstone rows, so engines keep scoring dead vectors and
+    ``tombstone_pad`` inflates every query's k without bound.
+
+:class:`LatticeCompactor` is the maintenance layer that folds that debt
+back into the lattice incrementally — no full EffVEDA rebuild:
+
+  * :meth:`fold_block` re-runs the budgeted copy/merge decision over just
+    the drifted subtree: an oversized leftover block either merges into an
+    existing node addressed by exactly its role combination (when the cost
+    model prefers one bigger node over two visits) or materializes as a
+    standalone node; only the plans of affected roles are re-covered via
+    :func:`~repro.core.queryplan.greedy_plan`.  A fold is a *move* — the
+    leftover copy is dropped — so storage amplification never increases.
+  * :meth:`purge_tombstones` physically rebuilds engines without tombstoned
+    rows (each engine's ``purged`` helper) and resets the tombstone set, so
+    the over-fetch pad returns to zero.
+  * :meth:`maintain` runs both under a time budget; the
+    :class:`~repro.launch.scheduler.MicroBatchScheduler` invokes it between
+    flushes (``maintainer=`` hook) so maintenance interleaves with serving.
+
+Compaction never changes answers: folds move rows between physically
+equivalent containers and purges remove only rows that every query already
+filters (tests/test_compaction.py pins this property).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, FrozenSet, List, Optional, Set
+
+import numpy as np
+
+from .api import MaskedEngine, MutableEngine
+from .queryplan import greedy_plan
+from .store import EngineFactory
+
+
+@dataclasses.dataclass
+class CompactionConfig:
+    """Maintenance triggers (DESIGN.md §Dynamic Maintenance).
+
+    ``leftover_fold_threshold``: leftover blocks at least this large are
+    folded into the lattice (default: the cost model's scan threshold
+    ``lam_threshold`` — the same budget the builders use to decide scan vs
+    index).  ``tombstone_purge_threshold``: a purge cycle triggers once this
+    many tombstones have accumulated — the staleness bound: the over-fetch
+    pad never exceeds ``threshold + deletes arrived since the last
+    maintain()``."""
+
+    leftover_fold_threshold: Optional[int] = None
+    tombstone_purge_threshold: int = 64
+
+
+@dataclasses.dataclass
+class CompactionStats:
+    """Cumulative maintenance counters (surface into ServeStats)."""
+
+    cycles: int = 0
+    folds: int = 0
+    vectors_folded: int = 0
+    nodes_created: int = 0
+    nodes_merged: int = 0
+    purges: int = 0
+    tombstones_purged: int = 0
+    engines_rebuilt: int = 0
+    plans_replanned: int = 0
+    maintain_s: float = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+class LatticeCompactor:
+    """Incremental maintenance over a :class:`~repro.core.DynamicStore`."""
+
+    def __init__(self, dyn, config: Optional[CompactionConfig] = None,
+                 engine_factory: Optional[EngineFactory] = None):
+        self.dyn = dyn
+        self.config = config or CompactionConfig()
+        self._factory = engine_factory
+        self.stats = CompactionStats()
+
+    @property
+    def store(self):
+        return self.dyn.store
+
+    # -------------------------------------------------------------- engines
+    def _new_engine(self, data: np.ndarray, ids: np.ndarray, like=None):
+        """Build an engine over ``(data, ids)`` matching the store's engine
+        type (``like`` or any existing engine as the template), with
+        per-vector auth words regenerated from the *current* policy.  An
+        engine-less store gets ScoreScan so it stays batch-capable."""
+        if self._factory is not None:
+            return self._factory(data, ids)
+        from ..ann.exact import ExactIndex
+        from ..ann.hnsw import HNSWIndex
+        from ..ann.scorescan import ScoreScanIndex, policy_auth_words
+        sample = like
+        if sample is None:
+            sample = next(iter(self.store.engines.values()), None)
+        if isinstance(sample, HNSWIndex):
+            bits = (policy_auth_words(self.store.policy)[ids]
+                    if hasattr(sample, "auth_bits") else None)
+            return HNSWIndex(data, ids=ids, M=sample.M, efc=sample.efc,
+                             seed=sample._seed, auth_bits=bits)
+        if isinstance(sample, ExactIndex):
+            return ExactIndex(data, ids=ids)
+        bits = policy_auth_words(self.store.policy)
+        kw = ({"config": sample.config}
+              if isinstance(sample, ScoreScanIndex) else {})
+        return ScoreScanIndex(data, ids=ids, auth_bits=bits[ids], **kw)
+
+    # ------------------------------------------------------ tombstone purge
+    def purge_tombstones(self) -> int:
+        """Physically remove tombstoned rows from every engine and reset the
+        tombstone set; ``tombstone_pad`` returns to zero.  Also drops stale
+        engine-local tombstones left behind by grant/revoke moves.  Answers
+        are unchanged: every dropped row was already filtered from results.
+        """
+        dyn, store = self.dyn, self.store
+        dead: Set[int] = set(dyn.tombstones)
+        for key, eng in list(store.engines.items()):
+            local = dead | getattr(eng, "tombstoned", set())
+            if not local:
+                continue
+            evids = eng.ids
+            if not len(evids):
+                continue
+            darr = np.fromiter(local, np.int64, len(local))
+            if not np.isin(evids, darr).any():
+                continue
+            store.engines[key] = eng.purged(local)
+            dyn.dirty_nodes.discard(key)
+            self.stats.engines_rebuilt += 1
+        n = len(dead)
+        dyn.tombstones.clear()
+        dyn.tombstone_roles.clear()
+        # compaction is the re-optimization point: drift measures from here
+        dyn._base_sizes = {key: len(store.engines[key].ids)
+                           for key in store.engines}
+        store.invalidate_caches()
+        self.stats.purges += 1
+        self.stats.tombstones_purged += n
+        return n
+
+    # ------------------------------------------------------- leftover folds
+    def foldable_blocks(self) -> List[int]:
+        thresh = self.config.leftover_fold_threshold
+        if thresh is None:
+            thresh = int(self.dyn.cm.lam_threshold)
+        return [b for b, ids in sorted(self.store.leftover_ids.items())
+                if len(ids) >= max(1, thresh)]
+
+    def _merge_target(self, tau: FrozenSet[int], m_new: int):
+        """The budgeted copy/merge decision, incrementally: among nodes
+        addressed by exactly ``tau``, merge into the one the cost model
+        prefers over a standalone node (one bigger visit vs two visits per
+        role in ``tau``); ``None`` means materialize standalone."""
+        lat, cm, k = self.store.lattice, self.dyn.cm, self.dyn.k
+        best_key, best_gain = None, 0.0
+        for key, node in lat.nodes.items():
+            if node.roles != tau:
+                continue
+            n_tot = node.size(lat.block_sizes)
+            gain = 0.0
+            for r in tau:
+                n_auth = node.authorized_size(lat.policy, r, lat.block_sizes)
+                split = (cm.role_query_cost(n_tot, max(n_auth, 1), k)
+                         + cm.role_query_cost(m_new, m_new, k))
+                merged = cm.role_query_cost(n_tot + m_new,
+                                            max(n_auth, 1) + m_new, k)
+                gain += split - merged
+            if gain > best_gain:
+                best_key, best_gain = key, gain
+        return best_key
+
+    def fold_block(self, b: int) -> None:
+        """Fold leftover block ``b`` into the lattice: drop the redundant
+        copy if a node already holds the block, else merge/materialize per
+        the cost model, then re-cover only the affected roles' plans."""
+        dyn, store = self.dyn, self.store
+        ids = np.asarray(store.leftover_ids[b], np.int64).copy()
+        vecs = np.asarray(store.leftover_vectors[b], np.float32).copy()
+        tau = frozenset(dyn.block_roles[b])
+        nodes, _ = dyn._containers(b)
+        if nodes:
+            pass            # dual-resident: the node copy already covers b
+        else:
+            target = self._merge_target(tau, len(ids))
+            if target is not None:
+                eng = store.engines[target]
+                if isinstance(eng, MutableEngine):
+                    from ..ann.scorescan import policy_auth_words
+                    bits = (policy_auth_words(store.policy)
+                            if isinstance(eng, MaskedEngine) else None)
+                    for vid, vec in zip(ids, vecs):
+                        if bits is not None:
+                            eng.insert(int(vid), vec,
+                                       auth_bits=bits[int(vid)])
+                        else:
+                            eng.insert(int(vid), vec)
+                else:
+                    store.engines[target] = self._new_engine(
+                        np.concatenate([eng.data, vecs]),
+                        np.concatenate([eng.ids, ids]), like=eng)
+                    self.stats.engines_rebuilt += 1
+                store.lattice.nodes[target].blocks.add(b)
+                dyn._base_sizes[target] = len(store.engines[target].ids)
+                dyn.dirty_nodes.discard(target)
+                self.stats.nodes_merged += 1
+            else:
+                key = store.lattice.add_node(tau, {b})
+                store.engines[key] = self._new_engine(vecs, ids)
+                dyn._base_sizes[key] = len(ids)
+                self.stats.nodes_created += 1
+        # the leftover copy is dropped either way: a fold is a move, so
+        # storage amplification never increases
+        affected = set(tau)
+        for r, plan in store.plans.items():
+            if b in plan.leftover_blocks:
+                affected.add(r)
+        dyn._discard_leftover_block(b)
+        phi = store.lattice.container_map()
+        leftset = frozenset(store.leftover_ids)
+        for r in sorted(affected):
+            if r in store.plans:
+                store.plans[r] = greedy_plan(store.lattice, r, dyn.cm,
+                                             dyn.k, phi=phi,
+                                             leftovers=leftset)
+                self.stats.plans_replanned += 1
+        store.invalidate_caches()
+        self.stats.folds += 1
+        self.stats.vectors_folded += len(ids)
+
+    # ------------------------------------------------------------- maintain
+    def maintain(self, budget_s: float = 0.05) -> Dict[str, float]:
+        """One maintenance cycle under a soft time budget: purge tombstones
+        when past the threshold, then fold oversized leftover blocks until
+        the budget runs out (the budget is checked *between* steps — a
+        single step may overrun it).  Returns the work done this cycle as a
+        counter delta (the scheduler accumulates these into ServeStats)."""
+        t0 = time.perf_counter()
+        deadline = t0 + max(0.0, float(budget_s))
+        before = self.stats.as_dict()
+        if len(self.dyn.tombstones) >= self.config.tombstone_purge_threshold:
+            self.purge_tombstones()
+        for b in self.foldable_blocks():
+            if time.perf_counter() >= deadline:
+                break
+            self.fold_block(b)
+        self.stats.cycles += 1
+        self.stats.maintain_s += time.perf_counter() - t0
+        after = self.stats.as_dict()
+        return {k: round(after[k] - before[k], 6) for k in after}

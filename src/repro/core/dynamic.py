@@ -62,6 +62,21 @@ class DynamicStore:
             for v in members:
                 self.vec_block[int(v)] = b
         self.data: List[np.ndarray] = [row for row in store.data]
+        # amortized growth buffer behind ``store.data``: inserts write into
+        # spare capacity and re-expose a prefix view, so per-insert cost is
+        # O(d) amortized instead of the former O(N·d) full-corpus vstack.
+        # Capacity doubles on exhaustion; ``data_reallocs`` counts doublings
+        # (≤ log2(total inserts) + 1 — asserted in tests/test_compaction.py).
+        self._data_buf = np.ascontiguousarray(store.data, np.float32)
+        self._data_len = len(self._data_buf)
+        self.data_reallocs = 0
+        store.data = self._data_buf[:self._data_len]
+        # per-block leftover growth buffers (same scheme); the store's
+        # leftover_ids/leftover_vectors entries stay prefix views into these
+        self._left_ids_buf: Dict[int, np.ndarray] = {}
+        self._left_vecs_buf: Dict[int, np.ndarray] = {}
+        self._left_len: Dict[int, int] = {}
+        self.leftover_reallocs = 0
         self.tombstones: Set[int] = set()
         # role combination each tombstoned vector carried when deleted:
         # the over-fetch pad intersects these with the querying role set
@@ -96,18 +111,81 @@ class DynamicStore:
         in_leftover = b in self.store.leftover_ids
         return nodes, in_leftover
 
+    def _append_data(self, vec: np.ndarray) -> None:
+        """Append one row to the corpus via the growth buffer (amortized
+        O(d)); ``store.data`` is re-exposed as a prefix view."""
+        if self._data_len == len(self._data_buf):
+            cap = max(8, 2 * len(self._data_buf))
+            new = np.empty((cap, self._data_buf.shape[1]), np.float32)
+            new[:self._data_len] = self._data_buf
+            self._data_buf = new
+            self.data_reallocs += 1
+        self._data_buf[self._data_len] = vec
+        self._data_len += 1
+        self.store.data = self._data_buf[:self._data_len]
+
+    def _adopt_leftover_buffers(self, b: int, d: int) -> None:
+        """Move block ``b``'s leftover arrays into growth buffers (lazy —
+        first mutation only; seed blocks never touched stay as built)."""
+        ids0 = self.store.leftover_ids.get(b, np.empty(0, np.int64))
+        vecs0 = self.store.leftover_vectors.get(
+            b, np.empty((0, d), np.float32))
+        cap = max(8, 2 * len(ids0))
+        ib = np.empty(cap, np.int64)
+        vb = np.empty((cap, d), np.float32)
+        ib[:len(ids0)] = ids0
+        vb[:len(ids0)] = vecs0
+        self._left_ids_buf[b] = ib
+        self._left_vecs_buf[b] = vb
+        self._left_len[b] = len(ids0)
+
+    def _expose_leftover(self, b: int) -> None:
+        n = self._left_len[b]
+        self.store.leftover_ids[b] = self._left_ids_buf[b][:n]
+        self.store.leftover_vectors[b] = self._left_vecs_buf[b][:n]
+
     def _append_leftover(self, b: int, vid: int, vec: np.ndarray) -> None:
-        self.store.leftover_ids[b] = np.append(
-            self.store.leftover_ids.get(b, np.empty(0, np.int64)), vid)
-        lv = self.store.leftover_vectors.get(
-            b, np.empty((0, len(vec)), np.float32))
-        self.store.leftover_vectors[b] = np.vstack([lv, vec[None]])
+        if b not in self._left_len:
+            self._adopt_leftover_buffers(b, len(vec))
+        n = self._left_len[b]
+        if n == len(self._left_ids_buf[b]):
+            cap = max(8, 2 * n)
+            ib = np.empty(cap, np.int64)
+            vb = np.empty((cap, self._left_vecs_buf[b].shape[1]), np.float32)
+            ib[:n] = self._left_ids_buf[b][:n]
+            vb[:n] = self._left_vecs_buf[b][:n]
+            self._left_ids_buf[b] = ib
+            self._left_vecs_buf[b] = vb
+            self.leftover_reallocs += 1
+        self._left_ids_buf[b][n] = np.int64(vid)
+        self._left_vecs_buf[b][n] = vec
+        self._left_len[b] = n + 1
+        self._expose_leftover(b)
 
     def _drop_leftover(self, b: int, vid: int) -> None:
-        ids = self.store.leftover_ids[b]
-        keep = ids != vid
-        self.store.leftover_ids[b] = ids[keep]
-        self.store.leftover_vectors[b] = self.store.leftover_vectors[b][keep]
+        if b not in self._left_len:
+            self._adopt_leftover_buffers(
+                b, self.store.leftover_vectors[b].shape[1])
+        n = self._left_len[b]
+        ids = self._left_ids_buf[b][:n]
+        keep = ids != np.int64(vid)
+        m = int(keep.sum())
+        if m != n:
+            # compact survivors into the buffer prefix (fancy indexing copies
+            # first, so the in-place prefix write is safe)
+            self._left_ids_buf[b][:m] = ids[keep]
+            self._left_vecs_buf[b][:m] = self._left_vecs_buf[b][:n][keep]
+            self._left_len[b] = m
+        self._expose_leftover(b)
+
+    def _discard_leftover_block(self, b: int) -> None:
+        """Remove block ``b`` from the leftover pool entirely (compaction
+        folds it into a lattice node)."""
+        self.store.leftover_ids.pop(b, None)
+        self.store.leftover_vectors.pop(b, None)
+        self._left_ids_buf.pop(b, None)
+        self._left_vecs_buf.pop(b, None)
+        self._left_len.pop(b, None)
 
     @staticmethod
     def _auth_row(eng, tau: RoleSet):
@@ -165,7 +243,7 @@ class DynamicStore:
         vid = len(self.data)
         vec = np.asarray(vec, np.float32)
         self.data.append(vec)
-        self.store.data = np.vstack([self.store.data, vec[None]])
+        self._append_data(vec)
         tau = frozenset(tau)
         b = self._block_key(tau)
         self.block_members[b].append(vid)
@@ -233,12 +311,14 @@ class DynamicStore:
         for key in nodes:
             eng = self.store.engines[key]
             if isinstance(eng, MutableEngine):
-                eng.insert(vid, vec)       # clears the tombstone mark too
+                # auth words ride along atomically — the row must never be
+                # live with stale/zero words (insert() handles the
+                # pre-existing-row case by refreshing in place)
                 if isinstance(eng, MaskedEngine):
-                    # refresh the (possibly pre-existing) row's auth words
-                    # so the in-kernel filter tracks new_tau
-                    eng.auth_bits[eng.ids == np.int64(vid)] = \
-                        self._auth_row(eng, new_tau)
+                    eng.insert(vid, vec,
+                               auth_bits=self._auth_row(eng, new_tau))
+                else:
+                    eng.insert(vid, vec)   # clears the tombstone mark too
             elif vid in set(int(i) for i in eng.ids):
                 # old and new block share this container: refresh the row's
                 # auth words in place so the in-kernel filter tracks new_tau

@@ -185,6 +185,9 @@ class VectorStore:
         total, auth = 0, 0
         for b in node.blocks:
             members = self.policy.block_members[b]
+            if not len(members):
+                # deletes can empty a block; it contributes nothing either way
+                continue
             total += len(members)
             if mask[members[0]]:
                 auth += len(members)

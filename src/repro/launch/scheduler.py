@@ -62,6 +62,8 @@ class ServeStats:
 
     submitted: int = 0
     completed: int = 0
+    cancelled: int = 0             # futures cancelled before their flush
+    failed: int = 0                # futures resolved with an exception
     batches_flushed: int = 0
     flush_full: int = 0            # flushed because max_batch was reached
     flush_timeout: int = 0         # flushed because max_wait_ms expired
@@ -85,6 +87,18 @@ class ServeStats:
     # slot -> cumulative busy seconds / kernel launches
     device_busy_s: Dict[int, float] = dataclasses.field(default_factory=dict)
     device_launches: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # background maintenance (LatticeCompactor hook): cycles run between
+    # flushes, wall time spent, and the compactor's own counter deltas
+    maintenance_runs: int = 0
+    maintenance_ms: float = 0.0
+    compaction: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def record_maintenance(self, elapsed_ms: float, counters) -> None:
+        self.maintenance_runs += 1
+        self.maintenance_ms += float(elapsed_ms)
+        if isinstance(counters, dict):
+            for k, v in counters.items():
+                self.compaction[k] = self.compaction.get(k, 0) + v
 
     def record_path(self, path: str) -> None:
         self.paths[path] = self.paths.get(path, 0) + 1
@@ -126,8 +140,13 @@ class ServeStats:
             "queue_depth_peak": self.queue_depth_peak,
             "overlap_flushes": self.overlap_flushes,
             "inflight_peak": self.inflight_peak,
+            "cancelled": self.cancelled, "failed": self.failed,
+            "maintenance_runs": self.maintenance_runs,
+            "maintenance_ms": round(self.maintenance_ms, 3),
             "p50_ms": self.p50_ms, "p99_ms": self.p99_ms,
         }
+        for key, n in sorted(self.compaction.items()):
+            out[f"compact_{key}"] = n
         for path, n in sorted(self.paths.items()):
             out[f"path_{path}"] = n
         for slot in sorted(self.device_busy_s):
@@ -141,6 +160,7 @@ class _Request:
     query: Query
     t_submit: float
     future: "asyncio.Future"
+    t_dispatch: float = 0.0        # stamped when its micro-batch is cut
 
 
 # search_fn(store, queries: Sequence[Query]) -> List[SearchResult]
@@ -177,7 +197,10 @@ class MicroBatchScheduler:
                  max_inflight: int = 1,
                  search_fn: Optional[SearchFn] = None,
                  stats: Optional[ServeStats] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 maintainer: Optional[Callable[[float], dict]] = None,
+                 maintenance_budget_s: float = 0.02,
+                 maintenance_interval_s: float = 0.25):
         assert max_batch >= 1, max_batch
         assert max_inflight >= 1, max_inflight
         self.store = store
@@ -190,9 +213,19 @@ class MicroBatchScheduler:
         self.search_fn = search_fn
         self.stats = stats if stats is not None else ServeStats()
         self._clock = clock
+        # background maintenance hook (LatticeCompactor.maintain or any
+        # ``budget_s -> counter-delta dict`` callable): invoked between
+        # flushes only while no search is in flight, so engine rebuilds
+        # never race a query
+        self.maintainer = maintainer
+        self.maintenance_budget_s = float(maintenance_budget_s)
+        self.maintenance_interval_s = float(maintenance_interval_s)
+        self._last_maintain = self._clock()
+        self._maintaining = False
         self._queue: List[_Request] = []
         self._wake: Optional[asyncio.Event] = None
         self._slot_free: Optional[asyncio.Event] = None
+        self._idle: Optional[asyncio.Event] = None
         self._task: Optional[asyncio.Task] = None
         self._closed = False
         self._draining = False
@@ -230,14 +263,25 @@ class MicroBatchScheduler:
             self._task = loop.create_task(self._run())
         return req.future
 
+    def _signal_idle(self) -> None:
+        """Wake drain() when nothing is queued, in flight, or maintaining."""
+        if (self._idle is not None and not self._queue
+                and self._inflight == 0 and not self._maintaining):
+            self._idle.set()
+
     async def drain(self) -> None:
-        """Flush everything queued, wait for in-flight batches to finish."""
+        """Flush everything queued, wait for in-flight batches to finish.
+        Event-driven: parks on an idle event set by the last retiring batch
+        (or maintenance cycle) instead of the former 0.5 ms poll loop."""
         self._draining = True
         if self._wake is not None:
             self._wake.set()
+        if self._idle is None:
+            self._idle = asyncio.Event()
         try:
-            while self._queue or self._inflight:
-                await asyncio.sleep(0.0005)
+            while self._queue or self._inflight or self._maintaining:
+                self._idle.clear()
+                await self._idle.wait()
         finally:
             self._draining = False
         if self._task is not None and not self._task.done():
@@ -253,10 +297,38 @@ class MicroBatchScheduler:
         await self.drain()
 
     # ------------------------------------------------------------- flush loop
+    async def _maybe_maintain(self, force: bool = False) -> None:
+        """Run one maintenance cycle if the hook is set, nothing is in
+        flight, and (unless ``force``) the interval elapsed.  The cycle runs
+        on the executor, but no search dispatches while ``_maintaining`` is
+        up — engine rebuilds never race a query."""
+        if (self.maintainer is None or self._maintaining
+                or self._inflight or self._draining):
+            return
+        now = self._clock()
+        if not force and (now - self._last_maintain
+                          < self.maintenance_interval_s):
+            return
+        self._maintaining = True
+        try:
+            loop = asyncio.get_running_loop()
+            counters = await loop.run_in_executor(
+                None, lambda: self.maintainer(self.maintenance_budget_s))
+        finally:
+            self._maintaining = False
+            self._last_maintain = self._clock()
+            self._signal_idle()
+        self.stats.record_maintenance(
+            (self._last_maintain - now) * 1e3, counters)
+
     async def _run(self) -> None:
         while True:
             if not self._queue:
-                # idle: park until the next submit; drain() cancels us
+                # idle transition: one maintenance cycle, then park until
+                # the next submit; drain() cancels us
+                await self._maybe_maintain(force=True)
+                if self._queue:
+                    continue
                 self._wake.clear()
                 await self._wake.wait()
             # accumulate until full or the oldest request's deadline passes
@@ -280,6 +352,9 @@ class MicroBatchScheduler:
                 self._slot_free.clear()
                 await self._slot_free.wait()
             if self._queue:
+                # between flushes, interval-gated: only fires when no search
+                # is in flight (the previous flush has fully retired)
+                await self._maybe_maintain()
                 if len(self._queue) >= self.max_batch:
                     reason = "full"
                 elif self._draining:
@@ -311,7 +386,7 @@ class MicroBatchScheduler:
             st.overlap_flushes += 1
         t0 = self._clock()
         for r in batch:
-            st.queue_ms.append((t0 - r.t_submit) * 1e3)
+            r.t_dispatch = t0
         task = asyncio.get_running_loop().create_task(
             self._execute(batch, reason))
         # hold a strong reference until done (create_task alone is not
@@ -338,8 +413,7 @@ class MicroBatchScheduler:
             self._inflight -= 1
             if self._slot_free is not None:
                 self._slot_free.set()
-        # the batch was dequeued either way: account it so queue_ms and
-        # latency_ms stay paired per request and flush counts stay honest
+        # the batch was dequeued either way: flush counts stay honest
         t1 = self._clock()
         st.batches_flushed += 1
         st.batch_size_sum += len(batch)
@@ -352,15 +426,23 @@ class MicroBatchScheduler:
         from ..core import ShardedVectorStore
         if isinstance(self.store, ShardedVectorStore):
             st.record_devices(self.store.device_stats())
+        # queue/latency samples are recorded only for requests actually
+        # resolved here, so the percentile population and the ``completed``
+        # (+``failed``) denominators agree; cancelled futures are counted
+        # separately instead of skewing the latency distribution
         for i, r in enumerate(batch):
-            st.latency_ms.append((t1 - r.t_submit) * 1e3)
-            if r.future.done():          # caller may have been cancelled
+            if r.future.done():          # caller cancelled before resolution
+                st.cancelled += 1
                 continue
+            st.queue_ms.append((r.t_dispatch - r.t_submit) * 1e3)
+            st.latency_ms.append((t1 - r.t_submit) * 1e3)
             if error is not None:
+                st.failed += 1
                 r.future.set_exception(error)
             else:
                 st.completed += 1
                 r.future.set_result(results[i])
+        self._signal_idle()
 
 
 RequestLike = Union[Query, Tuple[np.ndarray, int, int]]

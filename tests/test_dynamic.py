@@ -281,3 +281,108 @@ def test_reoptimization_trigger(dyn, small_policy):
     # (some lattices put the block in a big node — then more inserts needed;
     # accept either a trigger or a small store)
     assert isinstance(drifted, list)
+
+
+# --------------------------------------------- dynamic-path bugfix sweep
+def test_emptied_block_still_searchable_for_every_role(scan_dyn):
+    """Regression: deleting every member of a node-hosted block crashed
+    plan classification (``members[0]`` on the emptied block) on the next
+    search.  An empty block contributes nothing either way."""
+    dyn = scan_dyn
+    policy = dyn.store.policy
+    hosted = [b for b in range(len(dyn.block_members))
+              if dyn.block_members[b] and dyn._containers(b)[0]]
+    b = min(hosted, key=lambda i: len(dyn.block_members[i]))
+    for vid in list(dyn.block_members[b]):
+        dyn.delete(int(vid))
+    assert not dyn.block_members[b]
+    rng = np.random.default_rng(21)
+    x = rng.standard_normal(16).astype(np.float32)
+    for r in range(policy.n_roles):
+        got = [i for _, i in dyn.search(x, r, k=6)]
+        assert got == _truth(dyn, x, r, 6)[:len(got)], r
+    # multi-role query plans walk the same nodes
+    roles = tuple(range(policy.n_roles))
+    got = [i for _, i in dyn.search(x, roles=roles, k=6)]
+    mask = dyn.store.authorized_mask_multi(roles).copy()
+    for t in dyn.tombstones:
+        mask[t] = False
+    want = [i for _, i in metrics.brute_force_topk(dyn.store.data, mask,
+                                                   x, 6)]
+    assert got == want[:len(got)] and len(got) == len(want)
+
+
+def test_grant_carries_auth_words_at_insert_time(monkeypatch):
+    """Regression: grant/revoke moves inserted into mutable masked engines
+    with *no* auth words and patched the mask array afterwards — a window
+    where the row was live but invisible (or worse, carrying stale words).
+    The words for the new role combination must arrive with insert()."""
+    from repro.ann.hnsw import HNSWIndex
+    from repro.core import hnsw_masked_factory
+
+    policy = generate_policy(n_vectors=500, n_roles=8, n_permissions=20,
+                             seed=8)
+    rng = np.random.default_rng(9)
+    vecs = rng.standard_normal((policy.n_vectors, 16)).astype(np.float32)
+    cm = HNSWCostModel(lam_threshold=60)
+    res = build_effveda(policy, cm, beta=1.1, k=10)
+    store = build_vector_storage(
+        res, vecs, engine_factory=hnsw_masked_factory(policy, M=8, efc=60))
+    dyn = DynamicStore(store, cm)
+
+    calls = []
+    orig = HNSWIndex.insert
+
+    def spy(self, vid, vec, auth_bits=None):
+        calls.append((int(vid), auth_bits))
+        return orig(self, vid, vec, auth_bits=auth_bits)
+
+    monkeypatch.setattr(HNSWIndex, "insert", spy)
+
+    # a grant whose destination block is node-hosted, so the move takes the
+    # in-place MutableEngine path rather than the leftover path
+    pick = None
+    for vid in sorted(dyn.vec_block):
+        tau = dyn.block_roles[dyn.vec_block[vid]]
+        for r in range(policy.n_roles):
+            if r in tau:
+                continue
+            new_tau = frozenset(tau | {r})
+            if new_tau in dyn.block_roles:
+                nb = dyn.block_roles.index(new_tau)
+                if dyn._containers(nb)[0]:
+                    pick = (vid, r)
+                    break
+        if pick:
+            break
+    assert pick is not None
+    vid, r = pick
+    old_tau = dyn.block_roles[dyn.vec_block[vid]]
+    x = np.asarray(dyn.data[vid])
+    dyn.grant(vid, r)
+    moved = [bits for v, bits in calls if v == vid]
+    assert moved and all(bits is not None for bits in moved), \
+        "auth words must be passed at insert time, not patched in later"
+    # every engine now holding the row carries the NEW combination's words
+    new_tau = dyn.block_roles[dyn.vec_block[vid]]
+    assert r in new_tau
+    checked = 0
+    for eng in dyn.store.engines.values():
+        if not hasattr(eng, "auth_bits"):
+            continue
+        idx = np.flatnonzero(np.asarray(eng.ids) == vid)
+        if not len(idx) or vid in getattr(eng, "tombstoned", set()):
+            continue
+        row = np.atleast_1d(eng.auth_bits[int(idx[0])])
+        want = np.atleast_1d(dyn._auth_row(eng, new_tau))
+        np.testing.assert_array_equal(row, want)
+        checked += 1
+    assert checked >= 1
+    # behavioral: visible to the granted role, still to the old ones, and
+    # (auth filtering is exact even though the HNSW beam is approximate)
+    # never surfaced once revoked again
+    assert dyn.search(x, r, k=3)[0][1] == vid
+    for r_old in old_tau:
+        assert dyn.search(x, r_old, k=3)[0][1] == vid
+    dyn.revoke(vid, r)
+    assert all(i != vid for _, i in dyn.search(x, r, k=12))

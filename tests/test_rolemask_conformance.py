@@ -288,3 +288,68 @@ def test_warm_batch_shapes_uses_store_mask_width():
     calls = warm_batch_shapes(store, sizes=(1, 8), k=5)
     assert calls == n_engines > 0
     assert warm_batch_shapes(store, sizes=(8, 16), k=5) == 2 * n_engines
+
+
+# --------------------------------------------- churn + compaction property
+@settings(max_examples=6, deadline=None)
+@given(n_roles=st.sampled_from((8, 40)), seed=st.integers(0, 2))
+def test_sustained_churn_with_compaction_matches_oracle(n_roles, seed):
+    """ISSUE 6 satellite: interleave insert/delete/grant/revoke with
+    single- and multi-role searches (W=1 at 8 roles, W=2 at 40), check
+    every answer against the brute-force authorized oracle, and assert a
+    maintain() cycle — folds + tombstone purges — never changes answers.
+    The multi-role combination straddles the 32-role word boundary."""
+    from repro.core import CompactionConfig, LatticeCompactor
+
+    policy, vecs, store, cm = _fresh(n_roles, seed, scan=True)
+    dyn = DynamicStore(store, cm)
+    comp = LatticeCompactor(dyn, CompactionConfig(
+        tombstone_purge_threshold=6, leftover_fold_threshold=25))
+    rng = np.random.default_rng(5000 + 10 * seed + n_roles)
+    hi = min(n_roles - 1, 33)                # crosses the word boundary
+    combo = frozenset({0, hi})
+
+    def oracle(x, roles, k):
+        mask = dyn.store.authorized_mask_multi(roles).copy()
+        for t in dyn.tombstones:
+            mask[t] = False
+        return [v for _, v in metrics.brute_force_topk(dyn.store.data,
+                                                       mask, x, k)]
+
+    def alive():
+        return [v for v in range(len(dyn.store.data))
+                if v not in dyn.tombstones]
+
+    for step in range(40):
+        op = step % 4
+        if op == 0:
+            dyn.insert(rng.standard_normal(DIM).astype(np.float32), combo)
+        elif op == 1:
+            tau = frozenset({int(rng.integers(n_roles))})
+            dyn.insert(rng.standard_normal(DIM).astype(np.float32), tau)
+        elif op == 2:
+            dyn.delete(int(rng.choice(alive())))
+        else:
+            vid = int(rng.choice(alive()))
+            r = int(rng.integers(n_roles))
+            tau = dyn.block_roles[dyn.vec_block[vid]]
+            if r in tau and len(tau) > 1:
+                dyn.revoke(vid, r)
+            else:
+                dyn.grant(vid, r)
+        if step % 10 == 9:
+            queries = [(rng.standard_normal(DIM).astype(np.float32),
+                        (int(rng.integers(n_roles)),) if i % 2
+                        else (0, hi))
+                       for i in range(4)]
+            pre = [[v for _, v in dyn.search(x, roles=roles, k=5)]
+                   for x, roles in queries]
+            for (x, roles), got in zip(queries, pre):
+                want = oracle(x, roles, 5)
+                assert got == want[:len(got)], (roles, got, want)
+                assert len(got) == len(want)
+            comp.maintain(budget_s=2.0)
+            post = [[v for _, v in dyn.search(x, roles=roles, k=5)]
+                    for x, roles in queries]
+            assert post == pre, "compaction changed answers"
+    assert len(dyn.tombstones) <= 6          # purge threshold is the bound

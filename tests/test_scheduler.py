@@ -394,3 +394,68 @@ def test_serve_stream_end_to_end(server_pair, policy, vectors):
         for (q, role, k), res in zip(reqs, results):
             mask = srv.store.authorized_mask(role)
             assert all(mask[v] for _, v in res)
+
+
+# ----------------------------------------- accounting + drain bugfix sweep
+def test_cancelled_futures_counted_separately(scan_store, policy, vectors):
+    """Accounting regression: a future cancelled before its flush resolved
+    used to append a latency sample without incrementing ``completed`` —
+    the percentile population and the completion count disagreed.  Now
+    cancelled requests are tallied in ``stats.cancelled`` and contribute no
+    samples."""
+    reqs = _stream(policy, vectors, 6, seed=77)
+    stats = ServeStats()
+
+    async def main():
+        sched = MicroBatchScheduler(scan_store, max_batch=32,
+                                    max_wait_ms=500.0, stats=stats)
+        futs = [sched.submit(Query(vector=q, roles=(r,), k=k))
+                for q, r, k in reqs]
+        futs[1].cancel()
+        futs[4].cancel()
+        await sched.close()            # drain-flushes the whole batch
+        return futs
+
+    futs = asyncio.run(main())
+    assert stats.cancelled == 2 and stats.completed == 4
+    assert stats.failed == 0
+    assert len(stats.latency_ms) == len(stats.queue_ms) == 4
+    for i, f in enumerate(futs):
+        if i in (1, 4):
+            assert f.cancelled()
+        else:
+            assert isinstance(f.result(), SearchResult)
+    s = stats.summary()
+    assert s["cancelled"] == 2 and s["completed"] == 4
+
+
+def test_drain_parks_on_idle_event_instead_of_polling(scan_store, policy,
+                                                      vectors, monkeypatch):
+    """drain() regression: it used to wake every 0.5 ms to re-check the
+    queue; it now parks on an idle event set by the last retiring batch.
+    Any positive-delay sleep while draining would be the poll loop."""
+    reqs = _stream(policy, vectors, 12, seed=78)
+    sleeps = []
+    real_sleep = asyncio.sleep
+
+    async def spy_sleep(delay, *a, **kw):
+        sleeps.append(delay)
+        return await real_sleep(delay, *a, **kw)
+
+    stats = ServeStats()
+
+    async def main():
+        sched = MicroBatchScheduler(scan_store, max_batch=4,
+                                    max_wait_ms=1.0, stats=stats)
+        futs = [sched.submit(Query(vector=q, roles=(r,), k=k))
+                for q, r, k in reqs]
+        monkeypatch.setattr(asyncio, "sleep", spy_sleep)
+        try:
+            await sched.drain()
+        finally:
+            monkeypatch.setattr(asyncio, "sleep", real_sleep)
+        return await asyncio.gather(*futs)
+
+    results = asyncio.run(main())
+    assert len(results) == 12 and stats.completed == 12
+    assert sleeps and all(d == 0 for d in sleeps), sleeps
