@@ -73,6 +73,7 @@ def main() -> None:
     go("exp17", lambda: E.exp17_role_scaling(bc))
     go("exp18", lambda: E.exp18_sharded_scaling(bc))
     go("exp19", lambda: E.exp19_sustained_churn(bc))
+    go("exp20", lambda: E.exp20_slo_serving(bc))
 
     go("kernels", K.run_all)
 

@@ -89,11 +89,12 @@ dt = time.perf_counter() - t0
 for req, res in zip(requests, results):
     mask = ds.policy.authorized_mask(req.roles[0])
     assert all(mask[v] for _, v in res), "leak!"
-s = serve_stats.summary()
-paths = ", ".join(f"{p}×{n}" for p, n in sorted(serve_stats.paths.items()))
+s = serve_stats.summary()           # stable versioned schema (schema == 2)
+tot, fl = s["totals"], s["flush"]
+paths = ", ".join(f"{p}×{n}" for p, n in sorted(s["paths"].items()))
 print(f"stream: {n_stream} requests in {dt:.2f}s "
-      f"({n_stream / dt:.0f} qps) over {s['batches']:.0f} micro-batches "
-      f"(avg {s['avg_batch']:.1f}/flush: {s['flush_full']:.0f} full, "
-      f"{s['flush_timeout']:.0f} timeout; paths {paths}); "
-      f"p50 {s['p50_ms']:.0f} ms, p99 {s['p99_ms']:.0f} ms")
+      f"({n_stream / dt:.0f} qps) over {tot['batches']:.0f} micro-batches "
+      f"(avg {tot['avg_batch']:.1f}/flush: {fl['full']:.0f} full, "
+      f"{fl['timeout']:.0f} timeout; paths {paths}); "
+      f"p50 {tot['p50_ms']:.0f} ms, p99 {tot['p99_ms']:.0f} ms")
 print("isolation verified: every streamed result authorized for its role")

@@ -14,17 +14,29 @@ turning the previously trajectory-only artifacts into a gate:
   * quality: ``recall >= baseline_recall - recall_tol`` — recall is exact
     by construction on these paths, so the band is tight;
   * latency percentiles (p50/p99) are reported but not gated: they are
-    scheduler-timing dependent and too noisy for a hard gate.
+    scheduler-timing dependent and too noisy for a hard gate;
+  * ``--require ROW:KEY>=VALUE`` (repeatable; also ``<=``) gates an
+    arbitrary emitted key of the *current* report against an absolute
+    bound — no baseline involved.  exp20 uses this for the SLO acceptance
+    criteria (``p99_ratio>=2``, rejection confinement): a ratio of two
+    p99s measured in the same process is stable where an absolute p99 is
+    not.  A missing row or key is a failure, not a pass.
 
 Usage:
   python scripts/check_perf.py --baseline benchmarks/baselines/exp15.json \\
                                --current bench_exp15.json
+  python scripts/check_perf.py --baseline benchmarks/baselines/exp20.json \\
+                               --current bench_exp20.json \\
+                               --require "exp20_slo/aware:p99_ratio>=2"
 """
 from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
+
+REQUIRE_RE = re.compile(r"^(.*):([A-Za-z0-9_]+)(>=|<=)(-?[0-9.]+)$")
 
 
 def load_rows(path: str) -> dict:
@@ -42,6 +54,11 @@ def main() -> int:
                          "below 50%% of baseline)")
     ap.add_argument("--recall-tol", type=float, default=0.02,
                     help="absolute recall tolerance band")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="ROW:KEY>=VALUE",
+                    help="absolute bound on an emitted key of the current "
+                         "report (repeatable; >= or <=), e.g. "
+                         "'exp20_slo/aware:p99_ratio>=2'")
     args = ap.parse_args()
 
     base = load_rows(args.baseline)
@@ -72,13 +89,36 @@ def main() -> int:
                 failures.append(
                     f"{name}: {metric} {c:.3f} < floor {floor:.3f} "
                     f"(baseline {b:.3f})")
+    for spec in args.require:
+        m = REQUIRE_RE.match(spec)
+        if m is None:
+            failures.append(f"malformed --require spec: {spec!r}")
+            continue
+        name, key, op, bound = (m.group(1), m.group(2), m.group(3),
+                                float(m.group(4)))
+        crow = cur.get(name)
+        if crow is None or key not in crow:
+            failures.append(f"--require {spec}: row/key missing from "
+                            f"current report")
+            print(f"{name:44s} {key:7s} {'-':>10s} {'-':>10s} "
+                  f"{bound:10.3f} MISSING")
+            continue
+        c = float(crow[key])
+        ok = c >= bound if op == ">=" else c <= bound
+        print(f"{name:44s} {key:7s} {'(req)':>10s} {c:10.3f} "
+              f"{bound:10.3f} {'ok' if ok else 'REQUIRE-FAIL'}")
+        if not ok:
+            failures.append(f"{name}: {key} {c:.3f} violates "
+                            f"required {op} {bound:.3f}")
     if failures:
         print(f"\nPERF GATE FAILED ({len(failures)} regressions):",
               file=sys.stderr)
         for f in failures:
             print(f"  - {f}", file=sys.stderr)
         return 1
-    print(f"\nperf gate passed: {len(base)} baseline rows within tolerance")
+    print(f"\nperf gate passed: {len(base)} baseline rows within tolerance"
+          + (f", {len(args.require)} required bounds met"
+             if args.require else ""))
     return 0
 
 

@@ -119,3 +119,72 @@ post = [[v for _, v in dyn.search(x, roles=roles, k=5)]
 assert post == pre, "compaction changed answers"
 print("churn smoke OK (oracle parity, emptied block, purge+fold invariant)")
 PY
+
+echo "== SLO smoke: priority assembly + admission confinement + cache hygiene =="
+python - <<'PY'
+# the SLO-aware serving quick guard (full adversarial run: exp20):
+# (1) interactive arrivals jump an earlier-submitted bulk backlog,
+# (2) a bulk-only queue cap confines typed rejections to the bulk class,
+# (3) the auth-aware answer cache never serves a stale answer across a
+#     grant/revoke — a stale post-revoke hit would be an access leak
+import asyncio
+import numpy as np
+from repro.core import (AnswerCache, DynamicStore, HNSWCostModel, Query,
+                        Rejected, SLOClass, SearchResult, SearchStats,
+                        build_effveda, build_vector_storage, exact_factory,
+                        generate_policy)
+from repro.launch.admission import AdmissionController
+from repro.launch.scheduler import MicroBatchScheduler, ServeStats
+
+batches = []
+def search_fn(store, queries):
+    batches.append([q.slo for q in queries])
+    return [SearchResult(hits=[], stats=SearchStats(), path="batched")
+            for _ in queries]
+
+def mk(slo, i):
+    return Query(vector=np.full(4, float(i), np.float32), roles=(0,), k=1,
+                 slo=slo)
+
+async def drive():
+    stats = ServeStats()
+    sched = MicroBatchScheduler(
+        object(), max_batch=4, max_wait_ms=50.0, search_fn=search_fn,
+        admission=AdmissionController(queue_limits={SLOClass.BULK: 6}),
+        stats=stats)
+    try:
+        futs = [sched.submit(mk(SLOClass.BULK, i)) for i in range(9)]
+        futs += [sched.submit(mk(SLOClass.INTERACTIVE, 10 + i))
+                 for i in range(2)]
+        return await asyncio.gather(*futs), stats
+    finally:
+        await sched.close()
+
+out, stats = asyncio.run(drive())
+assert batches[0][:2] == [SLOClass.INTERACTIVE] * 2, batches[0]
+rej = [o for o in out if isinstance(o, Rejected)]
+assert len(rej) == 3 and all(r.slo is SLOClass.BULK for r in rej), rej
+assert stats.cls(SLOClass.INTERACTIVE).rejected == 0
+assert stats.summary()["schema"] == 2
+
+policy = generate_policy(n_vectors=300, n_roles=8, n_permissions=20, seed=3)
+rng = np.random.default_rng(3)
+vecs = rng.standard_normal((300, 8)).astype(np.float32)
+cm = HNSWCostModel(lam_threshold=60)
+store = build_vector_storage(build_effveda(policy, cm, beta=1.1, k=5),
+                             vecs, engine_factory=exact_factory())
+dyn = DynamicStore(store, cm)
+cache = AnswerCache(capacity=64)
+dyn.attach_cache(cache)
+r_from, r_to = 0, 3
+vid = next(int(v) for v in policy.d_of_role(r_from)
+           if not policy.authorized_mask(r_to)[v])
+x = store.data[vid]
+assert all(v != vid for _, v in dyn.search(x, r_to, k=5))   # cached w/o vid
+dyn.grant(vid, r_to)
+assert dyn.search(x, r_to, k=5)[0][1] == vid                # grant visible
+dyn.revoke(vid, r_to)
+assert all(v != vid for _, v in dyn.search(x, r_to, k=5)), "stale hit: leak"
+assert cache.stats.hits + cache.stats.invalidated > 0       # cache engaged
+print("SLO smoke OK (priority cut, bulk-confined rejection, cache hygiene)")
+PY

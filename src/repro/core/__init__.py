@@ -8,14 +8,18 @@ Public API:
   build_vector_storage               — physical engines per node
   Query / SearchResult / Engine protocols — the typed retrieval contract
                                        (DESIGN.md §Query API)
+  SLOClass / Rejected                — scheduling classes + the typed
+                                       admission-rejection outcome
+                                       (DESIGN.md §SLO-Aware Serving)
   VectorStore.search(queries)        — THE retrieval entry point
+  AnswerCache                        — auth-aware result cache keyed by
+                                       (query key, role-mask words, k)
   ShardedVectorStore / shard_store   — multi-device sharded execution
                                        (DESIGN.md §Sharded Execution)
   DynamicStore / LatticeCompactor    — Appendix I mutations + background
                                        compaction (DESIGN.md §Dynamic
                                        Maintenance)
   coordinated_search / independent_search / routed_search — §6.2 reference
-  batched_search                     — deprecated shim over store.search
   metrics                            — SA / QA / recall / purity
 """
 from .policy import (MASK_WORD_BITS, AccessPolicy, generate_policy,
@@ -26,13 +30,15 @@ from .queryplan import Plan, build_all_plans, greedy_plan, plan_cost, avg_cost
 from .veda import BuildResult, VedaBuilder, build_veda
 from .effveda import EffVedaBuilder, build_effveda
 from .api import (DEFAULT_MIN_PACKED_BATCH, BatchEngine, Engine,
-                  MaskedEngine, MutableEngine, Query, ResumableEngine,
-                  SearchResult, SearchStats, supports_batch)
+                  MaskedEngine, MutableEngine, Outcome, Query, Rejected,
+                  ResumableEngine, SLOClass, SearchResult, SearchStats,
+                  supports_batch)
 from .store import (VectorStore, build_vector_storage, build_oracle_store,
                     hnsw_factory, hnsw_masked_factory, exact_factory)
 from .coordinated import (coordinated_search, independent_search,
                           global_filtered_search, routed_search)
-from .batched import BatchTopK, batched_search, execute_queries
+from .batched import BatchTopK, execute_queries
+from .cache import AnswerCache, CacheStats
 from .sharded import (DeviceShard, Placement, ShardAssignment,
                       ShardedVectorStore, place_shards, shard_store)
 from .dynamic import DynamicStore
@@ -47,13 +53,15 @@ __all__ = [
     "BuildResult", "VedaBuilder", "build_veda",
     "EffVedaBuilder", "build_effveda",
     "Query", "SearchResult", "SearchStats",
+    "SLOClass", "Rejected", "Outcome",
     "Engine", "ResumableEngine", "MaskedEngine", "BatchEngine",
     "MutableEngine", "supports_batch", "DEFAULT_MIN_PACKED_BATCH",
     "VectorStore", "build_vector_storage", "build_oracle_store",
     "hnsw_factory", "hnsw_masked_factory", "exact_factory",
     "coordinated_search", "independent_search",
     "global_filtered_search", "routed_search", "metrics",
-    "BatchTopK", "batched_search", "execute_queries",
+    "BatchTopK", "execute_queries",
+    "AnswerCache", "CacheStats",
     "ShardedVectorStore", "DeviceShard", "Placement", "ShardAssignment",
     "place_shards", "shard_store",
     "DynamicStore",

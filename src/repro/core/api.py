@@ -7,10 +7,13 @@ executes through one typed interface:
   * :class:`Query` — what a caller asks for: a vector, the role set it is
     authorized under (one or many; multi-role queries take union semantics,
     paper §6 / Exp 14), ``k``, ``efs`` for beam engines, and scheduling
-    metadata (``priority``, ``tag``).
+    metadata: an :class:`SLOClass` (``slo``), an optional ``deadline_ms``,
+    and a free-form ``tag``.
   * :class:`SearchResult` — what a caller gets back: sorted authorized
     ``(dist, id)`` hits, this query's :class:`SearchStats`, and which
-    execution path produced it.
+    execution path produced it.  Scheduler futures resolve to the typed
+    union ``SearchResult | Rejected`` (:data:`Outcome`): admission control
+    resolves a shed request with :class:`Rejected` instead of hanging it.
   * The :class:`Engine` protocol hierarchy — what a lattice-node index must
     provide, with optional capabilities (:class:`ResumableEngine`,
     :class:`MaskedEngine`, :class:`BatchEngine`, :class:`MutableEngine`).
@@ -28,6 +31,8 @@ Execution).
 from __future__ import annotations
 
 import dataclasses
+import enum
+import warnings
 from typing import (Iterable, Iterator, List, Optional, Protocol, Sequence,
                     Tuple, Union, runtime_checkable)
 
@@ -96,6 +101,43 @@ class SearchStats:
         return self.data_authorized_touched / self.data_touched
 
 
+# ----------------------------------------------------------------------- slo
+class SLOClass(enum.IntEnum):
+    """Scheduling class a query is served under (DESIGN.md §SLO-Aware
+    Serving).  Ordered by urgency: the scheduler cuts micro-batches
+    INTERACTIVE-first, and admission control sheds BULK first.
+
+      * ``INTERACTIVE`` — p99-sensitive; may carry a ``deadline_ms`` and can
+        preempt bulk backlog at flush-cut time.
+      * ``STANDARD`` — the default; served in arrival order after any
+        interactive backlog.
+      * ``BULK`` — throughput class; waits longest per flush, rides along in
+        whatever batch capacity interactive/standard traffic leaves, and is
+        the first (and under the default policy, only) class admission
+        rejects under overload.
+    """
+
+    BULK = 0
+    STANDARD = 1
+    INTERACTIVE = 2
+
+    @classmethod
+    def from_priority(cls, priority: int) -> "SLOClass":
+        """Map the retired free-form ``Query.priority`` int to a class:
+        positive → INTERACTIVE, zero → STANDARD, negative → BULK."""
+        p = int(priority)
+        if p > 0:
+            return cls.INTERACTIVE
+        if p < 0:
+            return cls.BULK
+        return cls.STANDARD
+
+    @property
+    def label(self) -> str:
+        """Lower-case name — the key used in ``ServeStats.summary()``."""
+        return self.name.lower()
+
+
 # --------------------------------------------------------------------- query
 @dataclasses.dataclass(frozen=True, eq=False)
 class Query:
@@ -104,17 +146,25 @@ class Query:
     ``roles`` is the set of roles the query is authorized under — one role
     for the common case, several for union-semantics multi-role queries
     (``D(roles) = U_r D(r)``).  ``efs`` only matters for beam engines (HNSW);
-    scan engines are exact and ignore it.  ``priority``/``tag`` are
-    scheduling metadata carried through untouched (FIFO today, SLO-aware
-    scheduling later).
+    scan engines are exact and ignore it.  ``slo`` and ``deadline_ms`` are
+    the scheduling contract (DESIGN.md §SLO-Aware Serving): the class picks
+    the flush-assembly queue and ``deadline_ms`` (interactive traffic,
+    optional) both tightens the flush cut and feeds admission's
+    infeasibility check.  ``tag`` is free-form caller metadata.
+
+    ``priority`` is the retired PR-2 field: passing an int still works but
+    emits a ``DeprecationWarning`` and maps onto ``slo`` via
+    :meth:`SLOClass.from_priority`.
     """
 
     vector: np.ndarray
     roles: Tuple[Role, ...]
     k: int = 10
     efs: int = 50
-    priority: int = 0
+    slo: SLOClass = SLOClass.STANDARD
+    deadline_ms: Optional[float] = None
     tag: Optional[str] = None
+    priority: Optional[int] = None    # deprecated — use ``slo``
 
     def __post_init__(self):
         object.__setattr__(self, "vector",
@@ -128,6 +178,19 @@ class Query:
         assert roles, "a query must carry at least one role"
         assert self.k >= 1, self.k
         object.__setattr__(self, "roles", roles)
+        if self.priority is not None:
+            warnings.warn(
+                "Query.priority is deprecated; pass slo=SLOClass.INTERACTIVE"
+                "/STANDARD/BULK (positive/zero/negative priority maps in that"
+                " order)", DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "slo",
+                               SLOClass.from_priority(self.priority))
+        assert isinstance(self.slo, SLOClass), \
+            f"slo must be an SLOClass, got {self.slo!r}"
+        if self.deadline_ms is not None:
+            dl = float(self.deadline_ms)
+            assert dl > 0, f"deadline_ms must be positive, got {dl}"
+            object.__setattr__(self, "deadline_ms", dl)
 
     @classmethod
     def single(cls, vector: np.ndarray, role: Role, k: int = 10,
@@ -171,6 +234,29 @@ class SearchResult:
     def __getitem__(self, i):
         return self.hits[i]
 
+
+@dataclasses.dataclass
+class Rejected:
+    """Typed terminal outcome for a request admission sheds (DESIGN.md
+    §SLO-Aware Serving).  The scheduler resolves the future with this value
+    — never an exception and never a hang — so ``asyncio.gather`` over a
+    mixed stream keeps working; callers branch with ``isinstance``.
+
+    ``reason`` is machine-readable: ``"rate_limit"`` (a per-role token
+    bucket ran dry), ``"queue_depth"`` (the class backlog cap), or
+    ``"deadline_infeasible"`` (the estimated queue wait already exceeds the
+    query's ``deadline_ms``).  ``retry_after_ms`` is the controller's
+    backoff hint (0 when unknown).
+    """
+
+    reason: str
+    retry_after_ms: float = 0.0
+    slo: SLOClass = SLOClass.STANDARD
+    tag: Optional[str] = None
+
+
+#: What a scheduler future resolves to: the answer, or a typed rejection.
+Outcome = Union[SearchResult, Rejected]
 
 #: What ``VectorStore.search`` / ``ShardedVectorStore.search`` accept: one
 #: :class:`Query` or any sequence of them (normalized by :func:`as_queries`).

@@ -32,12 +32,9 @@ its centroid-radius lower bound proves it cannot improve that row's top-k),
 so the returned (dist, id) sets are identical to per-query coordinated
 search for any visit schedule; only the schedule-dependent skip counters in
 :class:`SearchStats` may differ (see tests/test_batched.py).
-
-``batched_search`` survives as a deprecation shim over ``execute_queries``.
 """
 from __future__ import annotations
 
-import warnings
 from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -345,28 +342,3 @@ def execute_queries(store: VectorStore, queries: Sequence[Query], *,
     return [SearchResult(hits=items[i][:int(ks[i])], stats=stats_rows[i],
                          path=path)
             for i in range(b)]
-
-
-def batched_search(store: VectorStore, queries: np.ndarray,
-                   roles: Sequence[int], k: int,
-                   stats: Optional[SearchStats] = None,
-                   packed: Optional[bool] = None
-                   ) -> List[List[Tuple[float, int]]]:
-    """Deprecated positional batch API — use ``store.search([Query, ...])``.
-
-    Kept as a thin shim: builds one single-role :class:`Query` per row and
-    runs :func:`execute_queries` with the legacy leftover semantics
-    (``packed=None`` means "shard iff already built", no batch-size
-    threshold).  Merges per-row stats into ``stats`` and returns bare
-    per-row hit lists, exactly like PR 1/2.
-    """
-    warnings.warn("batched_search(store, queries, roles, k) is deprecated; "
-                  "use store.search([Query(...), ...])",
-                  DeprecationWarning, stacklevel=2)
-    qlist = [Query(vector=q, roles=(int(r),), k=int(k))
-             for q, r in zip(np.asarray(queries, np.float32), roles)]
-    results = execute_queries(store, qlist, packed=packed, min_packed_batch=1)
-    if stats is not None:
-        for res in results:
-            stats.merge(res.stats)
-    return [res.hits for res in results]

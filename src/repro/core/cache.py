@@ -1,0 +1,180 @@
+"""Auth-aware answer cache (DESIGN.md §SLO-Aware Serving).
+
+Generic ANN result caches are intractable to keep fresh: any insert might
+displace any cached top-k, and any permission change might leak a result to
+a role that just lost access.  The access-aware index makes both problems
+*nameable*: every vector lives in exactly one role-combination block, so a
+mutation touches exactly one role set ``tau`` (the old one, the new one, or
+their union for a grant/revoke move) — and a cached answer can only observe
+that mutation if its own role-mask words intersect ``tau``'s words.  That
+is the HoneyBee partitioning argument applied to answers instead of data:
+role masks name exactly which cached results a mutation invalidates.
+
+:class:`AnswerCache` keys entries by ``(query key, role-mask words, k,
+efs)``:
+
+  * **query key** — the query vector itself (byte-exact) with
+    ``cluster_eps == 0`` (the default: every hit is provably identical to a
+    fresh search), or the query's cell on an ``eps``-grid when
+    ``cluster_eps > 0`` (query-cluster mode: vectors within the same cell
+    share an entry — an approximate, opt-in trade documented as such; never
+    use it where oracle parity is asserted).
+  * **role-mask words** — the ``(W,)`` packed uint32 words of the query's
+    role set (PR 4), byte-exact.  Same vector under different roles never
+    shares an entry, so a cache hit can never cross an authorization
+    boundary.
+  * **k / efs** — result-shape parameters; beam engines are approximate in
+    ``efs``, so it keys too.
+
+Invalidation (precise, and *sufficient* — see DESIGN.md for the staleness
+argument):
+
+  * ``invalidate_words(tau_words)`` — drop every entry whose mask
+    intersects (any-word AND) the mutated role set.  Inserts and the
+    grant/revoke move use this with the new / old∪new ``tau``.
+  * ``invalidate_id(vid)`` — drop every entry whose hit list contains the
+    vector.  Deletes use this: removing a vector can only change answers
+    that contained it.
+  * ``clear()`` — the conservative hammer; compaction's tombstone purge
+    calls it when engines are rebuilt.
+
+The cache is a plain LRU (``capacity`` entries) and is thread-compatible
+with the serving stack: the scheduler consults it on the event loop, and
+:class:`~repro.core.dynamic.DynamicStore` consults/invalidates it inline
+with mutations (which are single-threaded by contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .policy import Role, roles_word_mask
+
+__all__ = ["AnswerCache", "CacheStats"]
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Counters for one :class:`AnswerCache` (surfaces in
+    ``ServeStats.summary()['totals']`` / per-class blocks)."""
+
+    hits: int = 0
+    misses: int = 0
+    stores: int = 0
+    evictions: int = 0
+    invalidated: int = 0      # entries dropped by precise invalidation
+    clears: int = 0           # whole-cache clears (compaction purge hook)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses,
+                "stores": self.stores, "evictions": self.evictions,
+                "invalidated": self.invalidated, "clears": self.clears,
+                "hit_rate": round(self.hit_rate, 4)}
+
+
+@dataclasses.dataclass
+class _Entry:
+    hits: Tuple[Tuple[float, int], ...]
+    words: np.ndarray             # (W,) uint32 role-mask words of the query
+    ids: frozenset                # hit vector ids, for invalidate_id()
+
+
+class AnswerCache:
+    """LRU auth-aware top-k answer cache.  See the module docstring for the
+    key structure and the invalidation contract."""
+
+    def __init__(self, capacity: int = 1024, *,
+                 cluster_eps: float = 0.0) -> None:
+        assert capacity >= 1, capacity
+        assert cluster_eps >= 0.0, cluster_eps
+        self.capacity = int(capacity)
+        self.cluster_eps = float(cluster_eps)
+        self.stats = CacheStats()
+        self._entries: "OrderedDict[tuple, _Entry]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # ---------------------------------------------------------------- keying
+    def _vec_key(self, vector: np.ndarray) -> bytes:
+        v = np.asarray(vector, dtype=np.float32)
+        if self.cluster_eps > 0.0:
+            # query-cluster mode: the grid cell is the "centroid" id —
+            # nearby queries share an entry (approximate, opt-in)
+            v = np.floor(v / self.cluster_eps).astype(np.int32)
+        return v.tobytes()
+
+    def key_for(self, vector: np.ndarray, words: np.ndarray, k: int,
+                efs: int) -> tuple:
+        w = np.ascontiguousarray(np.asarray(words, dtype=np.uint32))
+        return (self._vec_key(vector), w.tobytes(), int(k), int(efs))
+
+    # ---------------------------------------------------------------- lookup
+    def lookup(self, vector: np.ndarray, words: np.ndarray, k: int,
+               efs: int = 0) -> Optional[List[Tuple[float, int]]]:
+        """Return a fresh copy of the cached hit list, or None on miss."""
+        key = self.key_for(vector, words, k, efs)
+        ent = self._entries.get(key)
+        if ent is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return [tuple(h) for h in ent.hits]
+
+    def store(self, vector: np.ndarray, words: np.ndarray, k: int,
+              hits: Sequence[Tuple[float, int]], efs: int = 0) -> None:
+        """Insert/refresh one answer (evicts LRU past ``capacity``)."""
+        key = self.key_for(vector, words, k, efs)
+        w = np.array(words, dtype=np.uint32, copy=True)
+        ent = _Entry(hits=tuple((float(d), int(v)) for d, v in hits),
+                     words=w, ids=frozenset(int(v) for _, v in hits))
+        self._entries[key] = ent
+        self._entries.move_to_end(key)
+        self.stats.stores += 1
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+
+    # ---------------------------------------------------------- invalidation
+    def invalidate_words(self, words: np.ndarray) -> int:
+        """Drop entries whose role-mask words intersect ``words``
+        (any-word AND ≠ 0).  Returns the number dropped."""
+        w = np.asarray(words, dtype=np.uint32)
+        doomed = [key for key, ent in self._entries.items()
+                  if bool(np.any(ent.words & w))]
+        for key in doomed:
+            del self._entries[key]
+        self.stats.invalidated += len(doomed)
+        return len(doomed)
+
+    def invalidate_roles(self, roles: Sequence[Role], width: int) -> int:
+        """Convenience: :meth:`invalidate_words` for a role set."""
+        return self.invalidate_words(roles_word_mask(roles, width=width))
+
+    def invalidate_id(self, vid: int) -> int:
+        """Drop entries whose hit list contains ``vid`` (delete path:
+        removing a vector only changes answers that surfaced it)."""
+        vid = int(vid)
+        doomed = [key for key, ent in self._entries.items()
+                  if vid in ent.ids]
+        for key in doomed:
+            del self._entries[key]
+        self.stats.invalidated += len(doomed)
+        return len(doomed)
+
+    def clear(self) -> int:
+        """Drop everything (compaction purge hook / manual reset)."""
+        n = len(self._entries)
+        self._entries.clear()
+        if n:
+            self.stats.clears += 1
+        return n

@@ -148,6 +148,12 @@ class LatticeCompactor:
         dyn._base_sizes = {key: len(store.engines[key].ids)
                            for key in store.engines}
         store.invalidate_caches()
+        # answer-cache hygiene for the rebuilt engines: cached hits never
+        # reference purged rows (delete() invalidated by id, and entries
+        # are stored post-filter), but a purge swaps whole engines out —
+        # clear conservatively rather than reason about engine identity
+        if getattr(dyn, "result_cache", None) is not None:
+            dyn.result_cache.clear()
         self.stats.purges += 1
         self.stats.tombstones_purged += n
         return n

@@ -47,11 +47,16 @@ class DynamicStore:
     """Mutable wrapper over a built VectorStore (Appendix I semantics)."""
 
     def __init__(self, store: VectorStore, cost_model: HNSWCostModel,
-                 k: int = 10, slack: float = 0.3):
+                 k: int = 10, slack: float = 0.3, result_cache=None):
         self.store = store
         self.cm = cost_model
         self.k = k
         self.slack = slack
+        # optional auth-aware answer cache (core/cache.py): consulted by
+        # ``search`` and invalidated *precisely* by each mutation — the
+        # mutated block's role combination names exactly which cached
+        # answers could observe the change (DESIGN.md §SLO-Aware Serving)
+        self.result_cache = result_cache
         policy = store.policy
         # mutable policy state
         self.block_roles: List[RoleSet] = list(policy.block_roles)
@@ -86,6 +91,31 @@ class DynamicStore:
                             for key in store.engines}
 
     # ------------------------------------------------------------- internals
+    def attach_cache(self, cache) -> None:
+        """Attach an :class:`~repro.core.AnswerCache` (cleared first — it
+        may hold answers from before this store's mutations)."""
+        cache.clear()
+        self.result_cache = cache
+
+    def _cache_words(self, roles: Sequence[Role]) -> np.ndarray:
+        return roles_word_mask(sorted(set(int(r) for r in roles)),
+                               width=self.store.mask_width)
+
+    def _cache_mutated(self, tau: RoleSet) -> None:
+        """Precise invalidation for an insert or a grant/revoke move: drop
+        cached answers whose role-mask words intersect the mutated
+        combination.  Sufficiency: a vector in block ``tau`` is authorized
+        for exactly the roles in ``tau``, so an answer under a disjoint
+        role set can neither gain nor lose it."""
+        if self.result_cache is not None and tau:
+            self.result_cache.invalidate_words(self._cache_words(tau))
+
+    def _cache_deleted(self, vid: int) -> None:
+        """Precise invalidation for a delete: removing a vector only
+        changes answers that surfaced it."""
+        if self.result_cache is not None:
+            self.result_cache.invalidate_id(vid)
+
     def _block_key(self, tau: RoleSet) -> int:
         for b, t in enumerate(self.block_roles):
             if t == tau:
@@ -264,6 +294,8 @@ class DynamicStore:
             self._append_leftover(b, vid, vec)
         # membership bookkeeping for impurity/purity checks
         self._sync_policy()
+        # the new vector can enter any cached top-k whose roles see ``tau``
+        self._cache_mutated(tau)
         return vid
 
     def delete(self, vid: int) -> None:
@@ -284,6 +316,7 @@ class DynamicStore:
                 eng.tombstone(vid)
         self.dirty_nodes.update(nodes)
         self._sync_policy(with_roles=False)
+        self._cache_deleted(vid)
 
     def grant(self, vid: int, r: Role) -> None:
         self._move(vid, lambda tau: frozenset(tau | {r}))
@@ -344,6 +377,10 @@ class DynamicStore:
         if in_left or not nodes:
             self._append_leftover(b, vid, vec)
         self._sync_policy()
+        # a move is visible to any role set intersecting either combination
+        # (delete() above already dropped answers that contained the row);
+        # old ∪ new covers both the grant and the revoke direction
+        self._cache_mutated(frozenset(old_tau) | frozenset(new_tau))
 
     # ---------------------------------------------------------------- search
     def tombstone_pad(self, roles: Sequence[Role]) -> int:
@@ -377,11 +414,22 @@ class DynamicStore:
             roles = (int(role),)
         else:
             roles = tuple(int(r) for r in roles)
+        cache = self.result_cache
+        words = self._cache_words(roles) if cache is not None else None
+        if cache is not None:
+            hit = cache.lookup(x, words, k, efs)
+            if hit is not None:
+                return hit
         pad = self.tombstone_pad(roles)
         res = self.store.search(
             [Query(vector=x, roles=roles, k=k + pad, efs=efs)])[0]
-        return [(d, v) for d, v in res.hits
-                if v not in self.tombstones][:k]
+        out = [(d, v) for d, v in res.hits
+               if v not in self.tombstones][:k]
+        if cache is not None:
+            # stored post-tombstone-filter, so a cached answer never
+            # carries a deleted id; mutations invalidate precisely
+            cache.store(x, words, k, out, efs=efs)
+        return out
 
     # --------------------------------------------------------- lazy re-optim
     def needs_reoptimization(self) -> List:

@@ -363,6 +363,23 @@ class ShardedVectorStore:
                     "launches": float(self.device_launches[i])}
                 for i in range(self.mesh.size)}
 
+    def slots_for_roles(self, roles) -> frozenset:
+        """Mesh slots a query under this role set will touch: the slots
+        holding shards of its plan cover's nodes, plus the packed-leftover
+        slots when the plan has leftover blocks.  This is what the
+        scheduler's device-aware cut policy keys on (DESIGN.md §SLO-Aware
+        Serving): two queries with disjoint slot sets can execute in
+        overlapped flushes without contending on any launch stream."""
+        plan = self.store.plan_for_roles(tuple(roles))
+        slots = set()
+        for key in plan.nodes:
+            for sh in self.node_shards.get(key, ()):
+                slots.add(sh.slot)
+        if plan.leftover_blocks:
+            for sh in self.leftover_shards:
+                slots.add(sh.slot)
+        return frozenset(slots)
+
     def close(self) -> None:
         """Shut down the per-slot executors (idempotent)."""
         if not self._closed:

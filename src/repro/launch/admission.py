@@ -1,0 +1,157 @@
+"""Admission control for the SLO-aware scheduler (DESIGN.md §SLO-Aware
+Serving).
+
+Continuous batching absorbs bursts by letting the backlog grow — but past
+saturation an unbounded backlog just converts overload into unbounded
+latency for everyone.  Admission control converts it into *typed, prompt*
+rejection for the traffic that can best tolerate it:
+
+  * **Per-role token buckets** — each role (tenant) can be capped at a
+    sustained request rate with a burst allowance.  A multi-role query must
+    find a token in *every* limited role it carries (tokens taken from some
+    buckets are refunded if another runs dry), so a flooding tenant cannot
+    launder traffic through a union query.
+  * **Per-class queue-depth caps** — the scheduler reports the current
+    backlog per :class:`~repro.core.SLOClass`; a class over its cap sheds
+    new arrivals of that class.  The default policy caps only ``BULK``,
+    which is what confines rejections to the bulk class under a bulk-flood
+    trace (benchmarks exp20).
+  * **Deadline infeasibility** — a query carrying ``deadline_ms`` whose
+    estimated queue wait (the scheduler's flush-time EMA × flushes ahead)
+    already exceeds the deadline is rejected immediately: a guaranteed-late
+    answer wastes a device slot someone else could use.
+
+Every rejection is a :class:`~repro.core.Rejected` value resolved onto the
+request future — never an exception, never a hang — with a
+``retry_after_ms`` hint (time until the bucket refills, or one flush
+interval for depth/deadline sheds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Mapping, Optional
+
+from ..core import Query, Rejected, SLOClass
+from ..core.policy import Role
+
+__all__ = ["AdmissionController", "RoleLimit", "TokenBucket"]
+
+
+@dataclasses.dataclass
+class RoleLimit:
+    """Sustained request rate (tokens/second) + burst size for one role."""
+
+    rate_per_s: float
+    burst: int = 8
+
+
+class TokenBucket:
+    """Classic token bucket: ``burst`` capacity, refilled at ``rate_per_s``.
+
+    Time comes from an injected ``clock`` so tests (and the scheduler,
+    which shares its clock) drive refills deterministically.
+    """
+
+    def __init__(self, rate_per_s: float, burst: int,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
+        assert rate_per_s > 0, rate_per_s
+        assert burst >= 1, burst
+        self.rate_per_s = float(rate_per_s)
+        self.burst = int(burst)
+        self._clock = clock
+        self._tokens = float(burst)
+        self._last = clock()
+
+    def _refill(self) -> None:
+        now = self._clock()
+        self._tokens = min(self.burst,
+                           self._tokens + (now - self._last) * self.rate_per_s)
+        self._last = now
+
+    def try_take(self) -> bool:
+        self._refill()
+        if self._tokens >= 1.0:
+            self._tokens -= 1.0
+            return True
+        return False
+
+    def put_back(self) -> None:
+        """Refund a token taken by a multi-bucket admission that failed on a
+        later bucket."""
+        self._tokens = min(self.burst, self._tokens + 1.0)
+
+    def retry_after_ms(self) -> float:
+        """Time until one full token is available (0 if already)."""
+        self._refill()
+        if self._tokens >= 1.0:
+            return 0.0
+        return (1.0 - self._tokens) / self.rate_per_s * 1e3
+
+
+class AdmissionController:
+    """Decide, per submitted query, admit (``None``) or shed
+    (:class:`Rejected`).  Stateless toward the scheduler except for its
+    token buckets; the scheduler passes the live backlog and wait estimate.
+
+    Parameters
+    ----------
+    role_limits:
+        ``role -> RoleLimit`` per-role token-bucket rates.  Roles absent
+        from the mapping are unlimited.
+    queue_limits:
+        ``SLOClass -> max backlog`` caps.  Classes absent from the mapping
+        are uncapped.  The exp20 serving default caps only ``BULK``.
+    check_deadlines:
+        When True (default), reject queries whose ``deadline_ms`` is
+        already infeasible against the scheduler's wait estimate.
+    """
+
+    def __init__(self, *,
+                 role_limits: Optional[Mapping[Role, RoleLimit]] = None,
+                 queue_limits: Optional[Mapping[SLOClass, int]] = None,
+                 check_deadlines: bool = True,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
+        self._clock = clock
+        self.role_limits = dict(role_limits or {})
+        self.queue_limits = {SLOClass(c): int(n)
+                             for c, n in (queue_limits or {}).items()}
+        self.check_deadlines = bool(check_deadlines)
+        self._buckets: Dict[Role, TokenBucket] = {
+            int(r): TokenBucket(lim.rate_per_s, lim.burst, clock=clock)
+            for r, lim in self.role_limits.items()}
+
+    def _reject(self, query: Query, reason: str,
+                retry_after_ms: float) -> Rejected:
+        return Rejected(reason=reason,
+                        retry_after_ms=max(0.0, float(retry_after_ms)),
+                        slo=query.slo, tag=query.tag)
+
+    def admit(self, query: Query, class_depths: Mapping[SLOClass, int],
+              est_wait_ms: float = 0.0) -> Optional[Rejected]:
+        """Run the three checks in cheapest-first order.  ``class_depths``
+        is the scheduler's current per-class backlog; ``est_wait_ms`` its
+        queue-wait estimate for a new arrival of this query's class."""
+        # 1. backlog cap for this class
+        cap = self.queue_limits.get(query.slo)
+        if cap is not None and class_depths.get(query.slo, 0) >= cap:
+            return self._reject(query, "queue_depth", est_wait_ms)
+        # 2. deadline infeasibility: don't enqueue a guaranteed-late answer
+        if (self.check_deadlines and query.deadline_ms is not None
+                and est_wait_ms > query.deadline_ms):
+            return self._reject(query, "deadline_infeasible",
+                                est_wait_ms - query.deadline_ms)
+        # 3. per-role token buckets: all-or-nothing across the role set
+        taken = []
+        for r in query.roles:
+            bucket = self._buckets.get(int(r))
+            if bucket is None:
+                continue
+            if bucket.try_take():
+                taken.append(bucket)
+            else:
+                for b in taken:
+                    b.put_back()
+                return self._reject(query, "rate_limit",
+                                    bucket.retry_after_ms())
+        return None

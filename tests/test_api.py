@@ -4,7 +4,8 @@ the single entry point across batched and sequential arms, heterogeneous
 per-query k, the min_packed_batch threshold, multi-role union-semantics
 parity vs merged per-role oracle searches (ISSUE acceptance: pure-only,
 impure-heavy, and leftover-only stores, batched and per-query modes), and
-the deprecation shims."""
+the typed SLO surface (SLOClass / deadline_ms / Rejected, with the
+retired-priority shim)."""
 import dataclasses as dc
 
 import numpy as np
@@ -14,8 +15,8 @@ from repro.ann.exact import ExactIndex
 from repro.ann.hnsw import HNSWIndex
 from repro.ann.scorescan import ScoreScanIndex, scorescan_factory
 from repro.core import (BatchEngine, Engine, HNSWCostModel, Lattice,
-                        MaskedEngine, MutableEngine, Query, ResumableEngine,
-                        SearchResult, SearchStats, batched_search,
+                        MaskedEngine, MutableEngine, Query, Rejected,
+                        ResumableEngine, SearchResult, SearchStats, SLOClass,
                         build_effveda, build_oracle_store,
                         build_vector_storage, exact_factory, generate_policy,
                         supports_batch)
@@ -279,20 +280,44 @@ def test_min_packed_batch_threshold(stores, policy, vectors):
     assert store.search(mk(32), packed=False)[0].path == "batched"
 
 
-# ----------------------------------------------------------- deprecation shims
-def test_batched_search_shim_warns_and_matches(stores, policy, vectors):
-    store = stores[("impure_heavy", "scorescan")]
-    rng = np.random.default_rng(10)
-    qs = vectors[rng.integers(len(vectors), size=6)] + 0.01
-    roles = [int(r) for r in rng.integers(policy.n_roles, size=6)]
-    stats = SearchStats()
-    with pytest.warns(DeprecationWarning, match="batched_search"):
-        legacy = batched_search(store, qs, roles, 10, stats=stats)
-    new = store.search([Query(vector=q, roles=(r,), k=10)
-                        for q, r in zip(qs, roles)])
-    for old_hits, res in zip(legacy, new):
-        _check(old_hits, res.hits)
-    assert stats.data_touched == sum(r.stats.data_touched for r in new)
+# ------------------------------------------------------------- SLO surface
+def test_batched_search_shim_is_retired():
+    """The PR-3 positional batch shim is gone (two tentpoles old): the
+    unified entry point is the only batch API."""
+    import repro.core as core
+    assert not hasattr(core, "batched_search")
+    assert "batched_search" not in core.__all__
+
+
+def test_query_slo_defaults_and_deadline():
+    q = Query(vector=np.zeros(4), roles=(1,))
+    assert q.slo is SLOClass.STANDARD and q.deadline_ms is None
+    q = Query(vector=np.zeros(4), roles=(1,), slo=SLOClass.INTERACTIVE,
+              deadline_ms=25)
+    assert q.slo is SLOClass.INTERACTIVE and q.deadline_ms == 25.0
+    with pytest.raises(AssertionError):
+        Query(vector=np.zeros(4), roles=(1,), deadline_ms=0)
+    with pytest.raises(AssertionError):
+        Query(vector=np.zeros(4), roles=(1,), slo=2)   # not an SLOClass
+
+
+def test_query_priority_shim_warns_and_maps():
+    """The retired free-form ``priority`` int still works behind a
+    DeprecationWarning: positive/zero/negative map to
+    INTERACTIVE/STANDARD/BULK."""
+    for p, cls in ((3, SLOClass.INTERACTIVE), (0, SLOClass.STANDARD),
+                   (-2, SLOClass.BULK)):
+        with pytest.warns(DeprecationWarning, match="priority"):
+            q = Query(vector=np.zeros(4), roles=(1,), priority=p)
+        assert q.slo is cls, (p, q.slo)
+    assert SLOClass.from_priority(7) is SLOClass.INTERACTIVE
+
+
+def test_rejected_outcome_shape():
+    r = Rejected(reason="queue_depth", retry_after_ms=4.0,
+                 slo=SLOClass.BULK, tag="t")
+    assert r.reason == "queue_depth" and r.retry_after_ms == 4.0
+    assert not isinstance(r, SearchResult)
 
 
 def test_retrieve_batch_wrapper_matches_store_search(stores, policy,

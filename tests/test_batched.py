@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.ann.scorescan import scorescan_factory, coordinated_scan_search
-from repro.core import (HNSWCostModel, Lattice, SearchStats, batched_search,
+from repro.core import (HNSWCostModel, Lattice, Query, SearchStats,
                         BatchTopK, build_effveda, build_vector_storage,
                         coordinated_search, generate_policy)
 from repro.core.queryplan import build_all_plans
@@ -61,8 +61,21 @@ def _batch(store, policy, b, seed=0):
     return qs.astype(np.float32), roles
 
 
+def _batched(store, qs, roles, k, stats=None, packed=None):
+    """Row-wise batch through the unified entry point (the retired
+    ``batched_search`` shim's semantics: single-role queries, legacy
+    leftover gating via ``min_packed_batch=1``, bare hit lists)."""
+    qlist = [Query(vector=q, roles=(int(r),), k=int(k))
+             for q, r in zip(np.asarray(qs, np.float32), roles)]
+    results = store.search(qlist, packed=packed, min_packed_batch=1)
+    if stats is not None:
+        for res in results:
+            stats.merge(res.stats)
+    return [res.hits for res in results]
+
+
 def _assert_parity(store, qs, roles, k):
-    got = batched_search(store, qs, roles, k)
+    got = _batched(store, qs, roles, k)
     for i, (q, r) in enumerate(zip(qs, roles)):
         ref = coordinated_scan_search(store, q, r, k)
         assert {v for _, v in got[i]} == {v for _, v in ref}, (i, r)
@@ -98,7 +111,7 @@ def test_parity_single_query_batch(impure_store, impure_policy):
 def test_matches_generic_coordinated_search(impure_store, impure_policy):
     """Same answers as the engine-agnostic Alg. 7 implementation."""
     qs, roles = _batch(impure_store, impure_policy, 8, seed=4)
-    got = batched_search(impure_store, qs, roles, 10)
+    got = _batched(impure_store, qs, roles, 10)
     for i, (q, r) in enumerate(zip(qs, roles)):
         ref = coordinated_search(impure_store, q, r, 10, efs=50)
         assert {v for _, v in got[i]} == {v for _, v in ref}
@@ -109,7 +122,7 @@ def test_stats_aggregation_matches_sequential(impure_store, impure_policy):
     skip counters are schedule-dependent but bounded."""
     qs, roles = _batch(impure_store, impure_policy, 12, seed=5)
     bstats = SearchStats()
-    batched_search(impure_store, qs, roles, 10, stats=bstats)
+    _batched(impure_store, qs, roles, 10, stats=bstats)
     sstats = SearchStats()
     for q, r in zip(qs, roles):
         coordinated_scan_search(impure_store, q, r, 10, stats=sstats)
@@ -126,7 +139,7 @@ def test_results_always_authorized(impure_store, impure_policy):
     qs = rng.standard_normal((10, impure_store.data.shape[1])
                              ).astype(np.float32) * 3
     roles = [int(r) for r in rng.integers(impure_policy.n_roles, size=10)]
-    got = batched_search(impure_store, qs, roles, 10)
+    got = _batched(impure_store, qs, roles, 10)
     for res, r in zip(got, roles):
         mask = impure_store.authorized_mask(r)
         assert all(mask[v] for _, v in res)
@@ -162,8 +175,8 @@ def test_packed_parity_with_unpacked_and_sequential(impure_store,
     results (ISSUE acceptance: identical (dist, id) sets)."""
     clone = _packed_clone(impure_store)
     qs, roles = _batch(impure_store, impure_policy, 16, seed=7)
-    packed = batched_search(clone, qs, roles, 10)
-    unpacked = batched_search(impure_store, qs, roles, 10, packed=False)
+    packed = _batched(clone, qs, roles, 10)
+    unpacked = _batched(impure_store, qs, roles, 10, packed=False)
     for i, (q, r) in enumerate(zip(qs, roles)):
         assert {v for _, v in packed[i]} == {v for _, v in unpacked[i]}, i
         ref = coordinated_scan_search(impure_store, q, r, 10)
@@ -179,7 +192,7 @@ def test_packed_stats_match_sequential(impure_store, impure_policy):
     clone = _packed_clone(impure_store)
     qs, roles = _batch(impure_store, impure_policy, 12, seed=8)
     pstats = SearchStats()
-    batched_search(clone, qs, roles, 10, stats=pstats)
+    _batched(clone, qs, roles, 10, stats=pstats)
     sstats = SearchStats()
     for q, r in zip(qs, roles):
         coordinated_scan_search(impure_store, q, r, 10, stats=sstats)
@@ -207,10 +220,10 @@ def test_leftover_visits_counted_once_per_row_block(impure_store,
         qs, _ = _batch(impure_store, impure_policy, 4, seed=9)
         roles = [role] * 4
         clean = SearchStats()
-        want = batched_search(impure_store, qs, roles, 10, stats=clean,
+        want = _batched(impure_store, qs, roles, 10, stats=clean,
                               packed=False)
         got_stats = SearchStats()
-        got = batched_search(store, qs, roles, 10, stats=got_stats)
+        got = _batched(store, qs, roles, 10, stats=got_stats)
         assert got_stats.leftover_vectors_scanned == \
             clean.leftover_vectors_scanned
         assert got_stats.data_touched == clean.data_touched
@@ -237,8 +250,8 @@ def test_packed_shard_many_roles_uses_word_masks():
     assert shard.auth_bits.shape == (len(shard), 2)
     qs, roles = _batch(store, policy, 8, seed=14)
     roles = [33, 1, 39] + roles[3:]                  # word-boundary roles
-    packed = batched_search(store, qs, roles, 10, packed=True)
-    unpacked = batched_search(store, qs, roles, 10, packed=False)
+    packed = _batched(store, qs, roles, 10, packed=True)
+    unpacked = _batched(store, qs, roles, 10, packed=False)
     for i, (q, r) in enumerate(zip(qs, roles)):
         assert {v for _, v in packed[i]} == {v for _, v in unpacked[i]}, i
         ref = coordinated_scan_search(store, q, r, 10)

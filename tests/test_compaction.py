@@ -352,7 +352,7 @@ def test_scheduler_maintenance_hook_runs_between_flushes():
     assert stats.maintenance_runs >= 1
     assert stats.compaction.get("tombstones_purged", 0) == 6
     assert len(dyn.tombstones) == 0
-    assert stats.summary()["maintenance_runs"] == stats.maintenance_runs
+    assert stats.summary()["maintenance"]["runs"] == stats.maintenance_runs
     for r in range(8):
         _assert_oracle(dyn, rng.standard_normal(DIM).astype(np.float32),
                        (r,), 6)

@@ -353,3 +353,70 @@ def test_sustained_churn_with_compaction_matches_oracle(n_roles, seed):
                     for x, roles in queries]
             assert post == pre, "compaction changed answers"
     assert len(dyn.tombstones) <= 6          # purge threshold is the bound
+
+
+# ------------------------------------------------- churn + answer cache
+@settings(max_examples=6, deadline=None)
+@given(n_roles=st.sampled_from((8, 40)), seed=st.integers(0, 2))
+def test_churn_with_answer_cache_never_serves_stale(n_roles, seed):
+    """ISSUE satellite: the auth-aware answer cache under sustained
+    insert/delete/grant/revoke churn (plus compaction cycles, which clear
+    it on purge).  A fixed query pool is re-asked every round — twice, so
+    repeats are served from the cache — and every answer, cached or fresh,
+    must match the brute-force authorized oracle of the *current* state.
+    A stale hit after a revoke would surface a vector the role set just
+    lost: an access-control leak.  ``hits > 0`` keeps the test
+    non-vacuous."""
+    from repro.core import (AnswerCache, CompactionConfig, LatticeCompactor)
+
+    policy, vecs, store, cm = _fresh(n_roles, seed, scan=True)
+    dyn = DynamicStore(store, cm)
+    cache = AnswerCache(capacity=256)
+    dyn.attach_cache(cache)
+    comp = LatticeCompactor(dyn, CompactionConfig(
+        tombstone_purge_threshold=6, leftover_fold_threshold=25))
+    rng = np.random.default_rng(7000 + 10 * seed + n_roles)
+    hi = min(n_roles - 1, 33)                # crosses the word boundary
+    combo = frozenset({0, hi})
+    pool = [(rng.standard_normal(DIM).astype(np.float32),
+             (int(rng.integers(n_roles)),) if i % 2 else (0, hi))
+            for i in range(6)]
+
+    def oracle(x, roles, k):
+        mask = dyn.store.authorized_mask_multi(roles).copy()
+        for t in dyn.tombstones:
+            mask[t] = False
+        return [v for _, v in metrics.brute_force_topk(dyn.store.data,
+                                                       mask, x, k)]
+
+    def alive():
+        return [v for v in range(len(dyn.store.data))
+                if v not in dyn.tombstones]
+
+    for step in range(40):
+        op = step % 4
+        if op == 0:
+            dyn.insert(rng.standard_normal(DIM).astype(np.float32), combo)
+        elif op == 1:
+            tau = frozenset({int(rng.integers(n_roles))})
+            dyn.insert(rng.standard_normal(DIM).astype(np.float32), tau)
+        elif op == 2:
+            dyn.delete(int(rng.choice(alive())))
+        else:
+            vid = int(rng.choice(alive()))
+            r = int(rng.integers(n_roles))
+            tau = dyn.block_roles[dyn.vec_block[vid]]
+            if r in tau and len(tau) > 1:
+                dyn.revoke(vid, r)
+            else:
+                dyn.grant(vid, r)
+        if step % 5 == 4:
+            for x, roles in pool:
+                want = oracle(x, roles, 5)
+                for _ in range(2):           # second ask rides the cache
+                    got = [v for _, v in dyn.search(x, roles=roles, k=5)]
+                    assert got == want[:len(got)], (roles, got, want)
+                    assert len(got) == len(want)
+        if step % 10 == 9:
+            comp.maintain(budget_s=2.0)
+    assert cache.stats.hits > 0              # the cache actually served

@@ -1,7 +1,7 @@
 """Continuous-batching scheduler (launch/scheduler.py): result parity with
 per-query coordinated search for randomized multi-role streams, flush
 policy, per-request k, ServeStats accounting (leftover-path counts
-included), the min_packed_batch threshold, the legacy submit shim, and the
+included), the min_packed_batch threshold, the retired submit shim, and the
 RAGServer.serve_stream / retrieve_batch fallback plumbing."""
 import asyncio
 
@@ -139,8 +139,10 @@ def test_serve_stats_accounting(scan_store, policy, vectors):
     assert 1 <= stats.queue_depth_peak <= 15
     assert stats.search.data_touched > 0
     s = stats.summary()
-    assert s["batches"] == stats.batches_flushed
-    assert s["avg_batch"] == pytest.approx(15 / stats.batches_flushed)
+    assert s["schema"] == 2
+    assert s["totals"]["batches"] == stats.batches_flushed
+    assert s["totals"]["avg_batch"] == pytest.approx(
+        15 / stats.batches_flushed)
 
 
 def test_scheduler_restarts_after_drain(scan_store, policy, vectors):
@@ -163,21 +165,25 @@ def test_scheduler_restarts_after_drain(scan_store, policy, vectors):
     _assert_matches_reference(scan_store, reqs, results)
 
 
-def test_legacy_submit_shim_warns_and_serves(scan_store, policy, vectors):
-    """The PR 2 positional submit(vector, role, k) survives as a deprecation
-    shim that wraps the arguments in a single-role Query."""
-    reqs = _stream(policy, vectors, 3, seed=13)
+def test_legacy_submit_shim_is_retired(scan_store, policy, vectors):
+    """The PR 2 positional submit(vector, role, k) deprecation shim is gone:
+    submit takes exactly one Query and rejects anything else loudly."""
+    reqs = _stream(policy, vectors, 1, seed=13)
 
     async def main():
         sched = MicroBatchScheduler(scan_store, max_batch=4, max_wait_ms=1.0)
-        with pytest.warns(DeprecationWarning, match="submit"):
-            futures = [sched.submit(q, r, k) for q, r, k in reqs]
-        out = await asyncio.gather(*futures)
-        await sched.close()
-        return list(out)
+        try:
+            q, r, k = reqs[0]
+            with pytest.raises(TypeError):
+                sched.submit(q, r, k)          # old positional form
+            with pytest.raises(AssertionError, match="Query"):
+                sched.submit((q, r, k))        # tuple instead of Query
+            return await sched.submit(Query(vector=q, roles=(r,), k=k))
+        finally:
+            await sched.close()
 
-    results = asyncio.run(main())
-    _assert_matches_reference(scan_store, reqs, results)
+    result = asyncio.run(main())
+    _assert_matches_reference(scan_store, reqs[:1], [result])
 
 
 def test_results_are_search_results_with_stats(scan_store, policy, vectors):
@@ -205,7 +211,7 @@ def test_serve_stats_records_leftover_path(scan_store, policy, vectors):
             min_packed_batch=1)
     assert stats.paths.get("batched+packed", 0) >= 1
     assert sum(stats.paths.values()) == stats.batches_flushed
-    assert "path_batched+packed" in stats.summary()
+    assert "batched+packed" in stats.summary()["paths"]
 
 
 def _run_kw(store, reqs, *, max_batch=8, max_wait_ms=2.0, stats=None,
@@ -426,7 +432,7 @@ def test_cancelled_futures_counted_separately(scan_store, policy, vectors):
         else:
             assert isinstance(f.result(), SearchResult)
     s = stats.summary()
-    assert s["cancelled"] == 2 and s["completed"] == 4
+    assert s["totals"]["cancelled"] == 2 and s["totals"]["completed"] == 4
 
 
 def test_drain_parks_on_idle_event_instead_of_polling(scan_store, policy,

@@ -1,0 +1,396 @@
+"""SLO-aware serving (launch/scheduler.py + launch/admission.py +
+core/cache.py): strict-priority flush assembly, deadline preemption of the
+bulk backlog, FIFO fallback mode, device-aware disjoint cuts under
+overlapping flushes, admission control (typed Rejected futures — rate
+limits, queue-depth caps, deadline infeasibility), the auth-aware answer
+cache through both the scheduler and DynamicStore (precise invalidation on
+insert/delete/grant/revoke), and the ServeStats summary() schema v2."""
+import asyncio
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (AnswerCache, DynamicStore, HNSWCostModel, Query,
+                        Rejected, SLOClass, SearchResult, SearchStats,
+                        build_effveda, build_vector_storage, exact_factory,
+                        generate_policy)
+from repro.launch.admission import (AdmissionController, RoleLimit,
+                                    TokenBucket)
+from repro.launch.scheduler import (MicroBatchScheduler, ServeStats,
+                                    serve_requests)
+
+
+def _q(slo, i=0, *, roles=(0,), deadline=None, k=1):
+    return Query(vector=np.full(4, float(i), np.float32), roles=roles,
+                 k=k, slo=slo, deadline_ms=deadline)
+
+
+def _echo(hits=()):
+    """search_fn stub: every query gets the same hit list."""
+    def search_fn(store, queries):
+        return [SearchResult(hits=list(hits), stats=SearchStats(),
+                             path="batched") for _ in queries]
+    return search_fn
+
+
+def _recording(batches, hits=()):
+    """search_fn stub that records each flush's SLO composition."""
+    inner = _echo(hits)
+
+    def search_fn(store, queries):
+        batches.append([q.slo for q in queries])
+        return inner(store, queries)
+    return search_fn
+
+
+# ------------------------------------------------- priority flush assembly
+def test_strict_priority_flush_assembly():
+    """INTERACTIVE arrivals jump the bulk backlog: the first cut takes them
+    ahead of six earlier-submitted BULK requests."""
+    batches = []
+    stats = ServeStats()
+
+    async def main():
+        sched = MicroBatchScheduler(object(), max_batch=4, max_wait_ms=50.0,
+                                    search_fn=_recording(batches),
+                                    stats=stats)
+        try:
+            futs = [sched.submit(_q(SLOClass.BULK, i)) for i in range(6)]
+            futs += [sched.submit(_q(SLOClass.INTERACTIVE, 10 + i))
+                     for i in range(2)]
+            await asyncio.gather(*futs)
+        finally:
+            await sched.close()
+
+    asyncio.run(main())
+    assert batches[0][:2] == [SLOClass.INTERACTIVE] * 2
+    assert stats.completed == 8
+    assert stats.cls(SLOClass.INTERACTIVE).completed == 2
+    assert stats.cls(SLOClass.BULK).completed == 6
+
+
+def test_interactive_deadline_preempts_bulk_backlog():
+    """An at-risk interactive deadline cuts a batch that excludes every
+    queued BULK request (flush reason "preempt")."""
+    batches = []
+    stats = ServeStats()
+
+    async def main():
+        sched = MicroBatchScheduler(object(), max_batch=32, max_wait_ms=20.0,
+                                    bulk_wait_factor=2.0,
+                                    search_fn=_recording(batches),
+                                    stats=stats)
+        try:
+            futs = [sched.submit(_q(SLOClass.BULK, i)) for i in range(4)]
+            futs.append(sched.submit(_q(SLOClass.INTERACTIVE, 9,
+                                        deadline=1.0)))
+            await asyncio.gather(*futs)
+        finally:
+            await sched.close()
+
+    asyncio.run(main())
+    assert batches[0] == [SLOClass.INTERACTIVE]   # bulk bypassed entirely
+    assert stats.flush_preempt >= 1
+    assert stats.summary()["flush"]["preempt"] >= 1
+    assert stats.completed == 5
+
+
+def test_fifo_mode_preserves_arrival_order():
+    """slo_aware=False restores the single FIFO queue (the exp20 baseline);
+    per-class accounting still tracks each query's declared class."""
+    batches = []
+    stats = ServeStats()
+
+    async def main():
+        sched = MicroBatchScheduler(object(), max_batch=4, max_wait_ms=50.0,
+                                    slo_aware=False,
+                                    search_fn=_recording(batches),
+                                    stats=stats)
+        try:
+            futs = [sched.submit(_q(SLOClass.BULK, i)) for i in range(3)]
+            futs.append(sched.submit(_q(SLOClass.INTERACTIVE, 9)))
+            await asyncio.gather(*futs)
+        finally:
+            await sched.close()
+
+    asyncio.run(main())
+    assert batches[0] == [SLOClass.BULK] * 3 + [SLOClass.INTERACTIVE]
+    assert stats.flush_preempt == 0
+    assert stats.cls(SLOClass.INTERACTIVE).completed == 1
+    assert stats.cls(SLOClass.BULK).completed == 3
+
+
+# ------------------------------------------------- device-aware disjoint cut
+def test_device_aware_cut_prefers_disjoint_slots():
+    """While a flush occupies device slot 0, the next cut defers slot-0
+    contenders and takes the slot-1 work instead — consecutive overlapped
+    flushes land on disjoint device subsets."""
+
+    class StubSharded:
+        mesh_size = 2
+
+        def slots_for_roles(self, roles):
+            return frozenset(int(r) for r in roles)
+
+    lock = threading.Lock()
+    release = threading.Event()
+    state = {"active": 0, "peak": 0}
+    batches = []
+
+    def search_fn(store, queries):
+        with lock:
+            state["active"] += 1
+            state["peak"] = max(state["peak"], state["active"])
+            batches.append(tuple(int(q.roles[0]) for q in queries))
+        release.wait(timeout=10.0)
+        with lock:
+            state["active"] -= 1
+        return [SearchResult(hits=[], stats=SearchStats(), path="batched")
+                for _ in queries]
+
+    stats = ServeStats()
+
+    async def main():
+        sched = MicroBatchScheduler(StubSharded(), max_batch=2,
+                                    max_wait_ms=500.0, max_inflight=2,
+                                    search_fn=search_fn, stats=stats)
+        try:
+            futs = [sched.submit(_q(SLOClass.STANDARD, i, roles=(0,)))
+                    for i in range(4)]
+            futs += [sched.submit(_q(SLOClass.STANDARD, 10 + i, roles=(1,)))
+                     for i in range(2)]
+            for _ in range(2000):
+                if state["peak"] >= 2:
+                    break
+                await asyncio.sleep(0.002)
+            release.set()
+            await asyncio.gather(*futs)
+        finally:
+            release.set()
+            await sched.close()
+
+    asyncio.run(main())
+    assert state["peak"] == 2                  # flushes truly overlapped
+    assert stats.disjoint_flushes >= 1
+    assert (1, 1) in batches                   # slot-1 work jumped the queue
+    assert stats.completed == 6
+    assert stats.summary()["flush"]["disjoint"] >= 1
+
+
+# --------------------------------------------------------- admission control
+def test_admission_queue_depth_cap_is_per_class():
+    adm = AdmissionController(queue_limits={SLOClass.BULK: 2})
+    depths = {SLOClass.BULK: 2, SLOClass.STANDARD: 50,
+              SLOClass.INTERACTIVE: 50}
+    rej = adm.admit(_q(SLOClass.BULK), depths)
+    assert isinstance(rej, Rejected)
+    assert rej.reason == "queue_depth" and rej.slo is SLOClass.BULK
+    # other classes are uncapped no matter how deep their backlog
+    assert adm.admit(_q(SLOClass.INTERACTIVE), depths) is None
+    assert adm.admit(_q(SLOClass.STANDARD), depths) is None
+
+
+def test_token_bucket_refills_on_injected_clock():
+    t = [0.0]
+    b = TokenBucket(rate_per_s=2.0, burst=2, clock=lambda: t[0])
+    assert b.try_take() and b.try_take()
+    assert not b.try_take()
+    assert b.retry_after_ms() == pytest.approx(500.0)
+    t[0] += 0.5                                # one token refilled
+    assert b.try_take()
+    assert not b.try_take()
+
+
+def test_admission_rate_limit_all_or_nothing_refund():
+    """A multi-role query that fails on one bucket refunds the tokens it
+    already took — a flooding tenant can't drain other roles' budgets via
+    union queries."""
+    t = [0.0]
+    adm = AdmissionController(
+        role_limits={0: RoleLimit(1.0, burst=1), 1: RoleLimit(1.0, burst=1)},
+        clock=lambda: t[0])
+    assert adm.admit(_q(SLOClass.STANDARD, roles=(1,)), {}) is None  # drains 1
+    rej = adm.admit(_q(SLOClass.STANDARD, roles=(0, 1)), {})
+    assert rej is not None and rej.reason == "rate_limit"
+    assert rej.retry_after_ms > 0
+    # role 0's token was refunded, so a single-role query still passes
+    assert adm.admit(_q(SLOClass.STANDARD, roles=(0,)), {}) is None
+
+
+def test_admission_deadline_infeasibility():
+    adm = AdmissionController()
+    q = _q(SLOClass.INTERACTIVE, deadline=10.0)
+    rej = adm.admit(q, {}, est_wait_ms=50.0)
+    assert rej is not None and rej.reason == "deadline_infeasible"
+    assert rej.retry_after_ms == pytest.approx(40.0)
+    assert adm.admit(q, {}, est_wait_ms=5.0) is None
+
+
+def test_scheduler_sheds_bulk_with_typed_rejected_futures():
+    """Back-pressure through the scheduler: shed futures resolve with a
+    typed Rejected (never hang, never raise), rejections confined to the
+    capped class, and serve_requests returns the mixed Outcome list."""
+    stats = ServeStats()
+    reqs = [_q(SLOClass.BULK, i) for i in range(5)]
+    reqs.append(_q(SLOClass.INTERACTIVE, 9))
+
+    async def main():
+        sched = MicroBatchScheduler(
+            object(), max_batch=64, max_wait_ms=20.0,
+            admission=AdmissionController(queue_limits={SLOClass.BULK: 2}),
+            search_fn=_echo(), stats=stats)
+        try:
+            return await serve_requests(sched, reqs)
+        finally:
+            await sched.close()
+
+    out = asyncio.run(main())
+    rejected = [o for o in out if isinstance(o, Rejected)]
+    assert len(rejected) == 3
+    assert all(r.slo is SLOClass.BULK and r.reason == "queue_depth"
+               for r in rejected)
+    assert isinstance(out[5], SearchResult)    # interactive sailed through
+    assert stats.rejected == 3 and stats.admitted == 3
+    assert stats.cls(SLOClass.BULK).rejected == 3
+    assert stats.cls(SLOClass.INTERACTIVE).rejected == 0
+    assert stats.rejected_reasons == {"queue_depth": 3}
+    s = stats.summary()
+    assert s["classes"]["bulk"]["rejected"] == 3
+    assert s["rejected_reasons"] == {"queue_depth": 3}
+
+
+# ------------------------------------------------------ answer cache: serving
+def test_scheduler_serves_repeat_queries_from_cache():
+    stats = ServeStats()
+    calls = {"n": 0}
+
+    def search_fn(store, queries):
+        calls["n"] += 1
+        return [SearchResult(hits=[(0.25, 7)], stats=SearchStats(),
+                             path="batched") for _ in queries]
+
+    async def main():
+        sched = MicroBatchScheduler(object(), max_batch=4, max_wait_ms=1.0,
+                                    cache=AnswerCache(capacity=16),
+                                    search_fn=search_fn, stats=stats)
+        try:
+            first = await sched.submit(_q(SLOClass.STANDARD, 1))
+            second = await sched.submit(_q(SLOClass.STANDARD, 1))
+            third = await sched.submit(_q(SLOClass.STANDARD, 1, k=2))
+            return first, second, third
+        finally:
+            await sched.close()
+
+    first, second, third = asyncio.run(main())
+    assert calls["n"] == 2                     # repeat hit, different-k miss
+    assert second.path == "cache" and second.hits == first.hits
+    assert third.path == "batched"             # k keys the entry
+    assert stats.cache_hits == 1 and stats.cache_misses == 2
+    assert stats.completed == 3
+    assert stats.paths.get("cache") == 1
+    assert stats.summary()["classes"]["standard"]["cache_hit_rate"] > 0
+
+
+# ---------------------------------------- answer cache: DynamicStore hygiene
+@pytest.fixture()
+def dyn_cached():
+    policy = generate_policy(n_vectors=300, n_roles=8, n_permissions=20,
+                             seed=5)
+    rng = np.random.default_rng(5)
+    vecs = rng.standard_normal((300, 8)).astype(np.float32)
+    cm = HNSWCostModel(lam_threshold=60)
+    res = build_effveda(policy, cm, beta=1.1, k=5)
+    store = build_vector_storage(res, vecs, engine_factory=exact_factory())
+    dyn = DynamicStore(store, cm)
+    cache = AnswerCache(capacity=64)
+    dyn.attach_cache(cache)
+    return dyn, cache, policy
+
+
+def test_dynamic_repeat_search_hits_cache(dyn_cached):
+    dyn, cache, _ = dyn_cached
+    x = dyn.store.data[0] + 0.01
+    a = dyn.search(x, 2, k=5)
+    assert cache.stats.hits == 0
+    b = dyn.search(x, 2, k=5)
+    assert b == a and cache.stats.hits == 1
+
+
+def test_insert_invalidates_only_intersecting_role_sets(dyn_cached):
+    dyn, cache, _ = dyn_cached
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal(8).astype(np.float32)
+    dyn.search(x, 2, k=5)                      # cached under role 2
+    dyn.search(x, 3, k=5)                      # cached under role 3
+    vid = dyn.insert(x.copy(), frozenset({2}))
+    got = dyn.search(x, 2, k=5)                # stale entry would miss vid
+    assert got[0][1] == vid
+    assert cache.stats.invalidated >= 1
+    # the role-3 entry is disjoint from the mutated combination: still live
+    hits_before = cache.stats.hits
+    dyn.search(x, 3, k=5)
+    assert cache.stats.hits == hits_before + 1
+
+
+def test_delete_drops_answers_containing_the_vector(dyn_cached):
+    dyn, cache, policy = dyn_cached
+    r = 1
+    victim = int(policy.d_of_role(r)[0])
+    x = dyn.store.data[victim]
+    before = dyn.search(x, r, k=5)
+    assert before[0][1] == victim              # cached with victim in it
+    dyn.delete(victim)
+    after = dyn.search(x, r, k=5)
+    assert all(v != victim for _, v in after)  # stale hit = ghost result
+
+
+def test_grant_revoke_invalidate_cached_answers(dyn_cached):
+    """The access-control property: a cached pre-grant answer must not be
+    served after the grant, and a cached post-grant answer must not be
+    served after the revoke (that stale hit would be a leak)."""
+    dyn, cache, policy = dyn_cached
+    r_from, r_to = 0, 3
+    only_from = [int(v) for v in policy.d_of_role(r_from)
+                 if not policy.authorized_mask(r_to)[v]]
+    vid = only_from[0]
+    x = dyn.store.data[vid]
+    pre = dyn.search(x, r_to, k=5)             # cached without vid
+    assert all(v != vid for _, v in pre)
+    dyn.grant(vid, r_to)
+    got = dyn.search(x, r_to, k=5)
+    assert got[0][1] == vid                    # grant visible immediately
+    dyn.revoke(vid, r_to)
+    post = dyn.search(x, r_to, k=5)
+    assert all(v != vid for _, v in post)      # stale hit here = leak
+
+
+def test_compaction_purge_clears_attached_cache(dyn_cached):
+    from repro.core import CompactionConfig, LatticeCompactor
+    dyn, cache, policy = dyn_cached
+    x = dyn.store.data[0] + 0.01
+    dyn.search(x, 2, k=5)
+    assert len(cache) == 1
+    for vid in (int(v) for v in policy.d_of_role(5)[:3]):
+        dyn.delete(vid)
+    comp = LatticeCompactor(dyn, CompactionConfig(tombstone_purge_threshold=1))
+    comp.purge_tombstones()
+    assert len(cache) == 0 and cache.stats.clears == 1
+
+
+# ------------------------------------------------------------- stats schema
+def test_serve_stats_summary_schema_v2_shape():
+    s = ServeStats().summary()
+    assert s["schema"] == 2
+    assert set(s) == {"schema", "totals", "flush", "classes",
+                      "rejected_reasons", "paths", "devices", "maintenance"}
+    assert set(s["classes"]) == {"interactive", "standard", "bulk"}
+    for block in s["classes"].values():
+        assert {"submitted", "admitted", "rejected", "cancelled",
+                "completed", "failed", "cache_hits", "cache_hit_rate",
+                "p50_ms", "p99_ms"} <= set(block)
+    assert set(s["flush"]) == {"full", "timeout", "drain", "preempt",
+                               "disjoint"}
+    assert set(s["maintenance"]) == {"runs", "ms", "compaction"}
+    assert {"cache_hits", "cache_misses", "cache_hit_rate", "admitted",
+            "rejected"} <= set(s["totals"])
