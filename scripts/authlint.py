@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""authlint CLI — static authorization-soundness audit (CI gate).
+
+Default run lints ``src/repro/`` with the committed suppression baseline
+and runs the jaxpr kernel audit; exits non-zero on any unsuppressed
+finding or failed audit check.
+
+  python scripts/authlint.py                      # CI gate
+  python scripts/authlint.py --json out.json      # machine-readable report
+  python scripts/authlint.py --explain leak-path  # invariant + example
+  python scripts/authlint.py --report-only src/repro/models  # sweep, exit 0
+  python scripts/authlint.py --update-baseline    # refresh suppressions
+                                                  # (keeps justifications)
+
+No ``--fix`` by design: every rule's --explain text states the invariant
+and the idiomatic repair; the fix belongs in a reviewed diff, not a
+rewrite pass.  See DESIGN.md §Static Analysis for the suppression policy.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import Baseline, RULES, explain, run  # noqa: E402
+
+DEFAULT_BASELINE = REPO / "scripts" / "authlint_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", type=Path,
+                    default=[REPO / "src" / "repro"],
+                    help="files/dirs to lint (default: src/repro)")
+    ap.add_argument("--json", type=Path, metavar="OUT",
+                    help="write the machine-readable report here")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="suppression baseline (default: "
+                         "scripts/authlint_baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the suppression baseline")
+    ap.add_argument("--report-only", action="store_true",
+                    help="print findings but always exit 0 (sweep mode)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings, "
+                         "keeping existing justifications")
+    ap.add_argument("--explain", metavar="RULE_ID",
+                    help="print a rule's invariant and example, then exit")
+    ap.add_argument("--skip-jaxpr", action="store_true",
+                    help="skip the jaxpr kernel audit (pure-AST lint only)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list registered rule ids")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULES):
+            info = RULES[rid]
+            print(f"{rid:18s} [{info.family}] {info.summary}")
+        return 0
+    if args.explain:
+        text = explain(args.explain)
+        print(text)
+        return 0 if args.explain in RULES else 2
+
+    baseline = None
+    if not args.no_baseline:
+        try:
+            baseline = Baseline.load(args.baseline)
+        except ValueError as e:
+            print(f"authlint: error: {e}", file=sys.stderr)
+            return 2
+
+    report = run(args.paths, root=REPO, baseline=baseline,
+                 jaxpr=not args.skip_jaxpr)
+
+    if args.update_baseline:
+        if baseline is None:
+            print("authlint: --update-baseline needs a baseline path",
+                  file=sys.stderr)
+            return 2
+        baseline.update_from(report.unsuppressed
+                             + [f for f in report.findings if f.suppressed])
+        baseline.save()
+        print(f"authlint: baseline written to {baseline.path} "
+              f"({len(baseline.entries)} entr{'y' if len(baseline.entries) == 1 else 'ies'})")
+        return 0
+
+    print(report.render_text())
+    if args.json:
+        args.json.write_text(report.to_json() + "\n")
+        print(f"authlint: json report written to {args.json}")
+
+    if args.report_only:
+        return 0
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,11 @@ python -m compileall -q src benchmarks examples scripts
 echo "== collection check (must be clean) =="
 python -m pytest --collect-only -q >/dev/null
 
+echo "== authlint: static authorization-soundness gate (AST rules) =="
+# pure-AST leg (fast); the jaxpr kernel audit runs in the dedicated
+# authlint CI job and in tests/test_authlint.py
+python scripts/authlint.py --skip-jaxpr
+
 if [[ "$FULL" == 1 ]]; then
   echo "== full tier-1 suite =="
   python -m pytest -x -q --junitxml=junit.xml

@@ -1,0 +1,24 @@
+"""authlint — static authorization-soundness auditor for the repo's data
+paths (DESIGN.md §Static Analysis).
+
+Three rule families over ``src/repro/``:
+
+* taint/leak rules (``leak-path``, ``cache-key``) — unmasked vector data
+  must never reach a result sink;
+* API-contract rules (``hasattr-probe``, ``legacy-mask``,
+  ``vstack-growth``) — the PR 3/4 protocol and multi-word-mask contracts;
+* concurrency-discipline rules (``guard-point``, ``mutate-invalidate``,
+  ``async-sleep``) — the scheduler/compaction guard points.
+
+Plus a jaxpr audit (:mod:`.jaxpr_audit`) proving the compiled kernel
+actually consumes its auth operands.  CLI: ``scripts/authlint.py``.
+"""
+from .baseline import Baseline
+from .driver import (SCAFFOLD_DIRS, explain, lint_paths, lint_source, run)
+from .report import Finding, Report
+from .rules import RULES, RuleInfo
+
+__all__ = [
+    "Baseline", "Finding", "Report", "RULES", "RuleInfo", "SCAFFOLD_DIRS",
+    "explain", "lint_paths", "lint_source", "run",
+]

@@ -1,0 +1,144 @@
+"""AST loading and traversal helpers shared by the authlint rules.
+
+Everything here is deliberately small: parse a file once, iterate its
+function scopes with qualnames, and resolve call/attribute names into
+dotted strings (``"np.vstack"``, ``"self.cache.store"``) so rules can
+pattern-match without re-walking nodes.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterator, List, Optional, Tuple
+
+
+@dataclass
+class ModuleFile:
+    path: Path             # absolute (or virtual, for fixtures)
+    relpath: str           # repo-relative posix path used in findings
+    source: str
+    tree: ast.Module
+    lines: List[str] = field(default_factory=list)
+
+    def line_at(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+
+def load_module(path: Path, root: Path) -> Optional[ModuleFile]:
+    """Parse ``path``; returns None for unparseable files (CI's compileall
+    gate owns syntax errors — the linter does not double-report them)."""
+    try:
+        source = Path(path).read_text()
+        tree = ast.parse(source, filename=str(path))
+    except (SyntaxError, UnicodeDecodeError, OSError):
+        return None
+    try:
+        rel = Path(path).resolve().relative_to(Path(root).resolve()).as_posix()
+    except ValueError:
+        rel = Path(path).as_posix()
+    return ModuleFile(path=Path(path), relpath=rel, source=source, tree=tree,
+                      lines=source.splitlines())
+
+
+def from_source(source: str, relpath: str) -> ModuleFile:
+    """Build a ModuleFile from an in-memory snippet (test fixtures).  The
+    ``relpath`` controls path-scoped rules, e.g. the guard-point rule only
+    fires under ``launch/``."""
+    tree = ast.parse(source, filename=relpath)
+    return ModuleFile(path=Path(relpath), relpath=relpath, source=source,
+                      tree=tree, lines=source.splitlines())
+
+
+FuncScope = Tuple[str, Optional[str], ast.AST]  # (qualname, class name, node)
+
+
+def iter_functions(mod: ModuleFile) -> Iterator[FuncScope]:
+    """Yield every (async) function with its dotted qualname and the name
+    of its immediately enclosing class (None for module-level funcs)."""
+
+    def walk(node: ast.AST, prefix: str, cls: Optional[str]
+             ) -> Iterator[FuncScope]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}.{child.name}" if prefix else child.name
+                yield q, cls, child
+                yield from walk(child, q, None)
+            elif isinstance(child, ast.ClassDef):
+                q = f"{prefix}.{child.name}" if prefix else child.name
+                yield from walk(child, q, child.name)
+
+    yield from walk(mod.tree, "", None)
+
+
+def dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression: ``a.b.c`` for attribute
+    chains, ``a[...] .b`` collapses the subscript (``engines[r].search`` ->
+    ``engines.search``), anything opaque contributes ``?``."""
+    parts: List[str] = []
+    cur = node
+    while True:
+        if isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        elif isinstance(cur, ast.Subscript):
+            cur = cur.value
+        elif isinstance(cur, ast.Call):
+            cur = cur.func
+        elif isinstance(cur, ast.Name):
+            parts.append(cur.id)
+            break
+        else:
+            parts.append("?")
+            break
+    return ".".join(reversed(parts))
+
+
+def call_name(call: ast.Call) -> str:
+    return dotted(call.func)
+
+
+def terminal_attr(call: ast.Call) -> str:
+    """Last component of the call target: ``self.cache.store(...)`` ->
+    ``store``; plain names return themselves."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def receiver_chain(call: ast.Call) -> str:
+    """Dotted name of the receiver (everything left of the final attr), or
+    "" for plain-name calls."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return dotted(f.value)
+    return ""
+
+
+def names_in(node: ast.AST) -> List[str]:
+    """All identifier components appearing anywhere in ``node`` — Name ids
+    and Attribute attrs — for substring-evidence heuristics."""
+    out: List[str] = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.append(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.append(n.attr)
+    return out
+
+
+def const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def is_zero(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Constant)
+            and isinstance(node.value, (int, float))
+            and node.value == 0)

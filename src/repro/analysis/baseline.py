@@ -1,0 +1,80 @@
+"""Suppression baseline for authlint.
+
+A baseline is a committed JSON file listing findings that are *known and
+justified* — today that means scaffold-only debt (the quarantined
+``models/ optim/ ft/ ckpt/ comm/ data/`` dirs).  Core/launch findings are
+fixed, not suppressed; DESIGN.md §Static Analysis documents the policy.
+
+Entries match findings by :attr:`Finding.fingerprint`, which survives
+line-number drift but breaks when the offending line itself changes —
+exactly the moment a human should re-justify the suppression.  Stale
+entries (fingerprints matching nothing) are surfaced as warnings so the
+baseline cannot silently rot.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List
+
+from .report import Finding
+
+SCHEMA = 1
+
+
+@dataclass
+class Baseline:
+    path: Path
+    note: str = ""
+    entries: Dict[str, Dict] = field(default_factory=dict)  # fingerprint -> entry
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        path = Path(path)
+        if not path.exists():
+            return cls(path=path)
+        data = json.loads(path.read_text())
+        if data.get("schema") != SCHEMA:
+            raise ValueError(f"unsupported baseline schema in {path}: "
+                             f"{data.get('schema')!r}")
+        entries = {e["fingerprint"]: e for e in data.get("suppressions", [])}
+        return cls(path=path, note=data.get("note", ""), entries=entries)
+
+    def apply(self, findings: List[Finding]) -> List[str]:
+        """Mark suppressed findings in place; return stale fingerprints."""
+        seen = set()
+        for f in findings:
+            entry = self.entries.get(f.fingerprint)
+            if entry is not None:
+                f.suppressed = True
+                f.justification = entry.get("justification", "")
+                seen.add(f.fingerprint)
+        return sorted(set(self.entries) - seen)
+
+    def update_from(self, findings: List[Finding]) -> None:
+        """Regenerate entries from current findings, keeping existing
+        justifications; new entries get a TODO placeholder a human must
+        replace before the baseline is acceptable."""
+        new: Dict[str, Dict] = {}
+        for f in findings:
+            old = self.entries.get(f.fingerprint, {})
+            new[f.fingerprint] = {
+                "fingerprint": f.fingerprint,
+                "rule": f.rule,
+                "path": f.path,
+                "qualname": f.qualname,
+                "snippet": f.snippet,
+                "justification": old.get("justification",
+                                         "TODO: justify or fix"),
+            }
+        self.entries = new
+
+    def save(self) -> None:
+        data = {
+            "schema": SCHEMA,
+            "note": self.note,
+            "suppressions": [self.entries[k] for k in sorted(self.entries)],
+        }
+        self.path.write_text(json.dumps(data, indent=2, sort_keys=False)
+                             + "\n")

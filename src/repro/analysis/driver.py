@@ -1,0 +1,85 @@
+"""authlint driver: walk files, run every registered rule, apply the
+suppression baseline, assemble a :class:`Report`.
+
+Importing this module pulls in :mod:`.rules` and :mod:`.taint` so the
+full rule registry is populated; the jaxpr audit is opt-in (it imports
+jax, which the pure-AST path deliberately avoids so the lint leg stays
+fast)."""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+from . import rules as _rules          # registers contract+concurrency rules
+from . import taint as _taint          # registers the leak-path rule
+from .astwalk import ModuleFile, from_source, load_module
+from .baseline import Baseline
+from .report import Finding, Report
+from .rules import CHECKERS, RULES
+
+# dirs whose findings are baseline-eligible (quarantined training scaffold,
+# swept in report-only mode per DESIGN.md §Static Analysis)
+SCAFFOLD_DIRS = ("models", "optim", "ft", "ckpt", "comm", "data")
+
+
+def iter_python_files(paths: Sequence[Path]) -> Iterable[Path]:
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+def lint_module(mod: ModuleFile) -> List[Finding]:
+    out: List[Finding] = []
+    for checker in CHECKERS:
+        out.extend(checker(mod))
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out
+
+
+def lint_source(source: str, relpath: str = "fixture.py") -> List[Finding]:
+    """Lint an in-memory snippet (test fixtures).  ``relpath`` drives
+    path-scoped rules (e.g. ``src/repro/launch/scheduler.py`` enables the
+    guard-point scope)."""
+    return lint_module(from_source(source, relpath))
+
+
+def lint_paths(paths: Sequence[Path], root: Optional[Path] = None
+               ) -> List[Finding]:
+    root = Path(root) if root is not None else Path.cwd()
+    findings: List[Finding] = []
+    for f in iter_python_files(paths):
+        mod = load_module(f, root)
+        if mod is not None:
+            findings.extend(lint_module(mod))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def run(paths: Sequence[Path], root: Optional[Path] = None,
+        baseline: Optional[Baseline] = None,
+        jaxpr: bool = False,
+        jaxpr_widths: Sequence[int] = (1, 2)) -> Report:
+    findings = lint_paths(paths, root=root)
+    stale: List[str] = []
+    if baseline is not None:
+        stale = baseline.apply(findings)
+    jaxpr_block = None
+    if jaxpr:
+        from .jaxpr_audit import audit_l2_topk
+        jaxpr_block = audit_l2_topk(widths=jaxpr_widths)
+    return Report(findings=findings, jaxpr=jaxpr_block,
+                  paths=[str(p) for p in paths],
+                  stale_suppressions=stale)
+
+
+def explain(rule_id: str) -> str:
+    info = RULES.get(rule_id)
+    if info is None:
+        known = ", ".join(sorted(RULES))
+        return f"unknown rule {rule_id!r}; known rules: {known}"
+    return (f"{info.id} [{info.family}] — {info.summary}\n\n"
+            f"Invariant:\n{info.invariant}\n\n"
+            f"Example:\n{info.example}")

@@ -1,0 +1,103 @@
+"""Finding model and rendering for authlint.
+
+A :class:`Finding` is one rule violation at one source location.  Its
+``fingerprint`` is stable across unrelated edits (line-number drift, file
+reshuffling above the site): it hashes the rule id, the repo-relative path,
+the enclosing qualname, and the whitespace-stripped source line — not the
+line number.  The suppression baseline (``baseline.py``) matches findings
+by fingerprint.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class Finding:
+    rule: str           # rule id, e.g. "leak-path"
+    path: str           # repo-relative posix path
+    line: int           # 1-based
+    col: int            # 0-based
+    qualname: str       # enclosing function/class qualname ("<module>" at top)
+    message: str
+    snippet: str = ""   # stripped source line at `line`
+    suppressed: bool = False
+    justification: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        raw = "|".join((self.rule, self.path, self.qualname, self.snippet))
+        return hashlib.sha1(raw.encode("utf-8")).hexdigest()[:16]
+
+    def to_dict(self) -> Dict:
+        d = asdict(self)
+        d["fingerprint"] = self.fingerprint
+        return d
+
+    def render(self) -> str:
+        mark = " [suppressed]" if self.suppressed else ""
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule}: "
+                f"{self.message} (in {self.qualname}){mark}")
+
+
+@dataclass
+class Report:
+    """Aggregate lint result: findings + optional jaxpr-audit block."""
+    findings: List[Finding] = field(default_factory=list)
+    jaxpr: Optional[Dict] = None
+    paths: List[str] = field(default_factory=list)
+    stale_suppressions: List[str] = field(default_factory=list)
+
+    @property
+    def unsuppressed(self) -> List[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def ok(self) -> bool:
+        if self.unsuppressed:
+            return False
+        if self.jaxpr is not None and not self.jaxpr.get("ok", True):
+            return False
+        return True
+
+    def to_dict(self) -> Dict:
+        counts: Dict[str, int] = {}
+        for f in self.findings:
+            counts[f.rule] = counts.get(f.rule, 0) + 1
+        return {
+            "schema": 1,
+            "tool": "authlint",
+            "ok": self.ok,
+            "paths": self.paths,
+            "counts": counts,
+            "n_findings": len(self.findings),
+            "n_unsuppressed": len(self.unsuppressed),
+            "stale_suppressions": self.stale_suppressions,
+            "findings": [f.to_dict() for f in self.findings],
+            "jaxpr": self.jaxpr,
+        }
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=False)
+
+    def render_text(self) -> str:
+        out: List[str] = []
+        for f in sorted(self.findings, key=lambda f: (f.path, f.line)):
+            out.append(f.render())
+        sup = len(self.findings) - len(self.unsuppressed)
+        out.append(f"authlint: {len(self.unsuppressed)} finding(s), "
+                   f"{sup} suppressed")
+        for fp in self.stale_suppressions:
+            out.append(f"authlint: warning: stale suppression {fp} "
+                       "(no longer matches any finding)")
+        if self.jaxpr is not None:
+            status = "ok" if self.jaxpr.get("ok") else "FAILED"
+            out.append(f"jaxpr audit: {status} "
+                       f"({len(self.jaxpr.get('checks', []))} checks)")
+            for c in self.jaxpr.get("checks", []):
+                if not c.get("ok"):
+                    out.append(f"  FAIL {c.get('name')}: {c.get('detail')}")
+        return "\n".join(out)

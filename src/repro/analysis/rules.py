@@ -1,0 +1,453 @@
+"""Rule registry and the structural (non-taint) authlint rules.
+
+Three families (DESIGN.md §Static Analysis):
+
+* ``taint``       — dataflow rules; the leak-path engine lives in
+                    :mod:`repro.analysis.taint`, the cache-key rule here.
+* ``contract``    — API-contract bans: ``hasattr`` capability probes,
+                    hard-errored legacy single-word mask helpers,
+                    ``np.vstack`` growth on hot insert paths.
+* ``concurrency`` — scheduler/executor discipline: positive-delay sleeps
+                    in async scheduler methods, mutations outside the
+                    documented guard point, mutate-then-invalidate
+                    ordering for the answer cache.
+
+Every rule carries an ``invariant`` and ``example`` string surfaced by
+``scripts/authlint.py --explain RULE_ID`` — the tool is ``--fix``-less by
+design; the explanation is the fix recipe.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Callable, Dict, List
+
+from .astwalk import (ModuleFile, call_name, const_str, dotted,
+                      is_zero, iter_functions, names_in, receiver_chain,
+                      terminal_attr)
+from .report import Finding
+
+
+@dataclass(frozen=True)
+class RuleInfo:
+    id: str
+    family: str
+    summary: str
+    invariant: str
+    example: str
+
+
+RULES: Dict[str, RuleInfo] = {}
+CHECKERS: List[Callable[[ModuleFile], List[Finding]]] = []
+
+
+def register(info: RuleInfo):
+    RULES[info.id] = info
+
+    def deco(fn: Callable[[ModuleFile], List[Finding]]):
+        CHECKERS.append(fn)
+        return fn
+
+    return deco
+
+
+def _finding(mod: ModuleFile, rule: str, node: ast.AST, qualname: str,
+             message: str) -> Finding:
+    line = getattr(node, "lineno", 1)
+    return Finding(rule=rule, path=mod.relpath, line=line,
+                   col=getattr(node, "col_offset", 0), qualname=qualname,
+                   message=message, snippet=mod.line_at(line))
+
+
+def _scopes(mod: ModuleFile):
+    """(qualname, class, node) for every function plus a module-level
+    pseudo-scope so top-level statements are linted too."""
+    yield "<module>", None, mod.tree
+    yield from iter_functions(mod)
+
+
+def _own_statements(scope: ast.AST):
+    """Walk a scope's statements without descending into nested function
+    or class definitions (they get their own scope)."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# --------------------------------------------------------------------------
+# contract: hasattr capability probes
+# --------------------------------------------------------------------------
+
+CAPABILITY_ATTRS = frozenset({
+    "auth_bits", "ids", "data", "search", "search_masked",
+    "search_masked_batch", "begin_search", "resume_search", "insert",
+    "delete", "tombstone", "purged", "lower_bounds", "maintain",
+})
+
+
+@register(RuleInfo(
+    id="hasattr-probe",
+    family="contract",
+    summary="hasattr() probe of an engine capability attribute",
+    invariant=(
+        "Engine capabilities are negotiated through the runtime-checkable "
+        "protocols in core/api.py (Engine, MaskedEngine, ResumableEngine, "
+        "BatchEngine, MutableEngine) — never by hasattr() probes.  A probe "
+        "couples the caller to an attribute-presence accident instead of "
+        "the typed contract, and silently passes objects that happen to "
+        "carry the name (the exact aliasing the PR 3 contract removed)."),
+    example=(
+        "bad:  bits = eng.auth_bits if hasattr(eng, 'auth_bits') else None\n"
+        "good: bits = eng.auth_bits if isinstance(eng, MaskedEngine) "
+        "else None"),
+))
+def check_hasattr_probe(mod: ModuleFile) -> List[Finding]:
+    out: List[Finding] = []
+    for qual, _cls, scope in _scopes(mod):
+        for node in _own_statements(scope):
+            if not (isinstance(node, ast.Call)
+                    and call_name(node) == "hasattr"
+                    and len(node.args) == 2):
+                continue
+            attr = const_str(node.args[1])
+            if attr in CAPABILITY_ATTRS:
+                out.append(_finding(
+                    mod, "hasattr-probe", node, qual,
+                    f"hasattr(..., {attr!r}) probes an engine capability; "
+                    "use the core.api protocol hierarchy "
+                    "(isinstance(x, MaskedEngine) etc.)"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# contract: legacy single-word mask helpers
+# --------------------------------------------------------------------------
+
+LEGACY_MASK_HELPERS = frozenset({"roles_bitmask", "role_bitmask"})
+
+
+@register(RuleInfo(
+    id="legacy-mask",
+    family="contract",
+    summary="call to a hard-errored legacy single-word mask helper",
+    invariant=(
+        "Auth masks are W=ceil(n_roles/32) packed uint32 *words* "
+        "(core/rolemask.py) everywhere since PR 4; the single-word helpers "
+        "(roles_bitmask / Policy.role_bitmask) are kept only to hard-error "
+        "with a migration message.  New call sites alias role r+32 onto "
+        "role r the moment a deployment crosses 32 roles."),
+    example=(
+        "bad:  m = roles_bitmask(query.roles)\n"
+        "good: words = roles_word_mask(query.roles, n_roles)"),
+))
+def check_legacy_mask(mod: ModuleFile) -> List[Finding]:
+    out: List[Finding] = []
+    for qual, _cls, scope in _scopes(mod):
+        # the helpers' own defs (and their raise bodies) are exempt
+        if qual.split(".")[-1] in LEGACY_MASK_HELPERS:
+            continue
+        for node in _own_statements(scope):
+            if (isinstance(node, ast.Call)
+                    and terminal_attr(node) in LEGACY_MASK_HELPERS):
+                out.append(_finding(
+                    mod, "legacy-mask", node, qual,
+                    f"{terminal_attr(node)}() is the hard-errored legacy "
+                    "single-word helper; use roles_word_mask / mask_words"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# contract: O(N) array growth on hot insert paths
+# --------------------------------------------------------------------------
+
+HOT_INSERT_FNS = frozenset({"insert", "grant", "revoke", "_move",
+                            "_append_data", "_append_leftover"})
+GROWTH_CALLS = frozenset({"np.vstack", "np.append", "np.concatenate",
+                          "np.hstack"})
+
+
+@register(RuleInfo(
+    id="vstack-growth",
+    family="contract",
+    summary="np.vstack/np.append growth inside a hot insert path",
+    invariant=(
+        "Per-mutation array growth via np.vstack/np.append copies the "
+        "whole array — O(N·d) per insert, O(N²·d) per epoch of churn.  "
+        "Hot mutation paths (insert/grant/revoke/_move) must use "
+        "capacity-doubling growth buffers (amortized O(d); see "
+        "DynamicStore._append_data).  Full-rebuild helpers outside these "
+        "functions may still vstack: a rebuild is O(N) by definition."),
+    example=(
+        "bad:  self.data = np.vstack([self.data, vec[None]])   # in insert()\n"
+        "good: self._ensure_capacity(1); self._buf[self._n] = vec"),
+))
+def check_vstack_growth(mod: ModuleFile) -> List[Finding]:
+    out: List[Finding] = []
+    for qual, _cls, scope in _scopes(mod):
+        if qual.split(".")[-1] not in HOT_INSERT_FNS:
+            continue
+        for node in _own_statements(scope):
+            if (isinstance(node, ast.Call)
+                    and call_name(node) in GROWTH_CALLS):
+                out.append(_finding(
+                    mod, "vstack-growth", node, qual,
+                    f"{call_name(node)} in hot mutation path {qual}(): "
+                    "O(N) copy per call — use a capacity-doubling buffer"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# concurrency: sleeps in async scheduler code
+# --------------------------------------------------------------------------
+
+@register(RuleInfo(
+    id="async-sleep",
+    family="concurrency",
+    summary="blocking/positive-delay sleep in async scheduler code",
+    invariant=(
+        "Scheduler classes under launch/ coordinate via events, futures "
+        "and the flush clock — never wall-clock sleeps.  time.sleep() "
+        "blocks the event loop outright; asyncio.sleep(t>0) inside a "
+        "scheduler method hides a race behind a tuned delay and inflates "
+        "p99 by t under load.  asyncio.sleep(0) (a bare yield to let "
+        "submitters run) is the one allowed form.  Module-level trace "
+        "drivers replaying arrival processes are exempt: scope is class "
+        "methods in launch/."),
+    example=(
+        "bad:  await asyncio.sleep(0.01)   # 'give the flush time to land'\n"
+        "good: await self._flush_done.wait()"),
+))
+def check_async_sleep(mod: ModuleFile) -> List[Finding]:
+    out: List[Finding] = []
+    in_launch = "/launch/" in f"/{mod.relpath}"
+    for qual, cls, scope in iter_functions(mod):
+        for node in _own_statements(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name == "time.sleep" and in_launch:
+                out.append(_finding(
+                    mod, "async-sleep", node, qual,
+                    "time.sleep() blocks the event loop; use asyncio "
+                    "primitives"))
+            elif (name == "asyncio.sleep" and in_launch and cls is not None
+                  and node.args and not is_zero(node.args[0])):
+                out.append(_finding(
+                    mod, "async-sleep", node, qual,
+                    "asyncio.sleep() with a positive delay inside a "
+                    "scheduler method — synchronize on events/futures, "
+                    "not tuned delays (asyncio.sleep(0) yield is fine)"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# concurrency: mutations outside the scheduler guard point
+# --------------------------------------------------------------------------
+
+MUTATOR_ATTRS = frozenset({
+    "insert", "delete", "grant", "revoke", "tombstone", "purge_tombstones",
+    "fold_block", "maintain", "maintainer",
+})
+GUARD_FNS = frozenset({"_maybe_maintain"})
+
+
+@register(RuleInfo(
+    id="guard-point",
+    family="concurrency",
+    summary="store/engine mutation outside the scheduler's guard point",
+    invariant=(
+        "MicroBatchScheduler overlaps flushes: search waves run on "
+        "executor threads while the event loop keeps assembling batches.  "
+        "Store/engine mutations (insert/delete/grant/revoke/maintain/"
+        "compaction) are only safe at the documented guard point — "
+        "_maybe_maintain(), which runs the maintainer strictly when "
+        "_inflight == 0 (DESIGN.md §Dynamic Maintenance).  A mutation "
+        "anywhere else in a launch/ scheduler class races the in-flight "
+        "kernel launches against a moving index."),
+    example=(
+        "bad:  async def _execute(self, ...): self.store.insert(vec, tau)\n"
+        "good: schedule it via the maintainer hook; _maybe_maintain() "
+        "runs it between flushes when nothing is in flight"),
+))
+def check_guard_point(mod: ModuleFile) -> List[Finding]:
+    out: List[Finding] = []
+    if "/launch/" not in f"/{mod.relpath}":
+        return out
+    for qual, cls, scope in iter_functions(mod):
+        if cls is None and "." not in qual:
+            continue  # module-level drivers (serve_requests etc.) are exempt
+        if qual.split(".")[-1] in GUARD_FNS:
+            continue
+        for node in _own_statements(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            attr = terminal_attr(node)
+            recv = receiver_chain(node)
+            if attr in MUTATOR_ATTRS and recv:
+                out.append(_finding(
+                    mod, "guard-point", node, qual,
+                    f"{dotted(node.func)}() mutates store/engine state "
+                    f"from scheduler code outside {sorted(GUARD_FNS)[0]}() "
+                    "— mutations must run at the _inflight == 0 guard "
+                    "point"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# concurrency: mutate-then-invalidate ordering for the answer cache
+# --------------------------------------------------------------------------
+
+MUTATION_MARKER_CALLS = frozenset({
+    "_sync_policy", "_append_data", "_append_leftover", "_drop_leftover",
+})
+MUTATED_STATE_ATTRS = frozenset({
+    "engines", "block_members", "vec_block", "_base_sizes",
+    "leftover_ids", "leftover_vectors",
+})
+INVALIDATOR_ATTRS = frozenset({
+    "_cache_mutated", "_cache_deleted", "invalidate_words",
+    "invalidate_id", "clear",
+})
+MUTATOR_FN_NAMES = frozenset({
+    "insert", "delete", "_move", "grant", "revoke", "purge_tombstones",
+})
+
+
+def _class_touches_answer_cache(mod: ModuleFile, cls_node: ast.ClassDef
+                                ) -> bool:
+    for n in ast.walk(cls_node):
+        if isinstance(n, ast.Attribute) and n.attr in ("result_cache",
+                                                       "attach_cache"):
+            return True
+    return False
+
+
+@register(RuleInfo(
+    id="mutate-invalidate",
+    family="concurrency",
+    summary="cache-visible mutation without (or before) invalidation",
+    invariant=(
+        "Any store that serves answers through an AnswerCache must end "
+        "every membership mutation with a cache invalidation, and the "
+        "invalidation must come AFTER the last mutation statement: a "
+        "lookup between mutate and invalidate returning a pre-mutation "
+        "answer is exactly the stale-post-revoke leak PR 7 pinned.  "
+        "Invalidate-first orderings re-open the window (the cache refills "
+        "from not-yet-mutated state)."),
+    example=(
+        "bad:  self._cache_mutated(tau); self._sync_policy()\n"
+        "good: self._sync_policy(); self._cache_mutated(tau)"),
+))
+def check_mutate_invalidate(mod: ModuleFile) -> List[Finding]:
+    out: List[Finding] = []
+    # map class name -> node, to scope the rule to cache-coupled classes
+    cache_classes = set()
+    for n in ast.walk(mod.tree):
+        if isinstance(n, ast.ClassDef) and _class_touches_answer_cache(mod, n):
+            cache_classes.add(n.name)
+    if not cache_classes:
+        return out
+    for qual, cls, scope in iter_functions(mod):
+        if cls not in cache_classes:
+            continue
+        fn = qual.split(".")[-1]
+        if fn not in MUTATOR_FN_NAMES:
+            continue
+        last_mutation = 0
+        first_invalidate = 0
+        for node in _own_statements(scope):
+            line = getattr(node, "lineno", 0)
+            if isinstance(node, ast.Call):
+                attr = terminal_attr(node)
+                if attr in MUTATION_MARKER_CALLS:
+                    last_mutation = max(last_mutation, line)
+                elif attr in INVALIDATOR_ATTRS:
+                    chain = receiver_chain(node) + "." + attr
+                    if "cache" in chain.lower() or attr.startswith("_cache"):
+                        if not first_invalidate:
+                            first_invalidate = line
+                        else:
+                            first_invalidate = min(first_invalidate, line)
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if (isinstance(t, ast.Subscript)
+                            and any(a in MUTATED_STATE_ATTRS
+                                    for a in names_in(t.value))):
+                        last_mutation = max(last_mutation, line)
+        if not last_mutation:
+            continue  # delegating wrapper (grant/revoke -> _move)
+        if not first_invalidate:
+            out.append(Finding(
+                rule="mutate-invalidate", path=mod.relpath,
+                line=getattr(scope, "lineno", 1), col=0, qualname=qual,
+                message=f"{fn}() mutates cache-visible state but never "
+                        "invalidates the answer cache — stale authorized "
+                        "answers survive the mutation",
+                snippet=mod.line_at(getattr(scope, "lineno", 1))))
+        elif first_invalidate < last_mutation:
+            out.append(Finding(
+                rule="mutate-invalidate", path=mod.relpath,
+                line=first_invalidate, col=0, qualname=qual,
+                message=f"{fn}() invalidates the answer cache BEFORE its "
+                        f"last mutation (line {last_mutation}) — the cache "
+                        "can refill from pre-mutation state",
+                snippet=mod.line_at(first_invalidate)))
+    return out
+
+
+# --------------------------------------------------------------------------
+# taint family: answer-cache keys must carry role words
+# --------------------------------------------------------------------------
+
+WORDS_EVIDENCE_CALLS = frozenset({
+    "roles_word_mask", "mask_words", "roles_kernel_mask", "key_for",
+})
+
+
+@register(RuleInfo(
+    id="cache-key",
+    family="taint",
+    summary="answer-cache access keyed without role-mask words",
+    invariant=(
+        "AnswerCache entries are keyed by (query vector, role-mask WORDS, "
+        "k, efs) — the words are what lets grant/revoke invalidate "
+        "precisely and what stops role A's answer from serving role B.  "
+        "Every .store()/.lookup() on a cache must pass a words argument "
+        "derived from the query's roles (roles_word_mask / _query_words / "
+        "_cache_words)."),
+    example=(
+        "bad:  self.cache.store(q.vector, q.k, hits)\n"
+        "good: self.cache.store(q.vector, self._query_words(q), q.k, hits)"),
+))
+def check_cache_key(mod: ModuleFile) -> List[Finding]:
+    out: List[Finding] = []
+    for qual, _cls, scope in _scopes(mod):
+        for node in _own_statements(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            attr = terminal_attr(node)
+            recv = receiver_chain(node)
+            if attr not in ("store", "lookup") or "cache" not in recv.lower():
+                continue
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            ok = False
+            for a in args:
+                ids = names_in(a)
+                if any("words" in i or i in WORDS_EVIDENCE_CALLS
+                       for i in ids):
+                    ok = True
+                    break
+            if not ok:
+                out.append(_finding(
+                    mod, "cache-key", node, qual,
+                    f"{dotted(node.func)}() has no role-words key argument "
+                    "— answers cached without the role-mask words leak "
+                    "across roles and dodge grant/revoke invalidation"))
+    return out

@@ -1,0 +1,307 @@
+"""The leak-path taint rule: raw vector data must cross an auth-mask
+operation before it reaches a result sink.
+
+Model (intraprocedural, per function — DESIGN.md §Static Analysis):
+
+* **Sources** (expressions producing unauthorized candidate sets):
+  reads of raw vector storage (``.data``, ``.leftover_vectors``,
+  ``.leftover_ids``, the growth buffers ``._data_buf``/``._left_vecs_buf``),
+  resumable traversal results (``.begin_search``/``.resume_search``), and
+  *unmasked* engine ``.search()`` calls — any ``.search(...)`` whose
+  receiver is not the store front door (``store.search`` returns
+  already-authorized ``SearchResult``\\ s by the PR 3 contract).
+
+* **Sanitizers** (operations that apply the auth mask): the masked engine
+  entry points (``search_masked``/``search_masked_batch``/``l2_topk``/
+  ``brute_force_topk``), the coordinated per-query paths, the in-place
+  union post-filter ``_filter_unauthorized`` (clears its arguments'
+  taint), ``pack_leftover_shard`` (attaches per-row auth words), cache
+  ``.lookup`` (entries were masked when stored, keys carry role words),
+  and the mask-guard idiom — code under an ``if mask[...]`` test or a
+  comprehension filtered by a mask subscript.
+
+* **Plan gating**: a function that consults ``plan.leftover_blocks`` scans
+  leftovers *as directed by the role's plan cover* — the plan is the
+  authorization proof for leftover reads, so leftover sources are clean
+  inside such functions (raw leftover sweeps elsewhere stay tainted).
+
+* **Sinks**: ``SearchResult(hits=...)`` construction, future resolution
+  (``.set_result``), answer-cache ``.store`` payloads, and JSON
+  serialization (``json.dump``/``json.dumps``).
+
+Taint propagates through assignments, arithmetic, subscripts, and unknown
+calls with tainted arguments; method calls with tainted arguments taint
+their receiver (``topk.push_rows(tainted)`` taints ``topk``).  Returns are
+not sinks: helpers that return candidate lists are either registered
+sanitizers or their callers see the taint through their own sources.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from .astwalk import (ModuleFile, iter_functions, names_in, receiver_chain,
+                      terminal_attr)
+from .report import Finding
+from .rules import RuleInfo, _finding, register
+
+SOURCE_ATTRS = frozenset({
+    "data", "leftover_vectors", "leftover_ids", "_data_buf",
+    "_left_vecs_buf", "_left_ids_buf",
+})
+SOURCE_CALL_ATTRS = frozenset({"begin_search", "resume_search"})
+# .search() on a non-store receiver is a raw (unmasked) engine probe
+STORE_RECEIVER_MARKERS = ("store",)
+
+SANITIZER_CALLS = frozenset({
+    "search_masked", "search_masked_batch", "l2_topk", "brute_force_topk",
+    "coordinated_search", "independent_search", "global_filtered_search",
+    "routed_search", "coordinated_scan_search", "pack_leftover_shard",
+    "_mask_hits", "lookup", "authorized_topk",
+})
+INPLACE_SANITIZERS = frozenset({"_filter_unauthorized"})
+
+SINK_FUTURE_ATTRS = frozenset({"set_result"})
+SINK_JSON = frozenset({"json.dump", "json.dumps"})
+
+MASK_NAME_MARKERS = ("mask", "allowed", "authorized")
+
+
+def _is_mask_guard(test: ast.AST) -> bool:
+    """``if mask[vid]:`` / ``if row_masks[qi][i]:`` style tests — a
+    subscript whose base name carries mask evidence."""
+    for n in ast.walk(test):
+        if isinstance(n, ast.Subscript):
+            base = names_in(n.value)
+            if any(any(m in b.lower() for m in MASK_NAME_MARKERS)
+                   for b in base):
+                return True
+    return False
+
+
+class _FnTaint:
+    def __init__(self, mod: ModuleFile, qual: str,
+                 fn: ast.AST, plan_gated: bool):
+        self.mod = mod
+        self.qual = qual
+        self.fn = fn
+        self.plan_gated = plan_gated
+        self.tainted: Set[str] = set()
+        self.findings: List[Finding] = []
+
+    # ---- expression taint -------------------------------------------------
+    def expr_tainted(self, node: ast.AST) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in SOURCE_ATTRS:
+                if self.plan_gated and node.attr.startswith("leftover"):
+                    return False
+                return True
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Call):
+            return self.call_tainted(node)
+        if isinstance(node, (ast.Subscript, ast.Starred, ast.Await,
+                             ast.UnaryOp)):
+            return self.expr_tainted(node.value
+                                     if not isinstance(node, ast.UnaryOp)
+                                     else node.operand)
+        if isinstance(node, ast.BinOp):
+            return (self.expr_tainted(node.left)
+                    or self.expr_tainted(node.right))
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.expr_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return (self.expr_tainted(node.body)
+                    or self.expr_tainted(node.orelse))
+        if isinstance(node, ast.Slice):
+            return False
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            # a comprehension filtered by a mask subscript is sanitized
+            for gen in node.generators:
+                if any(_is_mask_guard(cond) for cond in gen.ifs):
+                    return False
+            return (self.expr_tainted(node.elt)
+                    or any(self.expr_tainted(g.iter)
+                           for g in node.generators))
+        return False
+
+    def call_tainted(self, call: ast.Call) -> bool:
+        attr = terminal_attr(call)
+        if attr in SANITIZER_CALLS:
+            return False
+        if attr in SOURCE_CALL_ATTRS:
+            return True
+        if attr == "search":
+            recv = receiver_chain(call)
+            if not any(m in recv for m in STORE_RECEIVER_MARKERS):
+                return True  # raw engine search: no mask applied
+            return False
+        args = list(call.args) + [kw.value for kw in call.keywords]
+        if any(self.expr_tainted(a) for a in args):
+            return True
+        # method call on a tainted receiver: tainted.sum(1), d.copy(), ...
+        if isinstance(call.func, ast.Attribute):
+            return self.expr_tainted(call.func.value)
+        return False
+
+    # ---- statement walk ---------------------------------------------------
+    def run(self) -> None:
+        self.visit_body(list(ast.iter_child_nodes(self.fn)),
+                        mask_guarded=False)
+
+    def visit_body(self, stmts, mask_guarded: bool) -> None:
+        for node in stmts:
+            self.visit_stmt(node, mask_guarded)
+
+    def visit_stmt(self, node: ast.AST, mask_guarded: bool) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # nested scopes analyzed separately
+        if isinstance(node, ast.If):
+            guarded = mask_guarded or _is_mask_guard(node.test)
+            self.visit_body(node.body, guarded)
+            self.visit_body(node.orelse, mask_guarded)
+            return
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            if self.expr_tainted(node.iter):
+                for n in ast.walk(node.target):
+                    if isinstance(n, ast.Name):
+                        self.tainted.add(n.id)
+            self.visit_body(node.body, mask_guarded)
+            self.visit_body(node.orelse, mask_guarded)
+            return
+        if isinstance(node, (ast.While, ast.With, ast.AsyncWith, ast.Try)):
+            for field in ("body", "orelse", "finalbody", "handlers"):
+                sub = getattr(node, field, None) or []
+                for s in sub:
+                    if isinstance(s, ast.ExceptHandler):
+                        self.visit_body(s.body, mask_guarded)
+                    else:
+                        self.visit_stmt(s, mask_guarded)
+            return
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = node.value
+            if value is None:
+                return
+            self.check_expr_for_sinks(value, mask_guarded)
+            t = self.expr_tainted(value)
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for tgt in targets:
+                for n in ast.walk(tgt):
+                    if isinstance(n, ast.Name):
+                        if t:
+                            self.tainted.add(n.id)
+                        else:
+                            self.tainted.discard(n.id)
+            return
+        if isinstance(node, ast.Expr):
+            self.check_expr_for_sinks(node.value, mask_guarded)
+            if isinstance(node.value, ast.Call):
+                self.apply_call_effects(node.value, mask_guarded)
+            return
+        if isinstance(node, ast.Return):
+            # returns are not sinks; still scan for nested sink calls
+            if node.value is not None:
+                self.check_expr_for_sinks(node.value, mask_guarded)
+            return
+        # other statements: scan nested expressions for sink calls
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self.check_expr_for_sinks(child, mask_guarded)
+
+    def apply_call_effects(self, call: ast.Call, mask_guarded: bool) -> None:
+        """Bare-expression call: in-place sanitizers clear their args;
+        other calls with tainted args taint their receiver object."""
+        attr = terminal_attr(call)
+        args = list(call.args) + [kw.value for kw in call.keywords]
+        if attr in INPLACE_SANITIZERS:
+            for a in args:
+                for n in ast.walk(a):
+                    if isinstance(n, ast.Name):
+                        self.tainted.discard(n.id)
+            return
+        if attr in SANITIZER_CALLS:
+            return
+        if mask_guarded:
+            return  # pushes under an explicit mask test are sanctioned
+        if any(self.expr_tainted(a) for a in args):
+            recv = receiver_chain(call)
+            root = recv.split(".", 1)[0] if recv else ""
+            if root and root != "self":
+                self.tainted.add(root)
+
+    # ---- sinks ------------------------------------------------------------
+    def check_expr_for_sinks(self, expr: ast.AST, mask_guarded: bool) -> None:
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            attr = terminal_attr(node)
+            recv = receiver_chain(node)
+            dotted_name = (recv + "." + attr) if recv else attr
+            # SearchResult(hits=...)
+            if attr == "SearchResult":
+                for kw in node.keywords:
+                    if kw.arg == "hits" and self.expr_tainted(kw.value):
+                        self.report(node, "SearchResult(hits=...) receives "
+                                    "unmasked vector-derived data")
+                if node.args and self.expr_tainted(node.args[0]):
+                    self.report(node, "SearchResult(hits=...) receives "
+                                "unmasked vector-derived data")
+            elif attr in SINK_FUTURE_ATTRS:
+                if any(self.expr_tainted(a) for a in node.args):
+                    self.report(node, "future resolved with unmasked "
+                                "vector-derived data")
+            elif attr == "store" and "cache" in recv.lower():
+                if any(self.expr_tainted(a) for a in
+                       list(node.args) + [kw.value for kw in node.keywords]):
+                    self.report(node, "answer cache stores unmasked "
+                                "vector-derived data")
+            elif dotted_name in SINK_JSON:
+                if any(self.expr_tainted(a) for a in node.args):
+                    self.report(node, "serializer receives unmasked "
+                                "vector-derived data")
+
+    def report(self, node: ast.AST, what: str) -> None:
+        self.findings.append(_finding(
+            self.mod, "leak-path", node, self.qual,
+            f"{what} — no auth-mask operation on this path "
+            "(search_masked / union post-filter / mask-guard / plan cover)"))
+
+
+def _references_plan_cover(fn: ast.AST) -> bool:
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Attribute) and n.attr == "leftover_blocks":
+            return True
+    return False
+
+
+@register(RuleInfo(
+    id="leak-path",
+    family="taint",
+    summary="unmasked vector data reaches a result sink",
+    invariant=(
+        "Every path from raw vector storage (engine .data, leftover "
+        "blocks, growth buffers, raw engine .search results) to a result "
+        "sink (SearchResult.hits, future resolution, cache payloads, "
+        "serializers) must cross an auth-mask operation: a masked kernel "
+        "call (search_masked / l2_topk), the union-mask post-filter "
+        "(_filter_unauthorized), an explicit `if mask[id]` guard, or the "
+        "plan cover for leftover scans.  This is the paper's core "
+        "soundness invariant made structural."),
+    example=(
+        "bad:  hits = eng.search(q, k)          # raw engine, no mask\n"
+        "      return SearchResult(hits=hits)\n"
+        "good: hits = [(d, i) for d, i in eng.search(q, 4 * k)\n"
+        "              if mask[int(i)]][:k]"),
+))
+def check_leak_path(mod: ModuleFile) -> List[Finding]:
+    out: List[Finding] = []
+    for qual, _cls, fn in iter_functions(mod):
+        eng = _FnTaint(mod, qual, fn, plan_gated=_references_plan_cover(fn))
+        eng.run()
+        out.extend(eng.findings)
+    return out

@@ -47,37 +47,98 @@ class HNSWIndex:
     words beyond (same layout as the ScoreScan engine, DESIGN.md §Role
     Masks).  When present the index is a ``MaskedEngine``:
     :meth:`search_masked` filters the beam's results by word-mask
-    intersection.  The attribute is only set when bits are supplied, so a
-    plain HNSW index does not satisfy the ``MaskedEngine`` protocol.
+    intersection.  ``auth_bits`` is a property over the internal growth
+    buffer that raises ``AttributeError`` on an auth-less index, so a
+    plain HNSW index still does not satisfy the runtime-checkable
+    ``MaskedEngine`` protocol; :attr:`has_auth` is the explicit
+    discriminator (no ``hasattr`` probes — authlint ``hasattr-probe``).
+
+    Row storage (``data``/``ids``/``levels``/``auth_bits``) lives in
+    capacity-doubling growth buffers exposed as prefix views, so
+    :meth:`insert` appends in amortized O(d) instead of the O(n·d)
+    re-allocation an ``np.vstack`` per insert would cost (authlint
+    ``vstack-growth``).
     """
 
     def __init__(self, data: np.ndarray, ids: Optional[np.ndarray] = None,
                  M: int = 16, efc: int = 100, seed: int = 0,
                  auth_bits: Optional[np.ndarray] = None):
         assert data.ndim == 2
-        self.data = np.ascontiguousarray(data, dtype=np.float32)
-        self.ids = (np.arange(len(data), dtype=np.int64) if ids is None
-                    else np.asarray(ids, dtype=np.int64))
+        data = np.ascontiguousarray(data, dtype=np.float32)
+        ids = (np.arange(len(data), dtype=np.int64) if ids is None
+               else np.asarray(ids, dtype=np.int64))
+        self._n = len(data)
+        cap = max(self._n, 8)
+        self._data_buf = np.empty((cap, data.shape[1]), np.float32)
+        self._data_buf[:self._n] = data
+        self._ids_buf = np.empty(cap, np.int64)
+        self._ids_buf[:self._n] = ids
+        self._levels_buf = np.zeros(cap, dtype=np.int32)
+        self._auth_buf: Optional[np.ndarray] = None
         if auth_bits is not None:
             auth_bits = np.ascontiguousarray(auth_bits, dtype=np.uint32)
-            assert len(auth_bits) == len(self.data), \
-                (auth_bits.shape, self.data.shape)
-            self.auth_bits = auth_bits
+            assert len(auth_bits) == self._n, \
+                (auth_bits.shape, data.shape)
+            self._auth_buf = np.empty((cap,) + auth_bits.shape[1:],
+                                      np.uint32)
+            self._auth_buf[:self._n] = auth_bits
         self.M = int(M)
         self.M0 = 2 * int(M)
         self.efc = int(efc)
         self.mL = 1.0 / math.log(self.M)
         self._seed = int(seed)               # kept for purge-time rebuilds
         self._rng = np.random.default_rng(seed)
-        self.levels = np.zeros(len(data), dtype=np.int32)
         # neighbors[layer][node] -> list of internal ids
         self.neighbors: List[Dict[int, List[int]]] = []
         self.entry: int = -1
         self.max_level: int = -1
         self._distance_computations = 0
         self.tombstoned: set = set()        # external ids marked deleted
-        for i in range(len(data)):
+        for i in range(self._n):
             self._insert(i)
+
+    # ------------------------------------------------------------ row storage
+    @property
+    def data(self) -> np.ndarray:
+        return self._data_buf[:self._n]
+
+    @property
+    def ids(self) -> np.ndarray:
+        return self._ids_buf[:self._n]
+
+    @property
+    def levels(self) -> np.ndarray:
+        return self._levels_buf[:self._n]
+
+    @property
+    def has_auth(self) -> bool:
+        """Whether this index carries per-vector auth words (and thus
+        satisfies the ``MaskedEngine`` protocol)."""
+        return self._auth_buf is not None
+
+    @property
+    def auth_bits(self) -> np.ndarray:
+        if self._auth_buf is None:
+            # raising (not returning None) keeps a plain index outside the
+            # runtime-checkable MaskedEngine protocol, whose isinstance
+            # check is attribute presence
+            raise AttributeError(
+                "auth_bits: HNSWIndex built without auth words "
+                "(check .has_auth / isinstance(x, MaskedEngine))")
+        return self._auth_buf[:self._n]
+
+    def _grow(self, need: int) -> None:
+        cap = len(self._ids_buf)
+        if need <= cap:
+            return
+        new_cap = max(int(need), 2 * cap)
+        for name in ("_data_buf", "_ids_buf", "_levels_buf", "_auth_buf"):
+            buf = getattr(self, name)
+            if buf is None:
+                continue
+            nb = np.zeros((new_cap,) + buf.shape[1:], buf.dtype)
+            nb[:self._n] = buf[:self._n]
+            setattr(self, name, nb)
 
     # ------------------------------------------------------------- distances
     def _dist(self, q: np.ndarray, idx: Sequence[int]) -> np.ndarray:
@@ -236,26 +297,26 @@ class HNSWIndex:
             # the row is kept, but its authorization may have changed (e.g.
             # a revoke-then-grant cycle): refresh the auth words so the
             # documented contract holds on this path too
-            if auth_bits is not None and hasattr(self, "auth_bits"):
+            if auth_bits is not None and self.has_auth:
                 self.auth_bits[self.ids == np.int64(vid)] = \
                     np.asarray(auth_bits, np.uint32)
             return
-        self.data = np.vstack([self.data,
-                               np.asarray(vec, np.float32)[None]])
-        self.ids = np.append(self.ids, np.int64(vid))
-        self.levels = np.append(self.levels, 0)
-        if hasattr(self, "auth_bits"):
-            row = (np.zeros(self.auth_bits.shape[1:], np.uint32)
-                   if auth_bits is None
+        row = None
+        if self.has_auth:
+            width = self._auth_buf.shape[1:]
+            row = (np.zeros(width, np.uint32) if auth_bits is None
                    else np.asarray(auth_bits, np.uint32))
-            assert row.shape == self.auth_bits.shape[1:], \
-                (row.shape, self.auth_bits.shape)
-            if self.auth_bits.ndim == 1:
-                self.auth_bits = np.append(self.auth_bits, row)
-            else:
-                self.auth_bits = np.vstack([self.auth_bits, row[None]])
+            assert row.shape == width, (row.shape, self._auth_buf.shape)
+        n = self._n
+        self._grow(n + 1)
+        self._data_buf[n] = np.asarray(vec, np.float32)
+        self._ids_buf[n] = np.int64(vid)
+        self._levels_buf[n] = 0
+        if row is not None:
+            self._auth_buf[n] = row
+        self._n = n + 1
         self.tombstoned.discard(vid)
-        self._insert(len(self.data) - 1)
+        self._insert(n)
 
     def purged(self, drop) -> "HNSWIndex":
         """Rebuild without the rows whose external id is in ``drop``
@@ -267,8 +328,7 @@ class HNSWIndex:
         drop = set(int(v) for v in drop)
         keep = np.fromiter((int(v) not in drop for v in self.ids),
                            bool, len(self.ids))
-        bits = (self.auth_bits[keep] if hasattr(self, "auth_bits")
-                else None)
+        bits = self.auth_bits[keep] if self.has_auth else None
         out = HNSWIndex(self.data[keep], ids=self.ids[keep], M=self.M,
                         efc=self.efc, seed=self._seed, auth_bits=bits)
         survivors = set(int(i) for i in out.ids)
@@ -294,7 +354,7 @@ class HNSWIndex:
         mask words (and the optional coordinated-search ``bound``).  The
         beam is approximate like any HNSW search; authorization is exact —
         an unauthorized vector can never be returned."""
-        assert hasattr(self, "auth_bits"), \
+        assert self.has_auth, \
             "HNSWIndex built without auth_bits cannot search_masked"
         res, _ = self.begin_search(q, max(int(efs or 0), 4 * k, 64))
         if not res:

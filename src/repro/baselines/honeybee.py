@@ -14,6 +14,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.api import Engine
 from ..core.policy import AccessPolicy, Role
 from ..core.costmodel import HNSWCostModel
 
@@ -93,8 +94,11 @@ class HoneyBeePartitioner:
         eng = self.engines[pid]
         mask = self.policy.authorized_mask(r)
         n = len(eng)
-        nr = int(mask[np.asarray(eng.ids)].sum()) if hasattr(eng, "ids") \
-            else int(mask.sum())
+        # Engine protocol (core/api.py) instead of a hasattr capability
+        # probe: protocol engines expose external ids for the exact
+        # authorized-count; anything else falls back to the policy mask
+        nr = (int(mask[np.asarray(eng.ids)].sum())
+              if isinstance(eng, Engine) else int(mask.sum()))
         lam = math.ceil(n / max(nr, 1))
         kk, effs = lam * k, min(lam * efs, n)
         out = [(d, int(i)) for d, i in eng.search(q, max(kk, k),

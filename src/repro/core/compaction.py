@@ -108,8 +108,13 @@ class LatticeCompactor:
         if sample is None:
             sample = next(iter(self.store.engines.values()), None)
         if isinstance(sample, HNSWIndex):
+            # the MaskedEngine protocol check (not a hasattr probe) decides
+            # whether the rebuilt engine carries auth words — a plain HNSW
+            # index stays plain, an auth-carrying one gets fresh words from
+            # the current policy
+            from .api import MaskedEngine
             bits = (policy_auth_words(self.store.policy)[ids]
-                    if hasattr(sample, "auth_bits") else None)
+                    if isinstance(sample, MaskedEngine) else None)
             return HNSWIndex(data, ids=ids, M=sample.M, efc=sample.efc,
                              seed=sample._seed, auth_bits=bits)
         if isinstance(sample, ExactIndex):
