@@ -74,6 +74,7 @@ def main() -> None:
     go("exp18", lambda: E.exp18_sharded_scaling(bc))
     go("exp19", lambda: E.exp19_sustained_churn(bc))
     go("exp20", lambda: E.exp20_slo_serving(bc))
+    go("exp21", lambda: E.exp21_drift_reoptimization(bc))
 
     go("kernels", K.run_all)
 

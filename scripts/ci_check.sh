@@ -193,3 +193,54 @@ assert all(v != vid for _, v in dyn.search(x, r_to, k=5)), "stale hit: leak"
 assert cache.stats.hits + cache.stats.invalidated > 0       # cache engaged
 print("SLO smoke OK (priority cut, bulk-confined rejection, cache hygiene)")
 PY
+
+echo "== drift smoke: fold -> flag -> reoptimize loop =="
+python - <<'PY'
+# drift-driven re-optimization: a fresh combination folds into a node,
+# a cull drives it past the drift slack, and maintain() re-runs the
+# copy/merge decision — flag drains, SA never rises, answers stay exact
+import numpy as np
+from repro.core import (CompactionConfig, DynamicStore, HNSWCostModel,
+                        LatticeCompactor, build_effveda,
+                        build_vector_storage, exact_factory,
+                        generate_policy, metrics)
+
+policy = generate_policy(n_vectors=400, n_roles=8, n_permissions=20, seed=5)
+rng = np.random.default_rng(5)
+vecs = rng.standard_normal((400, 8)).astype(np.float32)
+cm = HNSWCostModel(lam_threshold=60)
+store = build_vector_storage(build_effveda(policy, cm, beta=1.1, k=5),
+                             vecs, engine_factory=exact_factory())
+dyn = DynamicStore(store, cm)
+comp = LatticeCompactor(dyn, CompactionConfig(
+    tombstone_purge_threshold=16, leftover_fold_threshold=50))
+
+combo = frozenset({0, 7})
+r = 1
+while combo in dyn.block_roles:              # must be an unseen combination
+    combo = frozenset(combo | {r})
+    r += 1
+vids = [dyn.insert(rng.standard_normal(8).astype(np.float32), combo)
+        for _ in range(70)]
+d0 = comp.maintain(budget_s=2.0)
+assert d0["folds"] >= 1, d0                  # fresh block became a node
+for v in vids[:50]:                          # popularity moves on
+    dyn.delete(v)
+flagged = dyn.needs_reoptimization()
+assert flagged, "cull past slack must flag the node"
+sa_before = store.sa()
+d1 = comp.maintain(budget_s=2.0)
+assert d1["reoptimized"] >= 1, d1
+assert store.sa() <= sa_before + 1e-9, (sa_before, store.sa())
+assert dyn.needs_reoptimization() == [], "flag did not drain"
+for roles in [(0,), (7,), (0, 7)]:
+    x = rng.standard_normal(8).astype(np.float32)
+    got = [v for _, v in dyn.search(x, roles=roles, k=5)]
+    mask = store.authorized_mask_multi(roles).copy()
+    for t in dyn.tombstones:
+        mask[t] = False
+    want = [v for _, v in metrics.brute_force_topk(store.data, mask, x, 5)]
+    assert got == want[:len(got)] and len(got) == len(want), (roles, got,
+                                                             want)
+print("drift smoke OK (fold -> flag -> reoptimize, SA bounded, parity)")
+PY

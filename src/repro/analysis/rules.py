@@ -251,7 +251,7 @@ def check_async_sleep(mod: ModuleFile) -> List[Finding]:
 
 MUTATOR_ATTRS = frozenset({
     "insert", "delete", "grant", "revoke", "tombstone", "purge_tombstones",
-    "fold_block", "maintain", "maintainer",
+    "fold_block", "reoptimize_node", "maintain", "maintainer",
 })
 GUARD_FNS = frozenset({"_maybe_maintain"})
 

@@ -23,7 +23,14 @@ back into the lattice incrementally — no full EffVEDA rebuild:
   * :meth:`purge_tombstones` physically rebuilds engines without tombstoned
     rows (each engine's ``purged`` helper) and resets the tombstone set, so
     the over-fetch pad returns to zero.
-  * :meth:`maintain` runs both under a time budget; the
+  * :meth:`reoptimize_node` closes the drift loop: a node flagged by
+    ``DynamicStore.needs_reoptimization`` gets its copy/merge decision
+    re-run — split a bloated merged node into per-τ pieces (below-Λ pieces
+    demote to leftover scan blocks), re-merge a shrunken node into a
+    same-roles sibling, or drop a copy whose source nodes now cover it —
+    always by *moving or freeing* rows, so storage amplification never
+    rises.
+  * :meth:`maintain` runs all three under a time budget; the
     :class:`~repro.launch.scheduler.MicroBatchScheduler` invokes it between
     flushes (``maintainer=`` hook) so maintenance interleaves with serving.
 
@@ -40,7 +47,7 @@ from typing import Dict, FrozenSet, List, Optional, Set
 import numpy as np
 
 from .api import MaskedEngine, MutableEngine
-from .queryplan import greedy_plan
+from .queryplan import greedy_plan, plan_cost
 from .store import EngineFactory
 
 
@@ -73,6 +80,12 @@ class CompactionStats:
     tombstones_purged: int = 0
     engines_rebuilt: int = 0
     plans_replanned: int = 0
+    # drift-driven re-optimization (reoptimize_node): decisions re-run,
+    # and the structural actions they took
+    reoptimized: int = 0
+    splits: int = 0
+    remerges: int = 0
+    copies_dropped: int = 0
     maintain_s: float = 0.0
 
     def as_dict(self) -> Dict[str, float]:
@@ -149,9 +162,12 @@ class LatticeCompactor:
         n = len(dead)
         dyn.tombstones.clear()
         dyn.tombstone_roles.clear()
-        # compaction is the re-optimization point: drift measures from here
-        dyn._base_sizes = {key: len(store.engines[key].ids)
-                           for key in store.engines}
+        # NOTE: a purge must NOT re-base drift accounting.  It removes rows
+        # that were already dead, so every node's *live* size is unchanged —
+        # a node flagged by needs_reoptimization() stays flagged until
+        # reoptimize_node() actually re-runs its copy/merge decision.  (The
+        # former blanket re-base here erased accumulated drift on every
+        # unrelated purge, leaving flagged nodes stuck in a stale shape.)
         store.invalidate_caches()
         # answer-cache hygiene for the rebuilt engines: cached hits never
         # reference purged rows (delete() invalidated by id, and entries
@@ -171,28 +187,111 @@ class LatticeCompactor:
         return [b for b, ids in sorted(self.store.leftover_ids.items())
                 if len(ids) >= max(1, thresh)]
 
-    def _merge_target(self, tau: FrozenSet[int], m_new: int):
+    def _merge_target(self, tau: FrozenSet[int], m_new: int,
+                      exclude: FrozenSet = frozenset()):
         """The budgeted copy/merge decision, incrementally: among nodes
         addressed by exactly ``tau``, merge into the one the cost model
-        prefers over a standalone node (one bigger visit vs two visits per
-        role in ``tau``); ``None`` means materialize standalone."""
+        prefers over a standalone node (one bigger visit vs two visits);
+        ``None`` means materialize standalone.
+
+        The gain is scored against each role's *actual plan*, not the
+        assumption that every role in ``tau`` already visits the node: a
+        role whose plan covers the node's blocks elsewhere (an impure visit
+        it avoids via copies) gains nothing from the merge but would be
+        dragged into the bigger node to reach the new rows — its delta is
+        pure cost.  Likewise any role routed through the node impurely pays
+        the growth without touching the new rows."""
         lat, cm, k = self.store.lattice, self.dyn.cm, self.dyn.k
+        plans = self.store.plans
         best_key, best_gain = None, 0.0
         for key, node in lat.nodes.items():
-            if node.roles != tau:
+            if key in exclude or node.roles != tau:
                 continue
             n_tot = node.size(lat.block_sizes)
+            visitors = {r for r, plan in plans.items() if key in plan.nodes}
             gain = 0.0
             for r in tau:
-                n_auth = node.authorized_size(lat.policy, r, lat.block_sizes)
-                split = (cm.role_query_cost(n_tot, max(n_auth, 1), k)
-                         + cm.role_query_cost(m_new, m_new, k))
-                merged = cm.role_query_cost(n_tot + m_new,
-                                            max(n_auth, 1) + m_new, k)
+                n_auth = max(
+                    node.authorized_size(lat.policy, r, lat.block_sizes), 1)
+                split = cm.role_query_cost(m_new, m_new, k)
+                merged = cm.role_query_cost(n_tot + m_new, n_auth + m_new, k)
+                if r in visitors:
+                    # r already pays a visit here; merging folds the new
+                    # rows into that same visit
+                    split += cm.role_query_cost(n_tot, n_auth, k)
                 gain += split - merged
+            # impure visitors outside tau: bigger node, same authorized rows
+            for r in visitors - set(tau):
+                n_auth = max(
+                    node.authorized_size(lat.policy, r, lat.block_sizes), 1)
+                gain -= (cm.role_query_cost(n_tot + m_new, n_auth, k)
+                         - cm.role_query_cost(n_tot, n_auth, k))
             if gain > best_gain:
                 best_key, best_gain = key, gain
         return best_key
+
+    # ------------------------------------------------------- shared movers
+    def _live_rows(self, eng):
+        """``(data, ids)`` of an engine minus global and engine-local
+        tombstones — the only rows a rebuild may re-index (a physical
+        rebuild that carries dead rows would resurrect them as permanent
+        storage debt no later purge is aware of)."""
+        ids = np.asarray(eng.ids, np.int64)
+        data = np.asarray(eng.data, np.float32)
+        dead = set(self.dyn.tombstones) | set(getattr(eng, "tombstoned", ()))
+        if not dead or not len(ids):
+            return data, ids
+        keep = ~np.isin(ids, np.fromiter(dead, np.int64, len(dead)))
+        return data[keep], ids[keep]
+
+    def _block_rows(self, blocks):
+        """Live ``(data, ids)`` of a set of exclusive blocks, from the
+        authoritative membership lists (tombstoned rows never appear)."""
+        dyn, store = self.dyn, self.store
+        vids = [int(v) for b in sorted(blocks)
+                for v in dyn.block_members[b]
+                if int(v) not in dyn.tombstones]
+        ids = np.asarray(vids, np.int64)
+        if not len(ids):
+            return np.empty((0, store.data.shape[1]), np.float32), ids
+        return np.ascontiguousarray(store.data[ids], np.float32), ids
+
+    def _merge_rows_into(self, target, ids: np.ndarray,
+                         vecs: np.ndarray) -> None:
+        """Move rows into node ``target``'s engine: native inserts on a
+        MutableEngine, otherwise a rebuild over the target's *live* rows
+        plus the new ones."""
+        store = self.store
+        eng = store.engines[target]
+        if isinstance(eng, MutableEngine):
+            from ..ann.scorescan import policy_auth_words
+            bits = (policy_auth_words(store.policy)
+                    if isinstance(eng, MaskedEngine) else None)
+            for vid, vec in zip(ids, vecs):
+                if bits is not None:
+                    eng.insert(int(vid), vec, auth_bits=bits[int(vid)])
+                else:
+                    eng.insert(int(vid), vec)
+        else:
+            e_data, e_ids = self._live_rows(eng)
+            store.engines[target] = self._new_engine(
+                np.concatenate([e_data, vecs]),
+                np.concatenate([e_ids, ids]), like=eng)
+            self.stats.engines_rebuilt += 1
+
+    def _recover_plans(self, affected) -> None:
+        """Re-cover only the affected roles' plans against the mutated
+        lattice + leftover pool, then drop derived caches."""
+        store, dyn = self.store, self.dyn
+        phi = store.lattice.container_map()
+        leftset = frozenset(store.leftover_ids)
+        for r in sorted(set(affected)):
+            if r in store.plans:
+                store.plans[r] = greedy_plan(store.lattice, r, dyn.cm,
+                                             dyn.k, phi=phi,
+                                             leftovers=leftset)
+                self.stats.plans_replanned += 1
+        store.invalidate_caches()
 
     def fold_block(self, b: int) -> None:
         """Fold leftover block ``b`` into the lattice: drop the redundant
@@ -201,6 +300,16 @@ class LatticeCompactor:
         dyn, store = self.dyn, self.store
         ids = np.asarray(store.leftover_ids[b], np.int64).copy()
         vecs = np.asarray(store.leftover_vectors[b], np.float32).copy()
+        # never re-index tombstoned rows: the leftover arrays are normally
+        # kept clean by delete(), but demoted blocks and direct array
+        # surgery may carry dead ids — folding them into an engine would
+        # resurrect them as storage debt
+        if len(ids) and dyn.tombstones:
+            dead = np.fromiter(dyn.tombstones, np.int64,
+                               len(dyn.tombstones))
+            keep = ~np.isin(ids, dead)
+            if not keep.all():
+                ids, vecs = ids[keep], vecs[keep]
         tau = frozenset(dyn.block_roles[b])
         nodes, _ = dyn._containers(b)
         if nodes:
@@ -208,30 +317,15 @@ class LatticeCompactor:
         else:
             target = self._merge_target(tau, len(ids))
             if target is not None:
-                eng = store.engines[target]
-                if isinstance(eng, MutableEngine):
-                    from ..ann.scorescan import policy_auth_words
-                    bits = (policy_auth_words(store.policy)
-                            if isinstance(eng, MaskedEngine) else None)
-                    for vid, vec in zip(ids, vecs):
-                        if bits is not None:
-                            eng.insert(int(vid), vec,
-                                       auth_bits=bits[int(vid)])
-                        else:
-                            eng.insert(int(vid), vec)
-                else:
-                    store.engines[target] = self._new_engine(
-                        np.concatenate([eng.data, vecs]),
-                        np.concatenate([eng.ids, ids]), like=eng)
-                    self.stats.engines_rebuilt += 1
+                self._merge_rows_into(target, ids, vecs)
                 store.lattice.nodes[target].blocks.add(b)
-                dyn._base_sizes[target] = len(store.engines[target].ids)
+                dyn.register_base(target)
                 dyn.dirty_nodes.discard(target)
                 self.stats.nodes_merged += 1
             else:
                 key = store.lattice.add_node(tau, {b})
                 store.engines[key] = self._new_engine(vecs, ids)
-                dyn._base_sizes[key] = len(ids)
+                dyn.register_base(key)
                 self.stats.nodes_created += 1
         # the leftover copy is dropped either way: a fold is a move, so
         # storage amplification never increases
@@ -240,25 +334,167 @@ class LatticeCompactor:
             if b in plan.leftover_blocks:
                 affected.add(r)
         dyn._discard_leftover_block(b)
-        phi = store.lattice.container_map()
-        leftset = frozenset(store.leftover_ids)
-        for r in sorted(affected):
-            if r in store.plans:
-                store.plans[r] = greedy_plan(store.lattice, r, dyn.cm,
-                                             dyn.k, phi=phi,
-                                             leftovers=leftset)
-                self.stats.plans_replanned += 1
-        store.invalidate_caches()
+        self._recover_plans(affected)
         self.stats.folds += 1
         self.stats.vectors_folded += len(ids)
+
+    # --------------------------------------------- drift re-optimization
+    def _demote_blocks(self, blocks) -> None:
+        """Move blocks back to the leftover pool (linear scan) with their
+        live rows only — the below-Λ leg of a split."""
+        dyn, store = self.dyn, self.store
+        for b in sorted(blocks):
+            data, ids = self._block_rows([b])
+            dyn._discard_leftover_block(b)   # drop any stale growth buffers
+            store.leftover_ids[b] = ids
+            store.leftover_vectors[b] = data
+
+    def _retire_node(self, key) -> None:
+        dyn, store = self.dyn, self.store
+        del store.engines[key]
+        store.lattice.delete(key)
+        dyn._base_sizes.pop(key, None)
+        dyn.dirty_nodes.discard(key)
+
+    def reoptimize_node(self, key):
+        """Re-run the budgeted copy/merge decision over flagged node
+        ``key`` (DESIGN.md §Dynamic Maintenance).  Exactly one of:
+
+          * ``"drop"``    — every block is duplicated in another node and
+            the re-covered plans are no costlier: free this copy (SA
+            strictly drops, answers route through the source nodes).
+          * ``"split"``   — the node's per-τ pieces are cheaper as separate
+            visits: pure pieces ≥ Λ become standalone nodes, below-Λ pieces
+            demote to leftover scan blocks.  A node that shrank below Λ
+            entirely demotes the same way.
+          * ``"remerge"`` — a same-roles sibling exists and one bigger
+            visit wins per the (plan-aware) merge gain: move the live rows
+            there and delete this node.
+          * ``None``      — the current shape is still what the cost model
+            would choose; the decision is re-based so the flag clears.
+
+        Every action moves or frees rows — storage amplification never
+        rises — and only live rows are ever re-indexed.  Affected roles'
+        plans are re-covered via ``greedy_plan``."""
+        dyn, store = self.dyn, self.store
+        lat, cm, k = store.lattice, dyn.cm, dyn.k
+        if key not in lat.nodes or key not in store.engines:
+            dyn._base_sizes.pop(key, None)   # node retired since flagging
+            return None
+        node = lat.nodes[key]
+        phi = lat.container_map()
+        visitors = {r for r, plan in store.plans.items()
+                    if key in plan.nodes}
+        affected = set(node.roles) | visitors
+        self.stats.reoptimized += 1
+
+        # --- drop: a fully duplicated copy whose sources now cover it.
+        # Tentatively retire the node, re-cover, and commit only if no
+        # visiting role's plan got costlier (the "within budget" gate);
+        # the freed rows strictly lower SA.
+        if node.blocks and all(len(phi.get(b, ())) > 1
+                               for b in node.blocks):
+            before = {r: plan_cost(lat, store.plans[r], r, cm, k)
+                      for r in visitors if r in store.plans}
+            engine = store.engines.pop(key)
+            lat.delete(key)
+            phi2 = lat.container_map()
+            leftset = frozenset(store.leftover_ids)
+            trial = {r: greedy_plan(lat, r, cm, k, phi=phi2,
+                                    leftovers=leftset) for r in before}
+            if all(plan_cost(lat, trial[r], r, cm, k)
+                   <= before[r] * (1.0 + 1e-9) for r in trial):
+                for r, p in trial.items():
+                    store.plans[r] = p
+                    self.stats.plans_replanned += 1
+                dyn._base_sizes.pop(key, None)
+                dyn.dirty_nodes.discard(key)
+                store.invalidate_caches()
+                self.stats.copies_dropped += 1
+                return "drop"
+            lat.nodes[key] = node            # keep the copy: still earning
+            store.engines[key] = engine
+
+        # --- split: per-τ pieces vs one merged visit, scored on live sizes
+        groups = lat.split_groups(key)
+        sizes = {tau: sum(len(dyn.block_members[b]) for b in blocks)
+                 for tau, blocks in groups.items()}
+        n_live = sum(sizes.values())
+        roles_here = sorted(set().union(*groups)) if groups else []
+        merged_cost = split_cost = 0.0
+        for r in roles_here:
+            n_auth = sum(sz for tau, sz in sizes.items() if r in tau)
+            if n_auth == 0:
+                continue
+            merged_cost += cm.role_query_cost(n_live, n_auth, k)
+            split_cost += sum(cm.role_query_cost(sz, sz, k)
+                              for tau, sz in sizes.items() if r in tau)
+        if len(groups) >= 2 and split_cost < merged_cost:
+            for tau, blocks in groups.items():
+                own = {b for b in blocks if len(phi.get(b, ())) == 1}
+                if not own:                  # duplicated elsewhere: drop
+                    self.stats.copies_dropped += 1
+                    continue
+                data, ids = self._block_rows(own)
+                if cm.indexable(len(ids)):
+                    nk = lat.add_node(tau, set(own))
+                    store.engines[nk] = self._new_engine(data, ids)
+                    dyn.register_base(nk)
+                    self.stats.nodes_created += 1
+                else:
+                    self._demote_blocks(own)
+            self._retire_node(key)
+            affected |= set(roles_here)
+            self._recover_plans(affected)
+            self.stats.splits += 1
+            return "split"
+
+        # --- remerge: a shrunken node folds into a same-roles sibling
+        # when one bigger visit wins (plan-aware merge gain)
+        target = self._merge_target(frozenset(node.roles), n_live,
+                                    exclude=frozenset({key}))
+        if target is not None:
+            own = {b for b in node.blocks if len(phi.get(b, ())) == 1}
+            data, ids = self._block_rows(own)
+            if len(ids):
+                self._merge_rows_into(target, ids, data)
+            tnode = lat.nodes[target]
+            tnode.blocks |= own
+            affected |= set(tnode.roles)
+            affected |= {r for r, p in store.plans.items()
+                         if target in p.nodes}
+            self._retire_node(key)
+            dyn.register_base(target)
+            dyn.dirty_nodes.discard(target)
+            self._recover_plans(affected)
+            self.stats.remerges += 1
+            self.stats.nodes_merged += 1
+            return "remerge"
+
+        # --- demote: shrunk below Λ with no sibling — a linear scan now
+        # beats the index (Def 2.2's scan leg); move live rows back to the
+        # leftover pool
+        if not cm.indexable(n_live):
+            own = {b for b in node.blocks if len(phi.get(b, ())) == 1}
+            self._demote_blocks(own)
+            self._retire_node(key)
+            self._recover_plans(affected)
+            self.stats.splits += 1
+            return "split"
+
+        # shape unchanged: re-base so the flag clears, drift measures anew
+        dyn.register_base(key)
+        return None
 
     # ------------------------------------------------------------- maintain
     def maintain(self, budget_s: float = 0.05) -> Dict[str, float]:
         """One maintenance cycle under a soft time budget: purge tombstones
-        when past the threshold, then fold oversized leftover blocks until
-        the budget runs out (the budget is checked *between* steps — a
-        single step may overrun it).  Returns the work done this cycle as a
-        counter delta (the scheduler accumulates these into ServeStats)."""
+        when past the threshold, fold oversized leftover blocks, then act
+        on drift-flagged nodes (lowest priority — correctness never depends
+        on it) until the budget runs out (the budget is checked *between*
+        steps — a single step may overrun it).  Returns the work done this
+        cycle as a counter delta (the scheduler accumulates these into
+        ServeStats)."""
         t0 = time.perf_counter()
         deadline = t0 + max(0.0, float(budget_s))
         before = self.stats.as_dict()
@@ -268,6 +504,10 @@ class LatticeCompactor:
             if time.perf_counter() >= deadline:
                 break
             self.fold_block(b)
+        for key in list(self.dyn.needs_reoptimization()):
+            if time.perf_counter() >= deadline:
+                break
+            self.reoptimize_node(key)
         self.stats.cycles += 1
         self.stats.maintain_s += time.perf_counter() - t0
         after = self.stats.as_dict()

@@ -76,6 +76,15 @@ class HNSWCostModel:
             return self.scan_cost(n_auth)
         return self.hnsw_cost(n_auth, self.alpha * k)
 
+    def indexable(self, n: int) -> bool:
+        """Whether an ``n``-row node clears the indexability threshold Λ.
+
+        The single gate shared by the builders' finalization
+        (``_split_small_nodes``), the compactor's fold trigger, and the
+        drift-driven split/demote decision: below Λ a linear scan wins
+        (Fig. 2) and the rows belong in the leftover pool."""
+        return int(n) >= self.lam_threshold
+
 
 @dataclasses.dataclass(frozen=True)
 class ScanCostModel:
@@ -107,6 +116,9 @@ class ScanCostModel:
 
     def scan_cost(self, n: int) -> float:
         return self.role_query_cost(n, n, 10)
+
+    def indexable(self, n: int) -> bool:  # API parity: everything scans
+        return int(n) >= self.lam_threshold
 
 
 CostModel = HNSWCostModel  # default model type used across core/

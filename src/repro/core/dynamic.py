@@ -432,12 +432,36 @@ class DynamicStore:
         return out
 
     # --------------------------------------------------------- lazy re-optim
+    def live_size(self, key) -> int:
+        """Rows of node ``key``'s engine minus global and engine-local
+        tombstones — the size the cost model should reason about."""
+        eng = self.store.engines[key]
+        dead = self.tombstones | set(getattr(eng, "tombstoned", ()))
+        if not dead:
+            return len(eng.ids)
+        return len(set(int(i) for i in eng.ids) - dead)
+
+    def register_base(self, key) -> None:
+        """(Re-)base drift accounting for ``key`` at its current live size.
+
+        Called at every node-creation site and after each re-optimization
+        decision — the points where the node's copy/merge shape was last
+        chosen; ``needs_reoptimization`` measures drift from here."""
+        self._base_sizes[key] = self.live_size(key)
+
     def needs_reoptimization(self) -> List:
-        """Nodes whose size drifted past slack — re-run copy/merge locally."""
+        """Nodes whose live size drifted past ``slack`` since their shape
+        was last chosen — re-run copy/merge locally
+        (:meth:`~repro.core.LatticeCompactor.reoptimize_node`).
+
+        A node not yet registered (a creation site that predates drift
+        accounting) is registered at its current live size on first sight,
+        so its drift is measured from now on — never silently pinned to
+        zero by a transient ``base == live`` fallback."""
         out = []
-        for key, eng in self.store.engines.items():
-            base = self._base_sizes.get(key, len(eng.ids))
-            live = len(set(int(i) for i in eng.ids) - self.tombstones)
+        for key in self.store.engines:
+            live = self.live_size(key)
+            base = self._base_sizes.setdefault(key, live)
             if base and abs(live - base) / base > self.slack:
                 out.append(key)
         return out

@@ -171,6 +171,18 @@ class Lattice:
         return key
 
     # ---------------------------------------------------------------- queries
+    def split_groups(self, key: NodeKey) -> Dict[RoleSet, Set[int]]:
+        """Blocks of ``key`` grouped by their exact role combination τ_b.
+
+        These are the per-τ pieces a drift-driven split decomposes the node
+        into (core/compaction.py::reoptimize_node): each group is pure for
+        its combination, so a piece either becomes a standalone node or —
+        below the indexability threshold — a leftover scan block."""
+        groups: Dict[RoleSet, Set[int]] = {}
+        for b in self.nodes[key].blocks:
+            groups.setdefault(self.policy.block_roles[b], set()).add(b)
+        return groups
+
     def container_map(self) -> Dict[int, List[NodeKey]]:
         """Φ: exclusive block id → lattice nodes physically holding it (§6.1)."""
         phi: Dict[int, List[NodeKey]] = {}

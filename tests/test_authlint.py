@@ -109,6 +109,26 @@ class Scheduler:
     assert len(gp) == 1 and "_execute" in gp[0].qualname, findings
 
 
+def test_bad_fixture_reoptimize_outside_guard_point():
+    """Drift-driven re-optimization splits/merges live engines — calling
+    it from scheduler code anywhere but _maybe_maintain() races in-flight
+    searches against a node being rebuilt."""
+    src = """
+class Scheduler:
+    async def _flush(self, batch):
+        for key in self.dyn.needs_reoptimization():
+            self.comp.reoptimize_node(key)
+
+    def _maybe_maintain(self):
+        if self._inflight:
+            return
+        self.comp.reoptimize_node(self.flagged.pop())
+"""
+    findings = lint_source(src, "src/repro/launch/scheduler.py")
+    gp = [f for f in findings if f.rule == "guard-point"]
+    assert len(gp) == 1 and "_flush" in gp[0].qualname, findings
+
+
 def test_bad_fixture_hasattr_probe():
     src = """
 def pick(self, eng):

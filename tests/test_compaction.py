@@ -267,6 +267,60 @@ def test_exact_engine_store_compaction_parity():
                        (r,), 8)
 
 
+# ----------------------------------------------------- drift flag integrity
+def test_drift_flag_survives_unrelated_purge(comp_dyn):
+    """Regression: purge_tombstones used to re-base drift accounting for
+    every node, silently clearing needs_reoptimization() flags the purge
+    did nothing to address.  A purge changes physical rows, not live
+    membership — a node flagged for drift must stay flagged until
+    reoptimize_node acts on it."""
+    dyn, comp = comp_dyn
+    rng = np.random.default_rng(21)
+    combo = frozenset({0, 3, 5})
+    for _ in range(45):
+        dyn.insert(rng.standard_normal(DIM).astype(np.float32), combo)
+    b = dyn.block_roles.index(combo)
+    comp.fold_block(b)
+    key = next(k for k, n in dyn.store.lattice.nodes.items()
+               if b in n.blocks)
+    for _ in range(25):                      # grow the node past slack
+        dyn.insert(rng.standard_normal(DIM).astype(np.float32), combo)
+    assert key in dyn.needs_reoptimization()
+    for v in range(10):                      # unrelated churn → purge
+        dyn.delete(v)
+    comp.purge_tombstones()
+    assert len(dyn.tombstones) == 0
+    assert key in dyn.needs_reoptimization(), \
+        "purge erased a drift flag it did not act on"
+    comp.maintain(budget_s=5.0)              # reoptimize pass clears it
+    assert dyn.needs_reoptimization() == []
+    for r in combo:
+        _assert_oracle(dyn, rng.standard_normal(DIM).astype(np.float32),
+                       (r,), 8)
+
+
+def test_unregistered_node_drift_detected_from_first_sight(comp_dyn):
+    """Regression: needs_reoptimization's fallback used the node's CURRENT
+    size as the baseline for nodes missing from _base_sizes, pinning their
+    measured drift to zero forever.  A node first seen at size n must be
+    flagged once it moves past slack relative to n."""
+    dyn, comp = comp_dyn
+    rng = np.random.default_rng(22)
+    combo = frozenset({1, 6})
+    for _ in range(45):
+        dyn.insert(rng.standard_normal(DIM).astype(np.float32), combo)
+    b = dyn.block_roles.index(combo)
+    comp.fold_block(b)
+    key = next(k for k, n in dyn.store.lattice.nodes.items()
+               if b in n.blocks)
+    del dyn._base_sizes[key]                 # simulate a forgotten base
+    assert key not in dyn.needs_reoptimization()   # first sight: registers
+    for _ in range(25):                      # now drift past slack
+        dyn.insert(rng.standard_normal(DIM).astype(np.float32), combo)
+    assert key in dyn.needs_reoptimization(), \
+        "unregistered node never flags when the baseline tracks live size"
+
+
 # ------------------------------------------------- amortized growth buffers
 def test_insert_cost_amortized_not_full_copy():
     """ISSUE acceptance: per-insert cost is amortized O(d), not O(N·d) —

@@ -1,0 +1,376 @@
+"""Drift-driven re-optimization (core/compaction.py::reoptimize_node):
+split / remerge / drop unit legs on exact, ScoreScan, and HNSW engines,
+the plan-aware merge-gain fix, and the fold-path tombstone-filter fix.
+
+The handcrafted policies below pin exact lattice shapes: build with
+``beta=1.0`` (no copy budget) and every block ≥ Λ, so EffVEDA leaves the
+exclusive lattice untouched and the tests can perform precise surgery
+(merge/carve/copy) before driving ``reoptimize_node``.
+"""
+import numpy as np
+import pytest
+
+from repro.ann.scorescan import scorescan_factory
+from repro.core import (CompactionConfig, DynamicStore, HNSWCostModel,
+                        LatticeCompactor, build_effveda,
+                        build_vector_storage, exact_factory,
+                        hnsw_masked_factory, metrics)
+from repro.core.policy import AccessPolicy
+from repro.core.queryplan import Plan
+
+DIM = 16
+ENGINES = ("exact", "scan", "hnsw")
+
+
+def _handmade(engine, blocks, lam=80, k=8, seed=0, fold_at=10**9,
+              purge_at=10**9):
+    """Store over a handcrafted policy: ``blocks`` is [(roles, size), ...].
+
+    beta=1.0 and all blocks ≥ lam ⇒ the built lattice is exactly the
+    exclusive lattice (one ("ex", τ) node per distinct combination)."""
+    sizes = [int(s) for _, s in blocks]
+    n = sum(sizes)
+    bounds = np.cumsum([0] + sizes)
+    all_ids = np.arange(n, dtype=np.int64)
+    policy = AccessPolicy(
+        n_roles=max(r for tau, _ in blocks for r in tau) + 1,
+        block_roles=tuple(frozenset(t) for t, _ in blocks),
+        block_members=tuple(all_ids[bounds[i]:bounds[i + 1]]
+                            for i in range(len(blocks))))
+    rng = np.random.default_rng(seed)
+    vecs = rng.standard_normal((n, DIM)).astype(np.float32)
+    cm = HNSWCostModel(lam_threshold=lam)
+    res = build_effveda(policy, cm, beta=1.0, k=k)
+    factory = {"scan": lambda: scorescan_factory(policy),
+               "exact": exact_factory,
+               "hnsw": lambda: hnsw_masked_factory(policy, M=8, efc=48),
+               }[engine]()
+    store = build_vector_storage(res, vecs, engine_factory=factory)
+    dyn = DynamicStore(store, cm, k=k)
+    comp = LatticeCompactor(dyn, CompactionConfig(
+        tombstone_purge_threshold=purge_at, leftover_fold_threshold=fold_at))
+    return dyn, comp
+
+
+def _assert_oracle(dyn, roles, k=8, seed=7, n_queries=4):
+    rng = np.random.default_rng(seed)
+    for _ in range(n_queries):
+        x = rng.standard_normal(DIM).astype(np.float32)
+        got = [v for _, v in dyn.search(x, roles=roles, k=k)]
+        mask = dyn.store.authorized_mask_multi(roles).copy()
+        for t in dyn.tombstones:
+            mask[t] = False
+        want = [v for _, v in metrics.brute_force_topk(dyn.store.data,
+                                                       mask, x, k)]
+        assert got == want[:len(got)] and len(got) == len(want), (roles,
+                                                                 got, want)
+
+
+def _surgery_merge(comp, k1, k2):
+    """Simulate a build-time merge: union two nodes (engine rows included)
+    into one node addressed by the union of their role sets."""
+    store, dyn = comp.store, comp.dyn
+    lat = store.lattice
+    e1, e2 = store.engines.pop(k1), store.engines.pop(k2)
+    nk = lat.merge_into(k1, k2)
+    data = np.concatenate([np.asarray(e1.data, np.float32),
+                           np.asarray(e2.data, np.float32)])
+    ids = np.concatenate([np.asarray(e1.ids, np.int64),
+                          np.asarray(e2.ids, np.int64)])
+    store.engines[nk] = comp._new_engine(data, ids)
+    dyn._base_sizes.pop(k1, None)
+    dyn._base_sizes.pop(k2, None)
+    dyn.register_base(nk)
+    comp._recover_plans(set(lat.nodes[nk].roles))
+    return nk
+
+
+def _surgery_carve(comp, key, b):
+    """Split block ``b`` out of node ``key`` into its own standalone node
+    (the inverse of a fold merge)."""
+    store, dyn = comp.store, comp.dyn
+    lat = store.lattice
+    node = lat.nodes[key]
+    node.blocks.discard(b)
+    rdata, rids = comp._block_rows(node.blocks)
+    store.engines[key] = comp._new_engine(rdata, rids,
+                                          like=store.engines[key])
+    data, ids = comp._block_rows([b])
+    nk = lat.add_node(store.policy.block_roles[b], {b})
+    store.engines[nk] = comp._new_engine(data, ids)
+    dyn.register_base(key)
+    dyn.register_base(nk)
+    comp._recover_plans(set(node.roles))
+    return nk
+
+
+# ------------------------------------------------------------- split leg
+@pytest.mark.parametrize("engine", ENGINES)
+def test_split_bloated_merged_node(engine):
+    """A merged node whose per-τ pieces the cost model now prefers as
+    separate pure visits is split back; SA never rises and every answer
+    still matches the oracle."""
+    dyn, comp = _handmade(engine, [({0}, 160), ({1}, 120)])
+    store = dyn.store
+    mk = _surgery_merge(comp, ("ex", frozenset({0})), ("ex", frozenset({1})))
+    sa_before = store.sa()
+    assert comp.reoptimize_node(mk) == "split"
+    assert mk not in store.lattice.nodes and mk not in store.engines
+    by_roles = {frozenset(n.roles): k
+                for k, n in store.lattice.nodes.items()}
+    assert frozenset({0}) in by_roles and frozenset({1}) in by_roles
+    for tau, sz in ((frozenset({0}), 160), (frozenset({1}), 120)):
+        eng = store.engines[by_roles[tau]]
+        assert len(eng.ids) == sz
+    assert store.sa() <= sa_before + 1e-9
+    assert comp.stats.splits == 1 and comp.stats.reoptimized == 1
+    for r in (0, 1):
+        _assert_oracle(dyn, (r,))
+    _assert_oracle(dyn, (0, 1))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_split_demotes_below_threshold_piece(engine):
+    """Deletes shrink one τ-group of a merged node below Λ: the split
+    demotes that piece to a leftover scan block (with only live rows)
+    while the big piece stays indexed."""
+    dyn, comp = _handmade(engine, [({0}, 200), ({1}, 120)])
+    store = dyn.store
+    mk = _surgery_merge(comp, ("ex", frozenset({0})), ("ex", frozenset({1})))
+    b1 = store.policy.block_roles.index(frozenset({1}))
+    victims = [int(v) for v in dyn.block_members[b1][:100]]
+    for v in victims:
+        dyn.delete(v)
+    assert mk in dyn.needs_reoptimization()
+    sa_before = store.sa()
+    assert comp.reoptimize_node(mk) == "split"
+    assert b1 in store.leftover_ids
+    left = set(int(i) for i in store.leftover_ids[b1])
+    assert len(left) == 20 and not (left & dyn.tombstones)
+    assert store.sa() <= sa_before + 1e-9
+    assert dyn.needs_reoptimization() == []
+    for r in (0, 1):
+        _assert_oracle(dyn, (r,))
+
+
+# ----------------------------------------------------------- remerge leg
+@pytest.mark.parametrize("engine", ENGINES)
+def test_remerge_shrunken_sibling(engine):
+    """A node that shrank below usefulness folds into a same-roles sibling
+    when one bigger visit wins — rows move (SA never rises), tombstoned
+    rows are left behind."""
+    dyn, comp = _handmade(engine, [({0}, 160), ({0}, 100), ({1}, 120)])
+    store = dyn.store
+    host = ("ex", frozenset({0}))
+    b1 = 1                                   # the ({0}, 100) block
+    nk = _surgery_carve(comp, host, b1)
+    victims = [int(v) for v in dyn.block_members[b1][:60]]
+    for v in victims:
+        dyn.delete(v)
+    assert nk in dyn.needs_reoptimization()
+    sa_before = store.sa()
+    assert comp.reoptimize_node(nk) == "remerge"
+    assert nk not in store.lattice.nodes and nk not in store.engines
+    assert b1 in store.lattice.nodes[host].blocks
+    host_ids = set(int(i) for i in store.engines[host].ids)
+    assert set(int(v) for v in dyn.block_members[b1]) <= host_ids
+    assert not (host_ids & dyn.tombstones)
+    assert store.sa() <= sa_before + 1e-9
+    assert comp.stats.remerges == 1
+    assert dyn.needs_reoptimization() == []
+    _assert_oracle(dyn, (0,))
+    _assert_oracle(dyn, (0, 1))
+
+
+# -------------------------------------------------------------- drop leg
+@pytest.mark.parametrize("engine", ENGINES)
+def test_drop_copy_covered_by_source(engine):
+    """A copy node all of whose blocks are duplicated elsewhere — and whose
+    visitors' re-covered plans are no costlier — is dropped outright:
+    storage strictly decreases, answers route through the source nodes."""
+    dyn, comp = _handmade(engine, [({0, 1}, 100), ({0, 1, 2}, 200)])
+    store = dyn.store
+    lat = store.lattice
+    a_key = ("ex", frozenset({0, 1}))
+    d_key = ("ex", frozenset({0, 1, 2}))
+    # surgery: a big merged node covering both blocks, pure for roles 0/1
+    data = np.concatenate([np.asarray(store.engines[a_key].data, np.float32),
+                           np.asarray(store.engines[d_key].data, np.float32)])
+    ids = np.concatenate([np.asarray(store.engines[a_key].ids, np.int64),
+                          np.asarray(store.engines[d_key].ids, np.int64)])
+    bk = lat.add_node(frozenset({0, 1}), {0, 1})
+    store.engines[bk] = comp._new_engine(data, ids)
+    dyn.register_base(bk)
+    comp._recover_plans({0, 1, 2})
+    # one 300-row pure visit beats two separate visits, so roles 0/1 route
+    # through the merged node and the original ("ex", {0,1}) copy idles
+    assert all(a_key not in store.plans[r].nodes for r in (0, 1))
+    sa_before = store.sa()
+    assert comp.reoptimize_node(a_key) == "drop"
+    assert a_key not in lat.nodes and a_key not in store.engines
+    assert store.sa() < sa_before
+    assert comp.stats.copies_dropped == 1
+    for r in (0, 1, 2):
+        _assert_oracle(dyn, (r,))
+
+
+@pytest.mark.parametrize("engine", ["scan"])
+def test_drop_refused_when_replans_cost_more(engine):
+    """The SA gate alone is not enough: a duplicated copy stays when some
+    visiting role's re-covered plan would get costlier without it."""
+    dyn, comp = _handmade(engine, [({0, 1}, 100), ({0}, 200)])
+    store = dyn.store
+    lat = store.lattice
+    a_key = ("ex", frozenset({0, 1}))
+    e_key = ("ex", frozenset({0}))
+    # copy block 0 into the role-{0} node: role 0 gets a single pure visit,
+    # but role 1 still needs the original copy (impure via the big node
+    # would cost more)
+    lat.copy_blocks(a_key, e_key)
+    data, ids = comp._block_rows(lat.nodes[e_key].blocks)
+    store.engines[e_key] = comp._new_engine(data, ids,
+                                            like=store.engines[e_key])
+    dyn.register_base(e_key)
+    comp._recover_plans({0, 1})
+    assert a_key in store.plans[1].nodes
+    assert comp.reoptimize_node(a_key) is None
+    assert a_key in lat.nodes and a_key in store.engines
+    for r in (0, 1):
+        _assert_oracle(dyn, (r,))
+
+
+# ------------------------------------------------- no-op re-base + loop
+def test_noop_rebases_so_flag_clears():
+    """When the current shape is still what the cost model would choose,
+    reoptimize_node re-bases drift accounting so the flag clears instead
+    of re-flagging (and re-scanning) the node forever."""
+    dyn, comp = _handmade("scan", [({0}, 200), ({1}, 120)])
+    key = ("ex", frozenset({0}))
+    rng = np.random.default_rng(1)
+    for _ in range(80):                      # grow well past slack
+        dyn.insert(rng.standard_normal(DIM).astype(np.float32),
+                   frozenset({0}))
+    assert key in dyn.needs_reoptimization()
+    assert comp.reoptimize_node(key) is None
+    assert comp.stats.reoptimized == 1
+    assert key in dyn.store.engines
+    assert dyn.needs_reoptimization() == []
+    _assert_oracle(dyn, (0,))
+
+
+def test_maintain_runs_drift_pass_and_converges():
+    """maintain() acts on flagged nodes after folds: after enough cycles
+    the flagged set is empty and the delta surfaces the new counters."""
+    dyn, comp = _handmade("scan", [({0}, 160), ({1}, 120), ({2}, 100)],
+                          purge_at=16, fold_at=50)
+    store = dyn.store
+    mk = _surgery_merge(comp, ("ex", frozenset({0})), ("ex", frozenset({1})))
+    rng = np.random.default_rng(2)
+    for _ in range(90):                      # drift the merged node past slack
+        dyn.insert(rng.standard_normal(DIM).astype(np.float32),
+                   frozenset({0}))
+    assert mk in dyn.needs_reoptimization()
+    sa_before = store.sa()
+    delta = comp.maintain(budget_s=5.0)
+    assert delta["reoptimized"] >= 1 and delta["splits"] >= 1, delta
+    assert mk not in store.lattice.nodes
+    assert dyn.needs_reoptimization() == []
+    assert store.sa() <= sa_before + 1e-9
+    for r in (0, 1, 2):
+        _assert_oracle(dyn, (r,))
+    # idempotent once converged
+    delta2 = comp.maintain(budget_s=5.0)
+    assert delta2["splits"] == delta2["remerges"] == 0
+
+
+# ------------------------------------ satellite 3: plan-aware merge gain
+def test_merge_gain_respects_actual_plans():
+    """Pinned case for the _merge_target fix: a candidate node whose
+    blocks every role already covers elsewhere must NOT attract the merge
+    (the old τ-only scoring credited each role with a node visit it never
+    paid, and merged).  Rerouting a plan through the node flips the
+    decision back — the gain now tracks the plans."""
+    dyn, comp = _handmade("scan", [({0}, 60), ({1}, 200), ({0}, 150)],
+                          lam=80)
+    store = dyn.store
+    lat = store.lattice
+    e_key = ("ex", frozenset({0}))           # holds blocks 0 and 2
+    # carve block 0 out and merge it with the role-{1} node: a merged node
+    # X with roles {0,1}, impure for role 0 (60 of 260 rows)
+    nb0 = _surgery_carve(comp, e_key, 0)
+    xk = _surgery_merge(comp, nb0, ("ex", frozenset({1})))
+    # copy block 0 back into the role-{0} node: role 0 now covers all its
+    # blocks with one pure visit there and its plan avoids X
+    lat.copy_blocks(xk, e_key, source_blocks={0})
+    data, ids = comp._block_rows(lat.nodes[e_key].blocks)
+    store.engines[e_key] = comp._new_engine(data, ids,
+                                            like=store.engines[e_key])
+    dyn.register_base(e_key)
+    comp._recover_plans({0, 1})
+    assert xk not in store.plans[0].nodes
+    assert xk in store.plans[1].nodes
+    # fixed: role 0 would be dragged into a 360-row impure visit it never
+    # paid before — the merge loses; materialize standalone instead
+    assert comp._merge_target(frozenset({0, 1}), 100) is None
+    # flip: force role 0's plan through X — now both roles genuinely fold
+    # a second visit away and the merge wins
+    store.plans[0] = Plan(nodes=(e_key, xk),
+                          leftover_blocks=store.plans[0].leftover_blocks)
+    assert comp._merge_target(frozenset({0, 1}), 100) == xk
+
+
+# --------------------------------- satellite 2: fold never re-indexes dead
+@pytest.mark.parametrize("engine", ENGINES)
+def test_fold_merge_never_reindexes_dead_rows(engine):
+    """Regression: fold_block's merge path rebuilt the target engine from
+    its raw arrays, re-indexing rows that were tombstoned but not yet
+    purged.  The rebuilt engine must hold live rows only, and answers must
+    be unchanged by the fold."""
+    dyn, comp = _handmade(engine, [({0}, 160), ({1}, 120)], fold_at=30)
+    store = dyn.store
+    mk = _surgery_merge(comp, ("ex", frozenset({0})), ("ex", frozenset({1})))
+    tau = frozenset({0, 1})
+    # tombstone rows inside the merge target (below the purge threshold)
+    victims = [int(i) for i in store.engines[mk].ids[:10]]
+    for v in victims:
+        dyn.delete(v)
+    rng = np.random.default_rng(5)
+    for _ in range(50):                      # fresh combo == the node's roles
+        dyn.insert(rng.standard_normal(DIM).astype(np.float32), tau)
+    b = dyn.block_roles.index(tau)
+    assert comp._merge_target(tau, len(store.leftover_ids[b])) == mk
+    queries = [(rng.standard_normal(DIM).astype(np.float32), (r,))
+               for r in (0, 1)]
+    pre = [[v for _, v in dyn.search(x, roles=rs, k=8)] for x, rs in queries]
+    comp.fold_block(b)
+    assert b in store.lattice.nodes[mk].blocks
+    eng_ids = set(int(i) for i in store.engines[mk].ids)
+    local = set(getattr(store.engines[mk], "tombstoned", ()))
+    assert not (eng_ids - local) & dyn.tombstones, \
+        "fold re-indexed tombstoned rows"
+    post = [[v for _, v in dyn.search(x, roles=rs, k=8)] for x, rs in queries]
+    assert post == pre
+    for r in (0, 1):
+        _assert_oracle(dyn, (r,))
+
+
+def test_fold_of_half_deleted_leftover_block_is_clean():
+    """ISSUE scenario: delete half a leftover block, fold it — the new
+    standalone engine holds no dead rows and answers are unchanged."""
+    dyn, comp = _handmade("scan", [({0}, 160), ({1}, 120)], fold_at=30)
+    store = dyn.store
+    tau = frozenset({0, 1})
+    rng = np.random.default_rng(6)
+    vids = [dyn.insert(rng.standard_normal(DIM).astype(np.float32), tau)
+            for _ in range(80)]
+    for v in vids[:40]:
+        dyn.delete(v)
+    b = dyn.block_roles.index(tau)
+    x = rng.standard_normal(DIM).astype(np.float32)
+    pre = [v for _, v in dyn.search(x, roles=(0, 1), k=8)]
+    comp.fold_block(b)
+    key = next(k for k, n in store.lattice.nodes.items() if b in n.blocks)
+    eng_ids = set(int(i) for i in store.engines[key].ids)
+    assert not eng_ids & dyn.tombstones
+    assert [v for _, v in dyn.search(x, roles=(0, 1), k=8)] == pre
+    _assert_oracle(dyn, (0, 1))

@@ -355,6 +355,74 @@ def test_sustained_churn_with_compaction_matches_oracle(n_roles, seed):
     assert len(dyn.tombstones) <= 6          # purge threshold is the bound
 
 
+@settings(max_examples=4, deadline=None)
+@given(n_roles=st.sampled_from((8, 40)), seed=st.integers(0, 2))
+def test_drift_reoptimization_under_rotating_popularity(n_roles, seed):
+    """Drift-driven re-optimization interleaved with churn (W=1 at 8
+    roles, W=2 at 40): role popularity rotates each batch — the popular
+    role's blocks take an insert burst while the previous favorite is
+    culled — and maintain() between batches runs the split/remerge/drop
+    pass over whatever nodes crossed the drift slack.  Every answer
+    matches the brute-force authorized oracle, a maintain() cycle never
+    changes answers, SA is monotone non-increasing across maintain()
+    calls, and the flagged set converges to empty once churn stops."""
+    from repro.core import CompactionConfig, LatticeCompactor
+
+    policy, vecs, store, cm = _fresh(n_roles, seed, scan=True)
+    dyn = DynamicStore(store, cm)
+    comp = LatticeCompactor(dyn, CompactionConfig(
+        tombstone_purge_threshold=6, leftover_fold_threshold=25))
+    rng = np.random.default_rng(9000 + 10 * seed + n_roles)
+    hi = min(n_roles - 1, 33)                # crosses the word boundary
+
+    def oracle(x, roles, k):
+        mask = dyn.store.authorized_mask_multi(roles).copy()
+        for t in dyn.tombstones:
+            mask[t] = False
+        return [v for _, v in metrics.brute_force_topk(dyn.store.data,
+                                                       mask, x, k)]
+
+    inserted = {}                            # popular role -> its vids
+    for rnd in range(4):
+        pop = rnd % min(n_roles, 4)          # rotating popularity
+        vids = inserted.setdefault(pop, [])
+        for i in range(24):                  # burst toward the favorite
+            tau = frozenset({pop}) if i % 2 else frozenset({pop, hi})
+            vids.append(dyn.insert(
+                rng.standard_normal(DIM).astype(np.float32), tau))
+        prev = (rnd - 1) % min(n_roles, 4)
+        stale = [v for v in inserted.get(prev, ())
+                 if v not in dyn.tombstones]
+        for v in stale[:16]:                 # cull last round's favorite
+            dyn.delete(v)
+        queries = [(rng.standard_normal(DIM).astype(np.float32),
+                    (int(rng.integers(n_roles)),) if i % 2 else (pop, hi))
+                   for i in range(4)]
+        pre = [[v for _, v in dyn.search(x, roles=roles, k=5)]
+               for x, roles in queries]
+        for (x, roles), got in zip(queries, pre):
+            want = oracle(x, roles, 5)
+            assert got == want[:len(got)], (roles, got, want)
+            assert len(got) == len(want)
+        sa_before = dyn.store.sa()
+        comp.maintain(budget_s=2.0)
+        assert dyn.store.sa() <= sa_before + 1e-9, \
+            "maintain() raised storage amplification"
+        post = [[v for _, v in dyn.search(x, roles=roles, k=5)]
+                for x, roles in queries]
+        assert post == pre, "drift re-optimization changed answers"
+    for _ in range(3):                       # quiescence: flags drain
+        if not dyn.needs_reoptimization():
+            break
+        comp.maintain(budget_s=2.0)
+    assert dyn.needs_reoptimization() == []
+    x = rng.standard_normal(DIM).astype(np.float32)
+    for roles in [(0,), (hi,), (0, hi)]:
+        got = [v for _, v in dyn.search(x, roles=roles, k=5)]
+        want = oracle(x, roles, 5)
+        assert got == want[:len(got)] and len(got) == len(want)
+
+
 # ------------------------------------------------- churn + answer cache
 @settings(max_examples=6, deadline=None)
 @given(n_roles=st.sampled_from((8, 40)), seed=st.integers(0, 2))
