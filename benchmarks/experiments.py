@@ -1063,3 +1063,96 @@ def exp21_drift_reoptimization(bc: BenchConfig):
          f"reoptimized={comp.stats.reoptimized};"
          f"splits={comp.stats.splits};remerges={comp.stats.remerges};"
          f"copies_dropped={comp.stats.copies_dropped}")
+
+
+def exp22_filtered_selectivity(bc: BenchConfig):
+    """Hybrid filtered search: QPS/recall vs predicate selectivity with
+    selectivity-aware routing on vs off (DESIGN.md §Hybrid Filtered
+    Search).
+
+    The store carries a one-word predicate plane (a bucketed ``score``
+    range field, thermometer-coded) over HNSW masked engines; each query
+    attaches ``where = (("ge", "score", edge),)`` whose edge dials the
+    true selectivity across {1.0, 0.5, 0.1, 0.01}.  Two arms per
+    selectivity:
+
+      * ``exp22_filtered/sel{s}:on``  — ``route_by_selectivity=True``: the
+        cost model compares the predicate-thinned beam (Def. 2.2 with
+        ``n_auth * sel``) against an exact node scan, per node.
+      * ``exp22_filtered/sel{s}:off`` — always-beam baseline: HNSW
+        traversal with ``ceil(k/sel)`` over-fetch + post-filter, the thing
+        a selectivity-blind planner would do.
+
+    Recall is against the brute-force (authorized AND predicate) oracle.
+    ``exp22_filtered/gate`` carries the CI-gated derived keys: at
+    selectivity 0.01 (and 0.1) routing must not lose QPS
+    (``qps_ratio_* >= 1``) nor drop recall by more than 0.02
+    (``recall_delta_* >= -0.02``).
+    """
+    import dataclasses as dc
+    from repro.core import Query, hnsw_masked_factory
+    from repro.core.predicate import PredicateSchema
+
+    sbc = dc.replace(bc, n_vectors=min(bc.n_vectors, 3000), dim=16,
+                     lam=min(bc.lam, 200), n_queries=min(bc.n_queries, 24),
+                     n_runs=1)
+    ds = dataset(sbc)
+    cm = cost_model(sbc)
+    rng = np.random.default_rng(sbc.seed + 22)
+
+    edges = (0.0, 0.5, 0.9, 0.99)          # uniform scores → sel 1/.5/.1/.01
+    schema = PredicateSchema.make(ranges={"score": edges})
+    scores = rng.uniform(0.0, 1.0, ds.policy.n_vectors)
+    attrs = schema.encode_rows([{"score": float(s)} for s in scores])
+
+    res = build_effveda(ds.policy, cm, beta=1.1, k=sbc.k)
+    store = build_vector_storage(
+        res, ds.vectors,
+        engine_factory=hnsw_masked_factory(ds.policy, M=sbc.M, efc=sbc.efc,
+                                           attr_words=attrs),
+        pred_schema=schema, attr_words=attrs, cost_model=cm)
+
+    stats: Dict[tuple, tuple] = {}
+    for label, edge in (("1.0", 0.0), ("0.5", 0.5), ("0.1", 0.9),
+                        ("0.01", 0.99)):
+        where = (("ge", "score", float(edge)),)
+        pred = scores >= edge
+        sel_true = float(pred.mean())
+        truths = []
+        for q, r in zip(ds.queries, ds.query_roles):
+            mask = ds.policy.authorized_mask(int(r)) & pred
+            truths.append([i for _, i in metrics.brute_force_topk(
+                ds.vectors, mask, q, sbc.k)])
+        for routing in (True, False):
+            store.route_by_selectivity = routing
+            recalls = []
+            t0 = time.perf_counter()
+            for _ in range(sbc.n_runs):
+                for i, (q, r) in enumerate(zip(ds.queries, ds.query_roles)):
+                    out = store.search([Query(vector=q, roles=(int(r),),
+                                              k=sbc.k, efs=sbc.efs,
+                                              where=where)])[0]
+                    recalls.append(metrics.recall_at_k(
+                        [v for _, v in out.hits], truths[i], sbc.k))
+            dt = time.perf_counter() - t0
+            n_q = sbc.n_runs * len(ds.queries)
+            qps, recall = n_q / dt, float(np.mean(recalls))
+            stats[(label, routing)] = (qps, recall)
+            arm = "on" if routing else "off"
+            emit(f"exp22_filtered/sel{label}:{arm}", dt / n_q * 1e6,
+                 f"qps={qps:.1f};recall={recall:.4f};"
+                 f"selectivity={sel_true:.4f};"
+                 f"est={store.where_selectivity(where):.4f}")
+    store.route_by_selectivity = True
+
+    def ratio(label):
+        (q_on, r_on), (q_off, r_off) = stats[(label, True)], stats[(label,
+                                                                    False)]
+        return q_on / q_off, r_on - r_off
+
+    qr001, rd001 = ratio("0.01")
+    qr01, rd01 = ratio("0.1")
+    emit("exp22_filtered/gate", 1e6 / stats[("0.01", True)][0],
+         f"qps_ratio_001={qr001:.3f};recall_delta_001={rd001:.4f};"
+         f"qps_ratio_01={qr01:.3f};recall_delta_01={rd01:.4f};"
+         f"recall_on_001={stats[('0.01', True)][1]:.4f}")

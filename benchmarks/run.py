@@ -75,6 +75,7 @@ def main() -> None:
     go("exp19", lambda: E.exp19_sustained_churn(bc))
     go("exp20", lambda: E.exp20_slo_serving(bc))
     go("exp21", lambda: E.exp21_drift_reoptimization(bc))
+    go("exp22", lambda: E.exp22_filtered_selectivity(bc))
 
     go("kernels", K.run_all)
 

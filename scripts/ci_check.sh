@@ -33,6 +33,10 @@ if [[ "$FULL" == 1 ]]; then
 else
   echo "== fast tier: pytest -m 'not slow' =="
   python -m pytest -x -q -m "not slow" --junitxml=junit.xml
+  echo "== fast tier: filtered-search conformance leg =="
+  # the predicate-plane oracle harness, run as its own leg so a hybrid
+  # filtered-search regression is named in CI output, not buried
+  python -m pytest -x -q -m filtered
 fi
 
 echo "== many-role smoke: n_roles=64 multi-word auth masks =="

@@ -83,10 +83,25 @@ def _mk_inputs(w: int, rng: np.random.Generator):
     return q, db, auth, mask
 
 
+def _mk_pred_inputs(p: int, rng: np.random.Generator):
+    """(N, P) attribute words with bit 3 of the LAST word set on even rows
+    only — the audit's known-selectivity plane."""
+    attr = np.zeros((SIG_N, p), np.uint32)
+    attr[::2, p - 1] = 1 << 3
+    return attr
+
+
 def audit_kernel(fn: Callable, widths: Sequence[int] = (1, 2),
-                 check_semantics: bool = True) -> Dict:
+                 check_semantics: bool = True,
+                 pred_widths: Sequence[int] = ()) -> Dict:
     """Audit ``fn`` (an ``l2_topk``-signature callable).  Returns
-    ``{"ok": bool, "checks": [{name, ok, detail}, ...]}``."""
+    ``{"ok": bool, "checks": [{name, ok, detail}, ...]}``.
+
+    ``pred_widths`` additionally audits the predicate-word plane at each
+    given P: the attr/require/forbid operands must be live in the traced
+    computation, and the output must respond to them (an unsatisfiable
+    require returns no ids; a last-word require admits exactly the rows
+    holding the bit in that word — catching truncation to word 0)."""
     import jax
 
     rng = np.random.default_rng(0)
@@ -151,15 +166,75 @@ def audit_kernel(fn: Callable, widths: Sequence[int] = (1, 2),
             except Exception as e:
                 record(name, False, f"run failed: {type(e).__name__}: {e}")
 
+    for p in pred_widths:
+        q, db, auth, mask = _mk_inputs(1, rng)
+        attr = _mk_pred_inputs(p, rng)
+        req = np.zeros((SIG_B, p), np.uint32)
+        req[:, p - 1] = 1 << 3
+        forb = np.zeros((SIG_B, p), np.uint32)
+        name = f"pred-liveness(P={p})"
+        try:
+            jaxpr = jax.make_jaxpr(
+                lambda q, db, a, m, at, r, f: fn(
+                    q, db, a, m, SIG_K, attr_bits=at, require=r, forbid=f)
+            )(q, db, auth, mask, attr, req, forb)
+            live = _live_invars(jaxpr)
+            # invars: queries, db, auth_bits, role_mask, attr, require, forbid
+            dead = [n for i, n in ((4, "attr_bits"), (5, "require"),
+                                   (6, "forbid"))
+                    if i < len(live) and not live[i]]
+            record(name, not dead,
+                   f"dead operand(s): {dead}" if dead else
+                   "attr_bits, require, and forbid are live in the traced "
+                   "computation")
+        except Exception as e:
+            record(name, False, f"trace failed: {type(e).__name__}: {e}")
+        if not check_semantics:
+            continue
+        name = f"pred-sensitivity(P={p})"
+        try:
+            # unsatisfiable require: a bit no attribute row holds
+            impossible = np.zeros((SIG_B, p), np.uint32)
+            impossible[:, 0] = 1 << 30
+            _, ids_none = fn(q, db, auth, mask, SIG_K, attr_bits=attr,
+                             require=impossible, forbid=forb)
+            # last-word require: exactly the even rows qualify
+            _, ids_even = fn(q, db, auth, mask, SIG_K, attr_bits=attr,
+                             require=req, forbid=forb)
+            # same bit demanded in word 0 instead (P>1): nothing qualifies
+            ok_word = True
+            if p > 1:
+                wrong = np.zeros((SIG_B, p), np.uint32)
+                wrong[:, 0] = 1 << 3
+                _, ids_wrong = fn(q, db, auth, mask, SIG_K, attr_bits=attr,
+                                  require=wrong, forbid=forb)
+                ok_word = bool((np.asarray(ids_wrong) == -1).all())
+            ids_none = np.asarray(ids_none)
+            ids_even = np.asarray(ids_even)
+            valid = ids_even[ids_even >= 0]
+            ok = (bool((ids_none == -1).all())
+                  and len(valid) > 0
+                  and bool((valid % 2 == 0).all())
+                  and ok_word)
+            record(name, ok,
+                   "predicate words drive the result" if ok else
+                   f"unsat require ids {ids_none.tolist()}, last-word "
+                   f"require ids {ids_even.tolist()} — predicate words "
+                   "are not consumed correctly")
+        except Exception as e:
+            record(name, False, f"run failed: {type(e).__name__}: {e}")
+
     return {"ok": all(c["ok"] for c in checks), "checks": checks,
             "signature": {"b": SIG_B, "n": SIG_N, "d": SIG_D, "k": SIG_K,
-                          "widths": list(widths)}}
+                          "widths": list(widths),
+                          "pred_widths": list(pred_widths)}}
 
 
-def audit_l2_topk(widths: Sequence[int] = (1, 2)) -> Dict:
+def audit_l2_topk(widths: Sequence[int] = (1, 2),
+                  pred_widths: Sequence[int] = (1, 2)) -> Dict:
     """Audit the real kernel wrapper (interpret mode — CI-safe)."""
     from repro.kernels.l2_topk.ops import l2_topk
-    return audit_kernel(l2_topk, widths=widths)
+    return audit_kernel(l2_topk, widths=widths, pred_widths=pred_widths)
 
 
 def severed_auth_fixture() -> Callable:
@@ -177,3 +252,21 @@ def severed_auth_fixture() -> Callable:
         return -dists, ids.astype(jnp.int32)
 
     return bad_l2_topk
+
+
+def severed_predicate_fixture() -> Callable:
+    """An ``l2_topk``-signature kernel that honors auth but ignores the
+    predicate-word operands — ``audit_kernel(..., pred_widths=...)`` must
+    fail on it (tests/test_authlint.py)."""
+    from repro.kernels.l2_topk.ref import l2_topk_ref
+
+    def bad_filtered_l2_topk(queries, db, auth_bits, role_mask, k,
+                             bound=None, attr_bits=None, require=None,
+                             forbid=None):
+        # predicate operands accepted, silently dropped: the exact leak
+        # shape the jaxpr audit exists to catch
+        b = (np.full(len(queries), np.inf, np.float32) if bound is None
+             else bound)
+        return l2_topk_ref(queries, db, auth_bits, role_mask, b, k)
+
+    return bad_filtered_l2_topk

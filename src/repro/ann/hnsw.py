@@ -62,7 +62,8 @@ class HNSWIndex:
 
     def __init__(self, data: np.ndarray, ids: Optional[np.ndarray] = None,
                  M: int = 16, efc: int = 100, seed: int = 0,
-                 auth_bits: Optional[np.ndarray] = None):
+                 auth_bits: Optional[np.ndarray] = None,
+                 attr_bits: Optional[np.ndarray] = None):
         assert data.ndim == 2
         data = np.ascontiguousarray(data, dtype=np.float32)
         ids = (np.arange(len(data), dtype=np.int64) if ids is None
@@ -82,6 +83,15 @@ class HNSWIndex:
             self._auth_buf = np.empty((cap,) + auth_bits.shape[1:],
                                       np.uint32)
             self._auth_buf[:self._n] = auth_bits
+        self._attr_buf: Optional[np.ndarray] = None
+        if attr_bits is not None:
+            attr_bits = np.ascontiguousarray(attr_bits, dtype=np.uint32)
+            if attr_bits.ndim == 1:
+                attr_bits = attr_bits[:, None]
+            assert len(attr_bits) == self._n, \
+                (attr_bits.shape, data.shape)
+            self._attr_buf = np.empty((cap, attr_bits.shape[1]), np.uint32)
+            self._attr_buf[:self._n] = attr_bits
         self.M = int(M)
         self.M0 = 2 * int(M)
         self.efc = int(efc)
@@ -127,12 +137,21 @@ class HNSWIndex:
                 "(check .has_auth / isinstance(x, MaskedEngine))")
         return self._auth_buf[:self._n]
 
+    @property
+    def attr_bits(self) -> Optional[np.ndarray]:
+        """Per-vector (n, P) predicate words, or ``None`` when the index has
+        no attribute plane (same convention as ScoreScanIndex)."""
+        if self._attr_buf is None:
+            return None
+        return self._attr_buf[:self._n]
+
     def _grow(self, need: int) -> None:
         cap = len(self._ids_buf)
         if need <= cap:
             return
         new_cap = max(int(need), 2 * cap)
-        for name in ("_data_buf", "_ids_buf", "_levels_buf", "_auth_buf"):
+        for name in ("_data_buf", "_ids_buf", "_levels_buf", "_auth_buf",
+                     "_attr_buf"):
             buf = getattr(self, name)
             if buf is None:
                 continue
@@ -282,7 +301,7 @@ class HNSWIndex:
 
     # ------------------------------------------------- MutableEngine (App. I)
     def insert(self, vid: int, vec: np.ndarray,
-               auth_bits=None) -> None:
+               auth_bits=None, attr_bits=None) -> None:
         """Incremental insert of one vector with external id ``vid``.
 
         Re-inserting an id that is already linked (a tombstoned vector being
@@ -290,6 +309,8 @@ class HNSWIndex:
         original row.  For auth-carrying indexes ``auth_bits`` supplies the
         new row's mask words (scalar / ``(W,)``); callers that track
         authorization (DynamicStore) pass the row's role-combination mask.
+        ``attr_bits`` likewise supplies the row's (P,) predicate words on an
+        attribute-carrying index.
         """
         vid = int(vid)
         if np.any(self.ids == vid):
@@ -300,6 +321,9 @@ class HNSWIndex:
             if auth_bits is not None and self.has_auth:
                 self.auth_bits[self.ids == np.int64(vid)] = \
                     np.asarray(auth_bits, np.uint32)
+            if attr_bits is not None and self._attr_buf is not None:
+                self.attr_bits[self.ids == np.int64(vid)] = \
+                    np.asarray(attr_bits, np.uint32)
             return
         row = None
         if self.has_auth:
@@ -307,6 +331,11 @@ class HNSWIndex:
             row = (np.zeros(width, np.uint32) if auth_bits is None
                    else np.asarray(auth_bits, np.uint32))
             assert row.shape == width, (row.shape, self._auth_buf.shape)
+        arow = None
+        if self._attr_buf is not None:
+            p = self._attr_buf.shape[1]
+            arow = (np.zeros(p, np.uint32) if attr_bits is None
+                    else np.asarray(attr_bits, np.uint32).reshape(p))
         n = self._n
         self._grow(n + 1)
         self._data_buf[n] = np.asarray(vec, np.float32)
@@ -314,6 +343,8 @@ class HNSWIndex:
         self._levels_buf[n] = 0
         if row is not None:
             self._auth_buf[n] = row
+        if arow is not None:
+            self._attr_buf[n] = arow
         self._n = n + 1
         self.tombstoned.discard(vid)
         self._insert(n)
@@ -329,8 +360,10 @@ class HNSWIndex:
         keep = np.fromiter((int(v) not in drop for v in self.ids),
                            bool, len(self.ids))
         bits = self.auth_bits[keep] if self.has_auth else None
+        attrs = None if self._attr_buf is None else self.attr_bits[keep]
         out = HNSWIndex(self.data[keep], ids=self.ids[keep], M=self.M,
-                        efc=self.efc, seed=self._seed, auth_bits=bits)
+                        efc=self.efc, seed=self._seed, auth_bits=bits,
+                        attr_bits=attrs)
         survivors = set(int(i) for i in out.ids)
         out.tombstoned = {v for v in self.tombstoned
                           if v not in drop and v in survivors}
@@ -347,19 +380,40 @@ class HNSWIndex:
             (m.shape, self.auth_bits.shape)
         return ((rows & m[None, :]) != 0).any(axis=1)
 
+    def _pred_hits(self, internal: Sequence[int], require, forbid
+                   ) -> np.ndarray:
+        """Predicate word test for internal row indices: every required bit
+        set, no forbidden bit set, in every word."""
+        if self._attr_buf is None:
+            raise ValueError(
+                "predicate filter on an index with no attr_bits plane")
+        rows = self.attr_bits[np.asarray(internal, np.int64)]
+        p = rows.shape[1]
+        req = (np.zeros(p, np.uint32) if require is None
+               else np.asarray(require, np.uint32).reshape(p))
+        forb = (np.zeros(p, np.uint32) if forbid is None
+                else np.asarray(forbid, np.uint32).reshape(p))
+        return (((rows & req[None, :]) == req[None, :])
+                & ((rows & forb[None, :]) == 0)).all(axis=1)
+
     def search_masked(self, q: np.ndarray, k: int, role_mask,
-                      bound: Optional[float] = None, efs: Optional[int] = None
+                      bound: Optional[float] = None, efs: Optional[int] = None,
+                      require=None, forbid=None
                       ) -> List[Tuple[float, int]]:
         """Authorized top-k: beam search, then filter by the query's role
-        mask words (and the optional coordinated-search ``bound``).  The
-        beam is approximate like any HNSW search; authorization is exact —
-        an unauthorized vector can never be returned."""
+        mask words, the optional predicate require/forbid word rows, and the
+        optional coordinated-search ``bound``.  The beam is approximate like
+        any HNSW search; authorization and predicates are exact —
+        an unauthorized or non-matching vector can never be returned."""
         assert self.has_auth, \
             "HNSWIndex built without auth_bits cannot search_masked"
         res, _ = self.begin_search(q, max(int(efs or 0), 4 * k, 64))
         if not res:
             return []
         keep = self._mask_hits([i for _, i in res], role_mask)
+        if require is not None or forbid is not None:
+            keep = keep & self._pred_hits([i for _, i in res],
+                                          require, forbid)
         out = []
         for ok, (d, i) in zip(keep, res):
             vid = int(self.ids[i])

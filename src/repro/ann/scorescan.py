@@ -37,11 +37,17 @@ class ScoreScanIndex:
     ids: np.ndarray                  # (n,) int64 external ids
     auth_bits: np.ndarray            # (n,) or (n, W) uint32 role mask words
     config: L2TopKConfig = dataclasses.field(default_factory=L2TopKConfig)
+    attr_bits: Optional[np.ndarray] = None   # (n, P) uint32 predicate words
 
     def __post_init__(self):
         self.data = np.ascontiguousarray(self.data, dtype=np.float32)
         self.auth_bits = np.ascontiguousarray(self.auth_bits,
                                               dtype=np.uint32)
+        if self.attr_bits is not None:
+            self.attr_bits = np.ascontiguousarray(self.attr_bits,
+                                                  dtype=np.uint32)
+            if self.attr_bits.ndim == 1:
+                self.attr_bits = self.attr_bits[:, None]
         self.centroid = self.data.mean(axis=0) if len(self.data) else None
         if self.centroid is not None:
             d = self.data - self.centroid
@@ -86,13 +92,29 @@ class ScoreScanIndex:
         return np.maximum(0.0, dc - self.radius) ** 2
 
     # ---------------------------------------------------------------- search
+    def _pred_kwargs(self, require, forbid):
+        """Kernel predicate operands for a require/forbid pair; empty when no
+        predicate is active (the exact P=0 kernel path)."""
+        if require is None and forbid is None:
+            return {}
+        if self.attr_bits is None:
+            raise ValueError(
+                "predicate filter on an index with no attr_bits plane")
+        return dict(attr_bits=self.attr_bits,
+                    require=None if require is None
+                    else np.asarray(require, np.uint32),
+                    forbid=None if forbid is None
+                    else np.asarray(forbid, np.uint32))
+
     def search_masked(self, q: np.ndarray, k: int, role_mask,
-                      bound: Optional[float] = None
+                      bound: Optional[float] = None,
+                      require=None, forbid=None
                       ) -> List[Tuple[float, int]]:
         """Exact authorized top-k via the Pallas kernel; ids are external.
 
         ``role_mask`` is a uint32 scalar (single-word indexes) or a ``(W,)``
-        word array matching :attr:`mask_width`.
+        word array matching :attr:`mask_width`.  ``require``/``forbid`` are
+        optional ``(P,)`` predicate word rows evaluated in the same launch.
         """
         if not len(self.data):
             return []
@@ -100,7 +122,8 @@ class ScoreScanIndex:
         qc = (q - self.centroid).astype(np.float32)
         d, i = l2_topk(qc[None, :], self._centered, self.auth_bits,
                        np.asarray(role_mask, np.uint32), k, bound=bound,
-                       config=self.config)
+                       config=self.config,
+                       **self._pred_kwargs(require, forbid))
         d = np.asarray(d)[0]
         i = np.asarray(i)[0]
         keep = i >= 0
@@ -109,7 +132,8 @@ class ScoreScanIndex:
 
     def search_masked_batch(self, qs: np.ndarray, k: int,
                             role_masks: np.ndarray,
-                            bounds: Optional[np.ndarray] = None
+                            bounds: Optional[np.ndarray] = None,
+                            require=None, forbid=None
                             ) -> Tuple[np.ndarray, np.ndarray]:
         """Batched :meth:`search_masked`: one kernel launch for B queries.
 
@@ -118,11 +142,13 @@ class ScoreScanIndex:
           role_masks: (B,) uint32 per-query role bitmask, or (B, W) packed
             word rows for multi-word indexes (:attr:`mask_width`).
           bounds: optional (B,) float32 per-query coordinated-search bound.
+          require: optional (B, P) per-query required-predicate word rows.
+          forbid: optional (B, P) per-query forbidden-predicate word rows.
 
         Returns:
           (dists (B, k) float32, external ids (B, k) int64); empty slots are
-          +inf / -1.  No Python per-query loop — the per-query bound and role
-          vectors are threaded straight into the kernel wrapper.
+          +inf / -1.  No Python per-query loop — the per-query bound, role,
+          and predicate rows are threaded straight into the kernel wrapper.
         """
         b = len(qs)
         if not len(self.data):
@@ -134,7 +160,8 @@ class ScoreScanIndex:
                        np.asarray(role_masks, np.uint32), k,
                        bound=None if bounds is None
                        else np.asarray(bounds, np.float32),
-                       config=self.config)
+                       config=self.config,
+                       **self._pred_kwargs(require, forbid))
         # np.array (not asarray): jax buffers are read-only and callers
         # post-filter these in place
         d = np.array(d)
@@ -151,7 +178,9 @@ class ScoreScanIndex:
                            bool, len(self.ids))
         return ScoreScanIndex(self.data[keep], ids=self.ids[keep],
                               auth_bits=self.auth_bits[keep],
-                              config=self.config)
+                              config=self.config,
+                              attr_bits=None if self.attr_bits is None
+                              else self.attr_bits[keep])
 
     # engine-interface parity (used when plugged into the generic store)
     def search(self, q: np.ndarray, k: int, efs: int = 0):
@@ -179,7 +208,8 @@ def policy_auth_words(policy) -> np.ndarray:
 
 
 def pack_leftover_shard(leftover_vectors, leftover_ids, policy,
-                        config: Optional[L2TopKConfig] = None
+                        config: Optional[L2TopKConfig] = None,
+                        attr_words: Optional[np.ndarray] = None
                         ) -> Optional[ScoreScanIndex]:
     """Concatenate every leftover block into one auth-masked ScoreScan shard.
 
@@ -203,18 +233,24 @@ def pack_leftover_shard(leftover_vectors, leftover_ids, policy,
     ids = np.concatenate([leftover_ids[b] for b in blocks])
     bits = policy_auth_words(policy)
     return ScoreScanIndex(data=data, ids=ids, auth_bits=bits[ids],
-                          config=config or L2TopKConfig())
+                          config=config or L2TopKConfig(),
+                          attr_bits=None if attr_words is None
+                          else np.asarray(attr_words, np.uint32)[ids])
 
 
-def scorescan_factory(policy, config: Optional[L2TopKConfig] = None):
+def scorescan_factory(policy, config: Optional[L2TopKConfig] = None,
+                      attr_words: Optional[np.ndarray] = None):
     """Engine factory wiring the per-vector auth mask words from the
-    policy (single-word up to 32 roles, multi-word beyond)."""
+    policy (single-word up to 32 roles, multi-word beyond) and, when the
+    store carries a predicate plane, the (N, P) attribute words."""
     bits = policy_auth_words(policy)
+    attrs = None if attr_words is None else np.asarray(attr_words, np.uint32)
     cfg = config or L2TopKConfig()
 
     def make(data: np.ndarray, ids: np.ndarray) -> ScoreScanIndex:
         return ScoreScanIndex(data=data, ids=ids,
-                              auth_bits=bits[ids], config=cfg)
+                              auth_bits=bits[ids], config=cfg,
+                              attr_bits=None if attrs is None else attrs[ids])
     return make
 
 

@@ -152,6 +152,13 @@ class Query:
     optional) both tightens the flush cut and feeds admission's
     infeasibility check.  ``tag`` is free-form caller metadata.
 
+    ``where`` is an optional conjunction of predicate atoms over the store's
+    :class:`~repro.core.predicate.PredicateSchema` — ``("has", field, tag)``,
+    ``("lacks", field, tag)``, ``("ge", field, edge)``, ``("lt", field,
+    edge)`` — compiled to (require, forbid) packed word rows and evaluated
+    in-kernel beside the auth check (DESIGN.md §Hybrid Filtered Search).
+    ``None`` / empty means unfiltered (the exact pre-predicate path).
+
     ``priority`` is the retired PR-2 field: passing an int still works but
     emits a ``DeprecationWarning`` and maps onto ``slo`` via
     :meth:`SLOClass.from_priority`.
@@ -161,6 +168,7 @@ class Query:
     roles: Tuple[Role, ...]
     k: int = 10
     efs: int = 50
+    where: Optional[Tuple[Tuple, ...]] = None
     slo: SLOClass = SLOClass.STANDARD
     deadline_ms: Optional[float] = None
     tag: Optional[str] = None
@@ -178,6 +186,11 @@ class Query:
         assert roles, "a query must carry at least one role"
         assert self.k >= 1, self.k
         object.__setattr__(self, "roles", roles)
+        # where: canonical (dedup + sort) atom tuple; empty collapses to
+        # None so predicate-keyed caches share the unfiltered entry
+        if self.where is not None:
+            atoms = tuple(sorted(set(tuple(a) for a in self.where)))
+            object.__setattr__(self, "where", atoms or None)
         if self.priority is not None:
             warnings.warn(
                 "Query.priority is deprecated; pass slo=SLOClass.INTERACTIVE"

@@ -112,7 +112,8 @@ class BatchTopK:
 
 def _scan_leftovers_batched(store: VectorStore, queries: np.ndarray,
                             plans: Sequence[Plan], topk: BatchTopK,
-                            stats_rows: Sequence[SearchStats]) -> None:
+                            stats_rows: Sequence[SearchStats],
+                            pred_masks: Optional[Sequence] = None) -> None:
     """One pass per leftover block shared by every batch row touching it."""
     block_rows: Dict[int, List[int]] = defaultdict(list)
     for qi, plan in enumerate(plans):
@@ -128,6 +129,12 @@ def _scan_leftovers_batched(store: VectorStore, queries: np.ndarray,
         # same diff-based form as the sequential scan (exact fp parity)
         diff = vecs[None, :, :] - queries[rows][:, None, :]
         d = np.einsum("mnd,mnd->mn", diff, diff)
+        if pred_masks is not None:
+            # a filtered row drops leftover vectors failing its predicate
+            for j, qi in enumerate(rows):
+                pm = pred_masks[qi]
+                if pm is not None:
+                    d[j] = np.where(pm[ids], d[j], np.inf)
         for qi in rows:
             st = stats_rows[qi]
             st.leftover_vectors_scanned += len(vecs)
@@ -137,8 +144,12 @@ def _scan_leftovers_batched(store: VectorStore, queries: np.ndarray,
         m = min(topk.k, d.shape[1])
         part = np.argpartition(d, m - 1, axis=1)[:, :m] if m < d.shape[1] \
             else np.broadcast_to(np.arange(d.shape[1]), d.shape).copy()
-        topk.push_rows(rows, np.take_along_axis(d, part, 1),
-                       ids[part].astype(np.int64))
+        sel_d = np.take_along_axis(d, part, 1)
+        sel_i = ids[part].astype(np.int64)
+        # predicate-pruned slots carry +inf — drop their ids so they never
+        # surface through the merge
+        sel_i = np.where(np.isinf(sel_d), np.int64(-1), sel_i)
+        topk.push_rows(rows, sel_d, sel_i)
 
 
 def _filter_unauthorized(d: np.ndarray, ids: np.ndarray, rows: np.ndarray,
@@ -179,7 +190,9 @@ def _scan_leftovers_packed(store: VectorStore, queries: np.ndarray,
                            row_masks: Sequence[np.ndarray],
                            role_bits: np.ndarray, topk: BatchTopK,
                            stats_rows: Sequence[SearchStats],
-                           shard) -> None:
+                           shard,
+                           pred_rows: Optional[Tuple[np.ndarray, np.ndarray]]
+                           = None) -> None:
     """Single ``l2_topk`` launch over the packed leftover shard for every
     row whose plan has leftover blocks (DESIGN.md §Continuous Batching).
 
@@ -196,7 +209,10 @@ def _scan_leftovers_packed(store: VectorStore, queries: np.ndarray,
     rows = _packed_leftover_rows(store, plans, stats_rows)
     if not len(rows):
         return
-    d, ids = shard.search_masked_batch(queries[rows], topk.k, role_bits[rows])
+    pkw = {} if pred_rows is None else dict(require=pred_rows[0][rows],
+                                            forbid=pred_rows[1][rows])
+    d, ids = shard.search_masked_batch(queries[rows], topk.k,
+                                       role_bits[rows], **pkw)
     # defense in depth: the shard's word masks are exact at any n_roles
     # (multi-word past 32 roles), but the bool mask stays the ground truth
     _filter_unauthorized(d, ids, rows, row_masks)
@@ -206,9 +222,12 @@ def _scan_leftovers_packed(store: VectorStore, queries: np.ndarray,
 def _prepare_batch(store: VectorStore, queries: Sequence[Query]):
     """Shared batch setup for the batched and sharded engines: stacked query
     rows, per-row k (heterogeneous-k native), per-row plan covers, exact
-    authorized-union masks, in-kernel role-bit rows, and fresh per-row
-    stats.  Returns ``(qs, ks, kmax, role_sets, plans, row_masks, role_bits,
-    stats_rows)``."""
+    authorized-union masks, in-kernel role-bit rows, fresh per-row stats,
+    per-row (require, forbid) predicate word rows (``None`` when no query is
+    filtered — the exact P=0 kernel path), and per-row host-side predicate
+    pass masks for the engine-independent post-filters.  Returns ``(qs, ks,
+    kmax, role_sets, plans, row_masks, role_bits, stats_rows, pred_rows,
+    pred_masks)``."""
     b = len(queries)
     qs = np.ascontiguousarray(
         np.stack([q.vector for q in queries]), dtype=np.float32)
@@ -227,7 +246,21 @@ def _prepare_batch(store: VectorStore, queries: Sequence[Query]):
     # works identically for both layouts
     role_bits = store.role_mask_rows(role_sets)
     stats_rows = [SearchStats() for _ in range(b)]
-    return qs, ks, kmax, role_sets, plans, row_masks, role_bits, stats_rows
+    pred_rows = store.predicate_rows(queries)
+    pred_masks: Optional[List[Optional[np.ndarray]]] = None
+    if pred_rows is not None:
+        pmask_cache: Dict = {}
+        pred_masks = []
+        for q in queries:
+            if not q.where:
+                pred_masks.append(None)
+                continue
+            if q.where not in pmask_cache:
+                rf = store.compile_where(q.where)
+                pmask_cache[q.where] = store.predicate_mask(rf[0], rf[1])
+            pred_masks.append(pmask_cache[q.where])
+    return (qs, ks, kmax, role_sets, plans, row_masks, role_bits, stats_rows,
+            pred_rows, pred_masks)
 
 
 def _classify_waves(store: VectorStore, plans: Sequence[Plan],
@@ -278,7 +311,7 @@ def execute_queries(store: VectorStore, queries: Sequence[Query], *,
     """
     b = len(queries)
     (qs, ks, kmax, role_sets, plans, row_masks, role_bits,
-     stats_rows) = _prepare_batch(store, queries)
+     stats_rows, pred_rows, pred_masks) = _prepare_batch(store, queries)
 
     topk = BatchTopK(b, kmax, ks=ks)
     if packed is True:
@@ -290,9 +323,10 @@ def execute_queries(store: VectorStore, queries: Sequence[Query], *,
     path = "batched+packed" if shard is not None else "batched"
     if shard is not None:
         _scan_leftovers_packed(store, qs, plans, row_masks, role_bits,
-                               topk, stats_rows, shard)
+                               topk, stats_rows, shard, pred_rows=pred_rows)
     else:
-        _scan_leftovers_batched(store, qs, plans, topk, stats_rows)
+        _scan_leftovers_batched(store, qs, plans, topk, stats_rows,
+                                pred_masks=pred_masks)
 
     # invert plans: node -> rows, split per (row, node) purity against the
     # row's (multi-role) authorized mask
@@ -329,9 +363,11 @@ def execute_queries(store: VectorStore, queries: Sequence[Query], *,
             if not active.any():
                 continue
             act = rows[active]
+            pkw = {} if pred_rows is None else dict(
+                require=pred_rows[0][act], forbid=pred_rows[1][act])
             d, ids = eng.search_masked_batch(qs[act], kmax,
                                              role_bits[act],
-                                             bounds=kth[active])
+                                             bounds=kth[active], **pkw)
             if impure:
                 _filter_unauthorized(d, ids, act, row_masks)
             topk.push_rows(act, d, ids)

@@ -85,6 +85,10 @@ class _Entry:
     hits: Tuple[Tuple[float, int], ...]
     words: np.ndarray             # (W,) uint32 role-mask words of the query
     ids: frozenset                # hit vector ids, for invalidate_id()
+    pwords: bytes = b""           # packed predicate require/forbid words
+                                  # (b"" = unfiltered); part of the entry's
+                                  # identity so a filtered query can never
+                                  # alias an unfiltered answer
 
 
 class AnswerCache:
@@ -112,16 +116,29 @@ class AnswerCache:
             v = np.floor(v / self.cluster_eps).astype(np.int32)
         return v.tobytes()
 
+    @staticmethod
+    def _pred_key(pwords) -> bytes:
+        """Byte-exact predicate-word component of the key: the query's
+        compiled require/forbid words (any layout — flattened), or ``b""``
+        for an unfiltered query.  Distinct predicates — and filtered vs
+        unfiltered — therefore never share an entry."""
+        if pwords is None:
+            return b""
+        return np.ascontiguousarray(
+            np.asarray(pwords, dtype=np.uint32)).tobytes()
+
     def key_for(self, vector: np.ndarray, words: np.ndarray, k: int,
-                efs: int) -> tuple:
+                efs: int, pwords=None) -> tuple:
         w = np.ascontiguousarray(np.asarray(words, dtype=np.uint32))
-        return (self._vec_key(vector), w.tobytes(), int(k), int(efs))
+        return (self._vec_key(vector), w.tobytes(), int(k), int(efs),
+                self._pred_key(pwords))
 
     # ---------------------------------------------------------------- lookup
     def lookup(self, vector: np.ndarray, words: np.ndarray, k: int,
-               efs: int = 0) -> Optional[List[Tuple[float, int]]]:
+               efs: int = 0, pwords=None
+               ) -> Optional[List[Tuple[float, int]]]:
         """Return a fresh copy of the cached hit list, or None on miss."""
-        key = self.key_for(vector, words, k, efs)
+        key = self.key_for(vector, words, k, efs, pwords=pwords)
         ent = self._entries.get(key)
         if ent is None:
             self.stats.misses += 1
@@ -131,12 +148,14 @@ class AnswerCache:
         return [tuple(h) for h in ent.hits]
 
     def store(self, vector: np.ndarray, words: np.ndarray, k: int,
-              hits: Sequence[Tuple[float, int]], efs: int = 0) -> None:
+              hits: Sequence[Tuple[float, int]], efs: int = 0,
+              pwords=None) -> None:
         """Insert/refresh one answer (evicts LRU past ``capacity``)."""
-        key = self.key_for(vector, words, k, efs)
+        key = self.key_for(vector, words, k, efs, pwords=pwords)
         w = np.array(words, dtype=np.uint32, copy=True)
         ent = _Entry(hits=tuple((float(d), int(v)) for d, v in hits),
-                     words=w, ids=frozenset(int(v) for _, v in hits))
+                     words=w, ids=frozenset(int(v) for _, v in hits),
+                     pwords=self._pred_key(pwords))
         self._entries[key] = ent
         self._entries.move_to_end(key)
         self.stats.stores += 1
@@ -147,7 +166,10 @@ class AnswerCache:
     # ---------------------------------------------------------- invalidation
     def invalidate_words(self, words: np.ndarray) -> int:
         """Drop entries whose role-mask words intersect ``words``
-        (any-word AND ≠ 0).  Returns the number dropped."""
+        (any-word AND ≠ 0).  Returns the number dropped.  Filtered entries
+        carry the same role-mask words as their unfiltered siblings, so a
+        mutation under an intersecting role combination drops both — a
+        predicate never shelters a stale answer from invalidation."""
         w = np.asarray(words, dtype=np.uint32)
         doomed = [key for key, ent in self._entries.items()
                   if bool(np.any(ent.words & w))]

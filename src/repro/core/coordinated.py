@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .api import SearchStats
+from .costmodel import CostModel
 from .policy import Role
 from .queryplan import Plan
 from .store import VectorStore
@@ -61,7 +62,8 @@ class _TopK:
 
 
 def _scan_leftovers(store: VectorStore, plan: Plan, x: np.ndarray,
-                    rs: _TopK, stats: SearchStats) -> None:
+                    rs: _TopK, stats: SearchStats,
+                    pred_mask: Optional[np.ndarray] = None) -> None:
     for b in plan.leftover_blocks:
         vecs = store.leftover_vectors.get(b)
         if vecs is None or not len(vecs):
@@ -69,13 +71,16 @@ def _scan_leftovers(store: VectorStore, plan: Plan, x: np.ndarray,
         ids = store.leftover_ids[b]
         diff = vecs - x
         d = np.einsum("nd,nd->n", diff, diff)
+        if pred_mask is not None:
+            d = np.where(pred_mask[ids], d, np.inf)
         stats.leftover_vectors_scanned += len(vecs)
         stats.data_touched += len(vecs)
         stats.data_authorized_touched += len(vecs)
         m = min(rs.k, len(d))
         part = np.argpartition(d, m - 1)[:m] if m < len(d) else np.arange(len(d))
         for i in part:
-            rs.push(float(d[i]), int(ids[i]))
+            if np.isfinite(d[i]):
+                rs.push(float(d[i]), int(ids[i]))
 
 
 def _split_plan(store: VectorStore, plan: Plan, mask: np.ndarray):
@@ -90,8 +95,15 @@ def _split_plan(store: VectorStore, plan: Plan, mask: np.ndarray):
 def coordinated_search(store: VectorStore, x: np.ndarray, role: Role, k: int,
                        efs: int, stats: Optional[SearchStats] = None,
                        roles: Optional[Sequence[Role]] = None,
-                       ) -> List[Tuple[float, int]]:
-    """Algorithm 7. ``roles`` switches to multi-role union semantics."""
+                       where=None) -> List[Tuple[float, int]]:
+    """Algorithm 7. ``roles`` switches to multi-role union semantics.
+
+    ``where`` (a tuple of predicate atoms, see :class:`..api.Query`) narrows
+    results to rows whose attribute words satisfy the conjunction; nodes are
+    then routed per the selectivity-aware cost model — an exact filtered scan
+    when beam traversal inflated by 1/selectivity would cost more, a
+    post-filtered over-fetching beam otherwise.
+    """
     stats = stats if stats is not None else SearchStats()
     x = np.asarray(x, dtype=np.float32)
     if roles is None:
@@ -101,6 +113,9 @@ def coordinated_search(store: VectorStore, x: np.ndarray, role: Role, k: int,
     else:
         mask = store.authorized_mask_multi(roles)
         plan = _union_plan(store, roles)
+    if where:
+        return _filtered_plan_search(store, plan, mask, x, k, efs, where,
+                                     stats)
     rs = _TopK(k)
     _scan_leftovers(store, plan, x, rs, stats)
     pure, impure = _split_plan(store, plan, mask)
@@ -141,6 +156,72 @@ def coordinated_search(store: VectorStore, x: np.ndarray, role: Role, k: int,
                 if mask[vid]:
                     rs.push(float(d), vid)
     return rs.items()
+
+
+def _filtered_plan_search(store: VectorStore, plan: Plan, mask: np.ndarray,
+                          x: np.ndarray, k: int, efs: int, where,
+                          stats: SearchStats) -> List[Tuple[float, int]]:
+    """Plan execution under a predicate conjunction (hybrid filtered search).
+
+    Each plan node is routed independently: when the selectivity-aware cost
+    model says a 1/sel-inflated beam costs at least as much as scanning the
+    node (or routing is enabled and the node sits under ``lam_threshold``),
+    the node is scanned exactly over its pinned rows; otherwise the node's
+    beam over-fetches ceil(k/sel) candidates and survivors are post-filtered.
+    Leftover blocks are always scanned exactly (they are scans already).
+    """
+    require, forbid = store.compile_where(where)
+    pred_mask = store.predicate_mask(require, forbid)
+    sel = store.where_selectivity(where)
+    cm = store.cost_model if store.cost_model is not None else CostModel()
+    rs = _TopK(k)
+    _scan_leftovers(store, plan, x, rs, stats, pred_mask=pred_mask)
+    pure, impure = _split_plan(store, plan, mask)
+    stats.indices_visited += len(pure) + len(impure)
+    node_iter = [(key, None) for key in pure] + [(key, mask) for key in impure]
+    for key, node_mask in node_iter:
+        eng = store.engines[key]
+        if node_mask is None:
+            total = auth = len(eng)
+        else:
+            total, auth = store.node_total_and_auth(key, mask)
+            stats.impure_visits += 1
+        stats.data_touched += total
+        stats.data_authorized_touched += auth
+        beam_cost = cm.role_query_cost(total, auth, k, selectivity=sel)
+        if store.route_by_selectivity and beam_cost >= cm.scan_cost(total):
+            _exact_filtered_node(eng, x, node_mask, pred_mask, rs)
+            continue
+        lam = math.ceil(total / max(auth, 1))
+        kk = min(total, int(math.ceil(k / max(sel, 1e-9))))
+        effs = min(int(math.ceil(lam * max(efs, k) / max(sel, 1e-9))), total)
+        stats.efs_worst_case += effs
+        stats.efs_used += effs
+        for d, vid in eng.search(x, max(kk, k), max(effs, efs)):
+            vid = int(vid)
+            if pred_mask[vid] and (node_mask is None or node_mask[vid]):
+                rs.push(float(d), vid)
+    return rs.items()
+
+
+def _exact_filtered_node(eng, x: np.ndarray, node_mask: Optional[np.ndarray],
+                         pred_mask: np.ndarray, rs: _TopK) -> None:
+    """Exact (authorized AND predicate) scan over one node's pinned rows."""
+    ids = np.asarray(eng.ids, dtype=np.int64)
+    if not len(ids):
+        return
+    data = np.asarray(eng.data, dtype=np.float32)
+    diff = data - x
+    d = np.einsum("nd,nd->n", diff, diff)
+    ok = pred_mask[ids]
+    if node_mask is not None:
+        ok = ok & node_mask[ids]
+    d = np.where(ok, d, np.inf)
+    m = min(rs.k, len(d))
+    part = np.argpartition(d, m - 1)[:m] if m < len(d) else np.arange(len(d))
+    for i in part:
+        if np.isfinite(d[i]):
+            rs.push(float(d[i]), int(ids[i]))
 
 
 def independent_search(store: VectorStore, x: np.ndarray, role: Role, k: int,

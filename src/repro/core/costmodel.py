@@ -48,21 +48,31 @@ class HNSWCostModel:
         return self.scan_per_vec * float(n) + self.scan_c
 
     # ------------------------------------------------------- Def 2.2 (Cost_H)
-    def role_query_cost(self, n: int, n_auth: int, k: int) -> float:
+    def role_query_cost(self, n: int, n_auth: int, k: int,
+                        selectivity: float = 1.0) -> float:
         """Cost of a top-k query by a role authorized for ``n_auth`` of ``n``.
 
         Applies Def. 2.2 for indexable nodes and the linear-scan model below
         the indexability threshold Lambda.  ``n_auth == 0`` → the node would
         never be in this role's plan; return 0.
+
+        ``selectivity`` (fraction of rows passing an attached predicate,
+        1.0 = unfiltered) thins the qualifying population: the beam must be
+        inflated by ceil(n / (n_auth * selectivity)) to surface k survivors,
+        which is how low-selectivity predicates push indexable nodes back
+        below the scan crossover.  Scan cost is selectivity-independent
+        (every row is touched either way).
         """
         if n_auth <= 0:
             return 0.0
         if n < self.lam_threshold:
             return self.scan_cost(n)
         efs = self.alpha * k
-        if n_auth >= n:                       # pure
+        sel = min(max(float(selectivity), 1e-9), 1.0)
+        eff_auth = n_auth * sel               # rows passing auth AND predicate
+        if eff_auth >= n:                     # pure, unfiltered
             return self.hnsw_cost(n, efs)
-        lam = math.ceil(n / n_auth)           # Eq. (1)
+        lam = math.ceil(n / max(eff_auth, 1e-9))   # Eq. (1), predicate-aware
         inflated = lam * efs
         if inflated <= n:                     # impure, inflate the beam
             return self.hnsw_cost(n, math.ceil(inflated))
@@ -101,7 +111,8 @@ class ScanCostModel:
     fixed_us: float = 3.0                    # kernel launch / plan overhead
     lam_threshold: int = 0                   # scan path has no HNSW crossover
 
-    def role_query_cost(self, n: int, n_auth: int, k: int) -> float:
+    def role_query_cost(self, n: int, n_auth: int, k: int,
+                        selectivity: float = 1.0) -> float:
         if n_auth <= 0:
             return 0.0
         flop_t = n * self.dim * 2 / self.peak_flops

@@ -76,6 +76,13 @@ class DynamicStore:
         self._data_len = len(self._data_buf)
         self.data_reallocs = 0
         store.data = self._data_buf[:self._data_len]
+        # predicate-word plane growth buffer (same scheme, kept row-aligned
+        # with ``store.data``); ``None`` when the store has no plane
+        self._attr_buf: Optional[np.ndarray] = None
+        if store.attr_words is not None:
+            self._attr_buf = np.ascontiguousarray(store.attr_words,
+                                                  np.uint32)
+            store.attr_words = self._attr_buf[:self._data_len]
         # per-block leftover growth buffers (same scheme); the store's
         # leftover_ids/leftover_vectors entries stay prefix views into these
         self._left_ids_buf: Dict[int, np.ndarray] = {}
@@ -141,18 +148,51 @@ class DynamicStore:
         in_leftover = b in self.store.leftover_ids
         return nodes, in_leftover
 
-    def _append_data(self, vec: np.ndarray) -> None:
+    def _append_data(self, vec: np.ndarray,
+                     attr_row: Optional[np.ndarray] = None) -> None:
         """Append one row to the corpus via the growth buffer (amortized
-        O(d)); ``store.data`` is re-exposed as a prefix view."""
+        O(d)); ``store.data`` is re-exposed as a prefix view.  When the
+        store carries a predicate plane, the aligned attribute row rides
+        along (``None`` → all-zero words, which fail every nonzero
+        require)."""
         if self._data_len == len(self._data_buf):
             cap = max(8, 2 * len(self._data_buf))
             new = np.empty((cap, self._data_buf.shape[1]), np.float32)
             new[:self._data_len] = self._data_buf
             self._data_buf = new
             self.data_reallocs += 1
+            if self._attr_buf is not None:
+                anew = np.zeros((cap, self._attr_buf.shape[1]), np.uint32)
+                anew[:self._data_len] = self._attr_buf[:self._data_len]
+                self._attr_buf = anew
         self._data_buf[self._data_len] = vec
+        if self._attr_buf is not None:
+            self._attr_buf[self._data_len] = (
+                0 if attr_row is None else np.asarray(attr_row, np.uint32))
         self._data_len += 1
         self.store.data = self._data_buf[:self._data_len]
+        if self._attr_buf is not None:
+            self.store.attr_words = self._attr_buf[:self._data_len]
+
+    def _attr_row_of(self, vid: int) -> Optional[np.ndarray]:
+        """The (P,) attribute-word row of ``vid``, ``None`` without a
+        plane."""
+        if self.store.attr_words is None:
+            return None
+        return self.store.attr_words[int(vid)]
+
+    def _encode_attrs(self, attrs) -> Optional[np.ndarray]:
+        """Normalize an insert's ``attrs`` (None | dict via the store's
+        schema | pre-encoded (P,) words) to a word row."""
+        if attrs is None:
+            return None
+        if isinstance(attrs, dict):
+            if self.store.pred_schema is None:
+                raise ValueError(
+                    "insert with attribute dict but the store has no "
+                    "pred_schema")
+            return self.store.pred_schema.encode(attrs)
+        return np.asarray(attrs, np.uint32)
 
     def _adopt_leftover_buffers(self, b: int, d: int) -> None:
         """Move block ``b``'s leftover arrays into growth buffers (lazy —
@@ -239,9 +279,16 @@ class DynamicStore:
             auth = (np.append(eng.auth_bits, row)
                     if eng.auth_bits.ndim == 1
                     else np.vstack([eng.auth_bits, row[None]]))
+            kw = {}
+            if eng.attr_bits is not None:
+                arow = self._attr_row_of(vid)
+                if arow is None:
+                    arow = np.zeros(eng.attr_bits.shape[1], np.uint32)
+                kw["attr_bits"] = np.vstack(
+                    [eng.attr_bits, np.asarray(arow, np.uint32)[None]])
             return type(eng)(data, ids=ids,
                              auth_bits=auth.astype(np.uint32),
-                             config=eng.config)
+                             config=eng.config, **kw)
         return type(eng)(data, ids=ids)
 
     def _engine_without(self, eng, vid: int):
@@ -251,9 +298,11 @@ class DynamicStore:
         which skip the exact-mask post-filter)."""
         keep = eng.ids != np.int64(vid)
         if isinstance(eng, MaskedEngine):
+            kw = {} if eng.attr_bits is None else \
+                dict(attr_bits=eng.attr_bits[keep])
             return type(eng)(eng.data[keep], ids=eng.ids[keep],
                              auth_bits=eng.auth_bits[keep].astype(np.uint32),
-                             config=eng.config)
+                             config=eng.config, **kw)
         return type(eng)(eng.data[keep], ids=eng.ids[keep])
 
     def _sync_policy(self, with_roles: bool = True) -> None:
@@ -269,11 +318,14 @@ class DynamicStore:
         self.store.invalidate_caches()
 
     # ------------------------------------------------------------ operations
-    def insert(self, vec: np.ndarray, tau: RoleSet) -> int:
+    def insert(self, vec: np.ndarray, tau: RoleSet, attrs=None) -> int:
         vid = len(self.data)
         vec = np.asarray(vec, np.float32)
         self.data.append(vec)
-        self._append_data(vec)
+        arow = self._encode_attrs(attrs)
+        self._append_data(vec, attr_row=arow)
+        if self.store.attr_words is not None:
+            self.store.note_attr_rows(self.store.attr_words[vid], sign=1)
         tau = frozenset(tau)
         b = self._block_key(tau)
         self.block_members[b].append(vid)
@@ -283,7 +335,8 @@ class DynamicStore:
             eng = self.store.engines[key]
             if isinstance(eng, MutableEngine):     # HNSW native incremental
                 if isinstance(eng, MaskedEngine):  # auth words ride along
-                    eng.insert(vid, vec, auth_bits=self._auth_row(eng, tau))
+                    eng.insert(vid, vec, auth_bits=self._auth_row(eng, tau),
+                               attr_bits=self._attr_row_of(vid))
                 else:
                     eng.insert(vid, vec)
             else:                                  # exact/scan: rebuild
@@ -301,6 +354,8 @@ class DynamicStore:
     def delete(self, vid: int) -> None:
         vid = int(vid)
         self.tombstones.add(vid)
+        if self.store.attr_words is not None:
+            self.store.note_attr_rows(self.store.attr_words[vid], sign=-1)
         b = self.vec_block[vid]
         self.tombstone_roles[vid] = self.block_roles[b]
         self.block_members[b] = [v for v in self.block_members[b]
@@ -336,6 +391,9 @@ class DynamicStore:
         self.delete(vid)
         self.tombstones.discard(vid)
         self.tombstone_roles.pop(vid, None)
+        if self.store.attr_words is not None:
+            # the row stays live: undo delete()'s population decrement
+            self.store.note_attr_rows(self.store.attr_words[vid], sign=1)
         # re-insert under the new combination, reusing the same id
         b = self._block_key(new_tau)
         self.block_members[b].append(vid)
@@ -349,7 +407,8 @@ class DynamicStore:
                 # pre-existing-row case by refreshing in place)
                 if isinstance(eng, MaskedEngine):
                     eng.insert(vid, vec,
-                               auth_bits=self._auth_row(eng, new_tau))
+                               auth_bits=self._auth_row(eng, new_tau),
+                               attr_bits=self._attr_row_of(vid))
                 else:
                     eng.insert(vid, vec)   # clears the tombstone mark too
             elif vid in set(int(i) for i in eng.ids):
@@ -401,34 +460,42 @@ class DynamicStore:
 
     def search(self, x: np.ndarray, role: Optional[Role] = None,
                k: Optional[int] = None, efs: int = 50,
-               roles: Optional[Sequence[Role]] = None
+               roles: Optional[Sequence[Role]] = None, where=None
                ) -> List[Tuple[float, int]]:
         """Authorized top-k through the unified entry point: builds a
         :class:`Query` (single- or multi-role) with tombstone-aware
         over-fetch and filters tombstoned ids from the result.  ScoreScan
         stores take the batched kernel path, exact/HNSW stores the
-        per-query coordinated path — same as any static store."""
+        per-query coordinated path — same as any static store.  ``where``
+        (predicate atoms, see :class:`Query`) narrows to the attribute
+        plane; filtered and unfiltered answers never share a cache entry.
+        """
         k = int(k or self.k)
         if roles is None:
             assert role is not None, "search needs a role or a roles set"
             roles = (int(role),)
         else:
             roles = tuple(int(r) for r in roles)
+        q = Query(vector=x, roles=roles, k=k, efs=efs, where=where)
         cache = self.result_cache
         words = self._cache_words(roles) if cache is not None else None
+        pwords = None
+        if cache is not None and q.where is not None:
+            rf = self.store.compile_where(q.where)
+            pwords = np.concatenate(rf).astype(np.uint32)
         if cache is not None:
-            hit = cache.lookup(x, words, k, efs)
+            hit = cache.lookup(x, words, k, efs, pwords=pwords)
             if hit is not None:
                 return hit
         pad = self.tombstone_pad(roles)
         res = self.store.search(
-            [Query(vector=x, roles=roles, k=k + pad, efs=efs)])[0]
+            [dataclasses.replace(q, k=k + pad)])[0]
         out = [(d, v) for d, v in res.hits
                if v not in self.tombstones][:k]
         if cache is not None:
             # stored post-tombstone-filter, so a cached answer never
             # carries a deleted id; mutations invalidate precisely
-            cache.store(x, words, k, out, efs=efs)
+            cache.store(x, words, k, out, efs=efs, pwords=pwords)
         return out
 
     # --------------------------------------------------------- lazy re-optim

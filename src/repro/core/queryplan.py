@@ -33,11 +33,12 @@ class Plan:
 
 
 def node_cost_for_role(lat: Lattice, key: NodeKey, r: Role,
-                       cm: HNSWCostModel, k: int) -> float:
+                       cm: HNSWCostModel, k: int,
+                       selectivity: float = 1.0) -> float:
     node = lat.nodes[key]
     n = node.size(lat.block_sizes)
     n_auth = node.authorized_size(lat.policy, r, lat.block_sizes)
-    return cm.role_query_cost(n, n_auth, k)
+    return cm.role_query_cost(n, n_auth, k, selectivity=selectivity)
 
 
 def plan_cost(lat: Lattice, plan: Plan, r: Role, cm: HNSWCostModel,

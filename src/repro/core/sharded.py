@@ -199,14 +199,18 @@ class DeviceShard:
         rows = parent._centered[lo:hi]
         self.auth_width = 1 if parent.auth_bits.ndim == 1 \
             else parent.auth_bits.shape[1]
+        attr = parent.attr_bits
+        self.pred_width = 0 if attr is None else attr.shape[1]
         if len(rows):
             norms2 = (rows * rows).sum(axis=1)
             self.radius = float(np.sqrt(norms2.max()))
             self._data_dev, self._auth_dev = pin_rows(
                 [rows, parent.auth_bits[lo:hi]], device)
+            self._attr_dev = None if attr is None else pin_rows(
+                [attr[lo:hi]], device)[0]
         else:
             self.radius = 0.0
-            self._data_dev = self._auth_dev = None
+            self._data_dev = self._auth_dev = self._attr_dev = None
 
     def __len__(self) -> int:
         return self.hi - self.lo
@@ -222,13 +226,17 @@ class DeviceShard:
 
     def search_masked_batch(self, qs: np.ndarray, k: int,
                             role_masks: np.ndarray,
-                            bounds: Optional[np.ndarray] = None
+                            bounds: Optional[np.ndarray] = None,
+                            require: Optional[np.ndarray] = None,
+                            forbid: Optional[np.ndarray] = None
                             ) -> Tuple[np.ndarray, np.ndarray]:
         """Exact authorized top-k of this slice for a query batch: one
         ``l2_topk`` launch on this shard's device (operands committed there,
         query/mask/bound rows shipped per call).  Same contract as
         :meth:`~repro.ann.scorescan.ScoreScanIndex.search_masked_batch`;
-        returned ids are external."""
+        returned ids are external.  ``require``/``forbid`` (B, P) word rows
+        evaluate the predicate conjunction in-kernel against this slice's
+        pinned attribute rows."""
         b = len(qs)
         if not len(self):
             return (np.full((b, k), np.inf, np.float32),
@@ -241,8 +249,19 @@ class DeviceShard:
         md = jax.device_put(np.asarray(role_masks, np.uint32), self.device)
         bd = None if bounds is None else jax.device_put(
             np.asarray(bounds, np.float32), self.device)
+        pkw = {}
+        if require is not None or forbid is not None:
+            if self._attr_dev is None:
+                raise ValueError(
+                    "predicate rows against a shard with no attr plane")
+            pkw = dict(
+                attr_bits=self._attr_dev,
+                require=jax.device_put(np.asarray(require, np.uint32),
+                                       self.device),
+                forbid=jax.device_put(np.asarray(forbid, np.uint32),
+                                      self.device))
         d, i = l2_topk(qd, self._data_dev, self._auth_dev, md, k,
-                       bound=bd, config=self.config)
+                       bound=bd, config=self.config, **pkw)
         d = np.array(d)
         i = np.asarray(i)
         ext = np.where(i >= 0, self.ids[np.maximum(i, 0)], np.int64(-1))
@@ -388,7 +407,9 @@ class ShardedVectorStore:
                 ex.shutdown(wait=True)
 
     def _submit(self, shard: DeviceShard, qs: np.ndarray, k: int,
-                role_rows: np.ndarray, bounds: np.ndarray):
+                role_rows: np.ndarray, bounds: np.ndarray,
+                require: Optional[np.ndarray] = None,
+                forbid: Optional[np.ndarray] = None):
         """Enqueue one shard launch on its slot's stream; returns a future
         resolving to the shard's ``(dists, ids)`` block."""
         slot = shard.slot
@@ -397,7 +418,9 @@ class ShardedVectorStore:
             t0 = time.perf_counter()
             try:
                 return shard.search_masked_batch(qs, k, role_rows,
-                                                 bounds=bounds)
+                                                 bounds=bounds,
+                                                 require=require,
+                                                 forbid=forbid)
             finally:
                 self.device_busy_s[slot] += time.perf_counter() - t0
                 self.device_launches[slot] += 1
@@ -430,7 +453,7 @@ class ShardedVectorStore:
         store = self.store
         b = len(queries)
         (qs, ks, kmax, role_sets, plans, row_masks, role_bits,
-         stats_rows) = _prepare_batch(store, queries)
+         stats_rows, pred_rows, pred_masks) = _prepare_batch(store, queries)
         topk = BatchTopK(b, kmax, ks=ks)
 
         # mirror the batched engine's path semantics: "+packed" only when a
@@ -442,8 +465,12 @@ class ShardedVectorStore:
         if use_packed:
             rows = _packed_leftover_rows(store, plans, stats_rows)
             if len(rows):
+                req = forb = None
+                if pred_rows is not None:
+                    req, forb = pred_rows[0][rows], pred_rows[1][rows]
                 futs = [self._submit(s, qs[rows], topk.k, role_bits[rows],
-                                     np.full(len(rows), np.inf, np.float32))
+                                     np.full(len(rows), np.inf, np.float32),
+                                     require=req, forbid=forb)
                         for s in self.leftover_shards]
                 for fut in futs:
                     d, ids = fut.result()
@@ -451,21 +478,23 @@ class ShardedVectorStore:
                     _filter_unauthorized(d, ids, rows, row_masks)
                     topk.push_rows(rows, d, ids)
         else:
-            _scan_leftovers_batched(store, qs, plans, topk, stats_rows)
+            _scan_leftovers_batched(store, qs, plans, topk, stats_rows,
+                                    pred_masks=pred_masks)
 
         pure_rows, impure_rows, sizes_cache = _classify_waves(
             store, plans, role_sets, row_masks, stats_rows)
         self._wave(pure_rows, False, qs, kmax, role_bits, role_sets,
-                   row_masks, sizes_cache, topk, stats_rows)
+                   row_masks, sizes_cache, topk, stats_rows, pred_rows)
         self._wave(impure_rows, True, qs, kmax, role_bits, role_sets,
-                   row_masks, sizes_cache, topk, stats_rows)
+                   row_masks, sizes_cache, topk, stats_rows, pred_rows)
         items = topk.items()
         return [SearchResult(hits=items[i][:int(ks[i])],
                              stats=stats_rows[i], path=path)
                 for i in range(b)]
 
     def _wave(self, groups: Dict, impure: bool, qs, kmax, role_bits,
-              role_sets, row_masks, sizes_cache, topk, stats_rows) -> None:
+              role_sets, row_masks, sizes_cache, topk, stats_rows,
+              pred_rows=None) -> None:
         """One purity wave, executed as per-device rounds.
 
         Every (node, row-slice) shard touched by the wave joins its slot's
@@ -521,8 +550,12 @@ class ShardedVectorStore:
                     continue
                 act = rows[active]
                 launched[key].update(int(qi) for qi in act)
+                req = forb = None
+                if pred_rows is not None:
+                    req, forb = pred_rows[0][act], pred_rows[1][act]
                 futs.append((key, act, self._submit(
-                    shard, qs[act], kmax, role_bits[act], kth[active])))
+                    shard, qs[act], kmax, role_bits[act], kth[active],
+                    require=req, forbid=forb)))
             for key, act, fut in futs:
                 d, ids = fut.result()
                 if impure:

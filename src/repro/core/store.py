@@ -26,6 +26,8 @@ from .api import (DEFAULT_MIN_PACKED_BATCH, Query, QueryLike, SearchResult,
                   roles_word_mask, supports_batch)
 from .lattice import Lattice, NodeKey
 from .policy import AccessPolicy, Role
+from .predicate import (PredicateSchema, bit_population, estimate_selectivity,
+                        predicate_pass)
 from .queryplan import Plan
 from .veda import BuildResult
 
@@ -37,14 +39,20 @@ def hnsw_factory(M: int = 16, efc: int = 100, seed: int = 0) -> EngineFactory:
 
 
 def hnsw_masked_factory(policy, M: int = 16, efc: int = 100,
-                        seed: int = 0) -> EngineFactory:
+                        seed: int = 0,
+                        attr_words: Optional[np.ndarray] = None
+                        ) -> EngineFactory:
     """HNSW engines carrying per-vector auth mask words from the policy
     (single-word up to 32 roles, multi-word beyond — DESIGN.md §Role Masks),
-    so they satisfy the ``MaskedEngine`` protocol like ScoreScan."""
+    so they satisfy the ``MaskedEngine`` protocol like ScoreScan.  When the
+    store carries a predicate plane, ``attr_words`` threads each engine's
+    (n, P) attribute rows too."""
     from ..ann.scorescan import policy_auth_words
     bits = policy_auth_words(policy)
-    return lambda data, ids: HNSWIndex(data, ids=ids, M=M, efc=efc,
-                                       seed=seed, auth_bits=bits[ids])
+    attrs = None if attr_words is None else np.asarray(attr_words, np.uint32)
+    return lambda data, ids: HNSWIndex(
+        data, ids=ids, M=M, efc=efc, seed=seed, auth_bits=bits[ids],
+        attr_bits=None if attrs is None else attrs[ids])
 
 
 def exact_factory() -> EngineFactory:
@@ -64,9 +72,15 @@ class VectorStore:
     leftover_ids: Dict[int, np.ndarray]            # block id → vector ids
     global_engine: Optional[object] = None         # Exp-14 fallback / Baseline1
     leftover_shard: Optional[object] = None        # packed ScoreScan leftovers
+    pred_schema: Optional[PredicateSchema] = None  # predicate-plane layout
+    attr_words: Optional[np.ndarray] = None        # (N, P) uint32 attr words
+    cost_model: Optional[object] = None            # routing cost model
+    route_by_selectivity: bool = True              # predicate-aware routing
     _auth_cache: Dict[Role, np.ndarray] = dataclasses.field(default_factory=dict)
     _plan_cache: Dict[Tuple[Role, ...], Plan] = dataclasses.field(
         default_factory=dict)
+    _pred_counts: Optional[np.ndarray] = None      # per-bit population counts
+    _pred_live: Optional[int] = None               # live rows behind counts
 
     def authorized_mask(self, r: Role) -> np.ndarray:
         if r not in self._auth_cache:
@@ -101,10 +115,90 @@ class VectorStore:
         rows = np.stack([roles_word_mask(t, width=w) for t in role_sets])
         return rows[:, 0] if w == 1 else rows
 
+    # ------------------------------------------------------- predicate plane
+    def compile_where(self, where) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Compile a query's ``where`` clause to (require, forbid) word rows
+        against the store's schema; ``None`` for the unfiltered path.  A
+        filtered query against a store with no predicate plane is a hard
+        error — never a silently unfiltered answer."""
+        if not where:
+            return None
+        if self.pred_schema is None or self.attr_words is None:
+            raise ValueError(
+                "query carries a where clause but the store has no "
+                "predicate plane (pred_schema/attr_words)")
+        return self.pred_schema.compile_where(where)
+
+    def predicate_rows(self, queries: Sequence[Query]
+                       ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Per-query (B, P) require/forbid rows for a batch, or ``None``
+        when no query is filtered (the exact P=0 kernel path)."""
+        if not any(q.where for q in queries):
+            return None
+        p = self.pred_width
+        req = np.zeros((len(queries), p), np.uint32)
+        forb = np.zeros((len(queries), p), np.uint32)
+        for row, q in enumerate(queries):
+            rf = self.compile_where(q.where)
+            if rf is not None:
+                req[row], forb[row] = rf
+        return req, forb
+
+    @property
+    def pred_width(self) -> int:
+        """Predicate-plane width P in packed uint32 words (0 = no plane)."""
+        if self.attr_words is None:
+            return 0
+        return 1 if self.attr_words.ndim == 1 else self.attr_words.shape[1]
+
+    def predicate_mask(self, require, forbid) -> np.ndarray:
+        """Host-side (N,) bool pass mask over the store's attribute words —
+        the post-filter for engines that cannot evaluate predicates
+        in-kernel, and the leftover-scan filter."""
+        assert self.attr_words is not None
+        return predicate_pass(self.attr_words, require, forbid)
+
+    def pred_bit_counts(self) -> Optional[np.ndarray]:
+        """Per-bit population counts over the attribute plane — the
+        selectivity estimator's sufficient statistic.  Computed lazily from
+        ``attr_words``; dynamic stores maintain it incrementally through
+        :meth:`note_attr_rows`."""
+        if self.attr_words is None:
+            return None
+        if self._pred_counts is None:
+            self._pred_counts = bit_population(self.attr_words,
+                                               self.pred_width)
+            self._pred_live = int(len(self.attr_words))
+        return self._pred_counts
+
+    def note_attr_rows(self, words, sign: int = 1) -> None:
+        """Incrementally fold inserted (+1) / deleted (-1) attribute rows
+        into the population counts (no full recount under churn)."""
+        if self.attr_words is None or self.pred_bit_counts() is None:
+            return
+        from .predicate import row_bits
+        w = np.asarray(words, np.uint32)
+        rows = w[None, :] if w.ndim == 1 else w
+        for r in rows:
+            self._pred_counts += int(sign) * row_bits(r).astype(np.int64)
+        self._pred_live = max(0, int(self._pred_live) + int(sign) * len(rows))
+
+    def where_selectivity(self, where) -> float:
+        """Independence-model selectivity estimate of a ``where`` clause in
+        [1/n, 1]; 1.0 for unfiltered queries or attribute-less stores."""
+        rf = self.compile_where(where)
+        counts = self.pred_bit_counts()
+        if rf is None or counts is None:
+            return 1.0
+        n = self._pred_live or len(self.attr_words)
+        return estimate_selectivity(rf[0], rf[1], counts, n)
+
     def invalidate_caches(self) -> None:
         """Drop every derived structure that depends on policy/plan/leftover
         state — dynamic stores (Appendix I) call this after each mutation.
-        The packed leftover shard is included: it is rebuilt on demand."""
+        The packed leftover shard is included: it is rebuilt on demand.
+        Predicate population counts are NOT dropped — dynamic stores maintain
+        them incrementally via :meth:`note_attr_rows`."""
         self._auth_cache.clear()
         self._plan_cache.clear()
         self.leftover_shard = None
@@ -175,7 +269,8 @@ class VectorStore:
             stats = SearchStats()
             hits = coordinated_search(
                 self, q.vector, q.roles[0], q.k, q.efs, stats=stats,
-                roles=q.roles if len(q.roles) > 1 else None)
+                roles=q.roles if len(q.roles) > 1 else None,
+                where=q.where)
             out.append(SearchResult(hits=hits, stats=stats, path="sequential"))
         return out
 
@@ -212,7 +307,7 @@ class VectorStore:
             from ..ann.scorescan import pack_leftover_shard
             self.leftover_shard = pack_leftover_shard(
                 self.leftover_vectors, self.leftover_ids, self.policy,
-                config=config)
+                config=config, attr_words=self.attr_words)
         return self.leftover_shard
 
     def sharded(self, mesh, **kw) -> "object":
@@ -240,10 +335,18 @@ def build_vector_storage(result: BuildResult, data: np.ndarray,
                          with_global: bool = False,
                          global_factory: Optional[EngineFactory] = None,
                          pack_leftovers: bool = False,
+                         pred_schema: Optional[PredicateSchema] = None,
+                         attr_words: Optional[np.ndarray] = None,
+                         cost_model: Optional[object] = None,
                          ) -> VectorStore:
     lat = result.lattice
     policy = lat.policy
     factory = engine_factory or exact_factory()
+    if attr_words is not None:
+        attr_words = np.ascontiguousarray(attr_words, dtype=np.uint32)
+        if attr_words.ndim == 1:
+            attr_words = attr_words[:, None]
+        assert len(attr_words) == len(data), (attr_words.shape, data.shape)
     engines: Dict[NodeKey, object] = {}
     for key, node in lat.nodes.items():
         ids = np.concatenate([policy.block_members[b]
@@ -261,7 +364,9 @@ def build_vector_storage(result: BuildResult, data: np.ndarray,
     store = VectorStore(data=np.ascontiguousarray(data, dtype=np.float32),
                         policy=policy, lattice=lat, plans=dict(result.plans),
                         engines=engines, leftover_vectors=leftover_vectors,
-                        leftover_ids=leftover_ids, global_engine=g)
+                        leftover_ids=leftover_ids, global_engine=g,
+                        pred_schema=pred_schema, attr_words=attr_words,
+                        cost_model=cost_model)
     if pack_leftovers:
         store.pack_leftover_shard()
     return store

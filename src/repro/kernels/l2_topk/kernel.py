@@ -57,8 +57,15 @@ def _extract_topk(dist, ids, k: int, kpad: int):
 def _l2_topk_kernel(n_total_ref,
                     q_ref, qn_ref, role_mask_ref, bound_ref,
                     db_ref, dbn_ref, auth_ref,
-                    out_d_ref, out_i_ref, *, k: int, kpad: int, bn: int,
-                    n_words: int):
+                    *rest, k: int, kpad: int, bn: int,
+                    n_words: int, n_pwords: int = 0):
+    # predicate-plane refs ride between the auth words and the outputs when
+    # present; n_pwords is static, so n_pwords == 0 traces to exactly the
+    # pre-predicate kernel (same refs, same jaxpr — pinned bit-exact)
+    if n_pwords:
+        attr_ref, req_ref, forb_ref, out_d_ref, out_i_ref = rest
+    else:
+        out_d_ref, out_i_ref = rest
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -85,6 +92,15 @@ def _l2_topk_kernel(n_total_ref,
     for w in range(1, n_words):
         auth |= (auth_ref[w:w + 1, :] & role_mask_ref[:, w:w + 1]) != 0
     valid = auth & (col < n_total_ref[0, 0]) & (dist < bound_ref[...])
+    # predicate plane: attr is (n_pwords, BN) db words, require/forbid are
+    # (BQ, n_pwords) query rows; a vector passes iff in EVERY word all
+    # required bits are set and no forbidden bit is — all-word AND, the dual
+    # of the auth plane's any-word OR.  Statically unrolled like the auth
+    # loop; absent at n_pwords == 0.
+    for p in range(n_pwords):
+        a = attr_ref[p:p + 1, :]
+        req = req_ref[:, p:p + 1]
+        valid &= ((a & req) == req) & ((a & forb_ref[:, p:p + 1]) == 0)
     dist = jnp.where(valid, dist, INF)
 
     tile_d, tile_i = _extract_topk(dist, col, k, kpad)
@@ -103,15 +119,19 @@ def _l2_topk_kernel(n_total_ref,
 def l2_topk_pallas(queries: jax.Array, db: jax.Array, auth_words: jax.Array,
                    role_mask: jax.Array, bound: jax.Array, n_total: int,
                    k: int, kpad: int = 128, bq: int = 8, bn: int = 512,
-                   interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+                   interpret: bool = True,
+                   attr_words: jax.Array = None, require: jax.Array = None,
+                   forbid: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
     """Launch the kernel on padded operands (see ops.l2_topk for padding).
 
     ``auth_words`` is the (W, N) word-major per-vector auth mask and
     ``role_mask`` the (B, W) per-query word rows (W = 1 reproduces the
     original single-word operands bit-exactly); ``bound`` is a (B, 1)
-    per-query column.  All are tiled along the grid axes like the query/db
-    norms, so a batch of queries with distinct roles and distinct
-    coordinated-search bounds shares one launch.
+    per-query column.  ``attr_words`` (P, N) / ``require`` / ``forbid``
+    (B, P) optionally add the predicate plane — all three or none; None is
+    the exact pre-predicate launch (same operand list, same traced kernel).
+    All are tiled along the grid axes like the query/db norms, so a batch of
+    queries with distinct roles, bounds, and predicates shares one launch.
     """
     b, d = queries.shape
     n = db.shape[0]
@@ -119,25 +139,38 @@ def l2_topk_pallas(queries: jax.Array, db: jax.Array, auth_words: jax.Array,
     assert b % bq == 0 and n % bn == 0, (b, n, bq, bn)
     assert auth_words.shape == (w, n)
     assert role_mask.shape == (b, w) and bound.shape == (b, 1)
+    p = 0 if attr_words is None else attr_words.shape[0]
+    if p:
+        assert attr_words.shape == (p, n)
+        assert require.shape == (b, p) and forbid.shape == (b, p)
     qn = jnp.sum(queries * queries, axis=1, keepdims=True)       # (B, 1)
     dbn = jnp.sum(db * db, axis=1)[None, :]                      # (1, N)
     n_total2 = jnp.asarray(n_total, jnp.int32).reshape(1, 1)
     grid = (b // bq, n // bn)
     kernel = functools.partial(_l2_topk_kernel, k=k, kpad=kpad, bn=bn,
-                               n_words=w)
+                               n_words=w, n_pwords=p)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, j: (0, 0)),           # n_total
+        pl.BlockSpec((bq, d), lambda i, j: (i, 0)),          # queries
+        pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),          # |q|^2
+        pl.BlockSpec((bq, w), lambda i, j: (i, 0)),          # role words
+        pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),          # bounds
+        pl.BlockSpec((bn, d), lambda i, j: (j, 0)),          # db tile
+        pl.BlockSpec((1, bn), lambda i, j: (0, j)),          # |v|^2 tile
+        pl.BlockSpec((w, bn), lambda i, j: (0, j)),          # auth words
+    ]
+    operands = [n_total2, queries, qn, role_mask, bound, db, dbn, auth_words]
+    if p:
+        in_specs += [
+            pl.BlockSpec((p, bn), lambda i, j: (0, j)),      # attr words
+            pl.BlockSpec((bq, p), lambda i, j: (i, 0)),      # require rows
+            pl.BlockSpec((bq, p), lambda i, j: (i, 0)),      # forbid rows
+        ]
+        operands += [attr_words, require, forbid]
     out_d, out_i = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),           # n_total
-            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),          # queries
-            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),          # |q|^2
-            pl.BlockSpec((bq, w), lambda i, j: (i, 0)),          # role words
-            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),          # bounds
-            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),          # db tile
-            pl.BlockSpec((1, bn), lambda i, j: (0, j)),          # |v|^2 tile
-            pl.BlockSpec((w, bn), lambda i, j: (0, j)),          # auth words
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bq, kpad), lambda i, j: (i, 0)),       # revisited
             pl.BlockSpec((bq, kpad), lambda i, j: (i, 0)),
@@ -147,5 +180,5 @@ def l2_topk_pallas(queries: jax.Array, db: jax.Array, auth_words: jax.Array,
             jax.ShapeDtypeStruct((b, kpad), jnp.int32),
         ],
         interpret=interpret,
-    )(n_total2, queries, qn, role_mask, bound, db, dbn, auth_words)
+    )(*operands)
     return out_d[:, :k], out_i[:, :k]

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .kernel import l2_topk_pallas
-from .ref import l2_topk_ref, normalize_masks
+from .ref import l2_topk_ref, normalize_masks, normalize_predicates
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,7 +47,8 @@ def _pad_to(x: jax.Array, m: int, axis: int, value=0):
 
 def l2_topk(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
             role_mask, k: int, bound=None,
-            config: L2TopKConfig = L2TopKConfig()
+            config: L2TopKConfig = L2TopKConfig(),
+            attr_bits=None, require=None, forbid=None
             ) -> Tuple[jax.Array, jax.Array]:
     """Authorized top-k nearest neighbours of each query under L2.
 
@@ -62,6 +63,11 @@ def l2_topk(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
       bound: optional float32 coordinated-search global k-th distance;
         candidates at or beyond it are pruned in-kernel.  Scalar, or (B,)
         with one bound per query.
+      attr_bits: optional (N, P) packed uint32 attribute words (predicate
+        plane, DESIGN.md §Hybrid Filtered Search).  None disables the plane
+        and takes the exact pre-predicate kernel path.
+      require: optional (P,) shared or (B, P) per-query required-bits rows.
+      forbid: optional (P,) shared or (B, P) per-query forbidden-bits rows.
 
     Returns:
       (dists (B, k) float32, ids (B, k) int32); empty slots are +inf / -1.
@@ -72,6 +78,7 @@ def l2_topk(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
     if bound is None:
         bound = jnp.float32(jnp.inf)
     auth, mask, w = normalize_masks(auth_bits, role_mask)
+    pred = normalize_predicates(attr_bits, require, forbid)
     qp = _pad_to(queries.astype(jnp.float32), config.bq, 0)
     qp = _pad_to(qp, config.lane, 1)
     # padded query rows carry all-zero role masks (nothing authorized) and
@@ -85,14 +92,27 @@ def l2_topk(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
     # padded db rows carry all-zero auth words; word-major (W, N) layout so
     # each word is a contiguous lane row for the kernel's auth tile
     ap = _pad_to(auth.T, config.bn, 1)
+    pkw = {}
+    if pred is not None:
+        attr, req, forb, p = pred
+        # padded db rows carry all-zero attr words — they fail any nonzero
+        # require row, and their zero auth words exclude them regardless;
+        # padded query rows get all-zero require/forbid (pass-through, their
+        # zero role masks already return nothing)
+        pkw = dict(
+            attr_words=_pad_to(attr.T, config.bn, 1),
+            require=_pad_to(jnp.broadcast_to(req, (b, p)), config.bq, 0),
+            forbid=_pad_to(jnp.broadcast_to(forb, (b, p)), config.bq, 0))
     out_d, out_i = l2_topk_pallas(
         qp, dbp, ap, rp, bp, n, k,
         kpad=config.kpad, bq=config.bq, bn=config.bn,
-        interpret=config.interpret)
+        interpret=config.interpret, **pkw)
     return out_d[:b], out_i[:b]
 
 
-def l2_topk_oracle(queries, db, auth_bits, role_mask, k, bound=None):
+def l2_topk_oracle(queries, db, auth_bits, role_mask, k, bound=None,
+                   attr_bits=None, require=None, forbid=None):
     bound = jnp.inf if bound is None else bound
     return l2_topk_ref(queries, db, auth_bits, role_mask,
-                       jnp.asarray(bound, jnp.float32), k)
+                       jnp.asarray(bound, jnp.float32), k,
+                       attr_bits=attr_bits, require=require, forbid=forbid)

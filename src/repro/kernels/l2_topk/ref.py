@@ -18,6 +18,13 @@ Auth masks come in two layouts (DESIGN.md §Role Masks):
 ``bound`` may be a scalar or ``(B,)`` — the batched execution engine
 (DESIGN.md §Batched Execution) threads per-query coordinated-search bounds
 and per-query role masks through a single kernel launch.
+
+Predicate plane (DESIGN.md §Hybrid Filtered Search): vectors may carry
+``(N, P)`` packed uint32 attribute words and queries ``(P,)`` / ``(B, P)``
+require/forbid word rows.  A vector passes iff, in every word,
+``(attr & require) == require`` and ``(attr & forbid) == 0`` — evaluated as
+a conjunction beside the auth check.  ``attr_bits=None`` is the exact
+pre-predicate code path.
 """
 from __future__ import annotations
 
@@ -64,8 +71,49 @@ def normalize_masks(auth_bits, role_mask):
     return auth, mask, w
 
 
+def normalize_predicates(attr_bits, require, forbid):
+    """Common (N, P) attr / (·, P) require/forbid normalization for ref + ops.
+
+    Returns ``(attr (N, P), require (B'|1, P), forbid (B'|1, P), P)`` as
+    uint32, or ``None`` when ``attr_bits`` is None (the unfiltered path).
+    ``require``/``forbid`` may be ``None`` (all-zero: no constraint on that
+    side), ``(P,)`` shared, or ``(B, P)`` per query — like role masks, a row
+    that drops words would silently pass bits past word 0, so short rows are
+    rejected.
+    """
+    if attr_bits is None:
+        if require is not None or forbid is not None:
+            raise ValueError(
+                "require/forbid word rows need (N, P) attr_bits to filter on")
+        return None
+    attr = jnp.asarray(attr_bits, jnp.uint32)
+    if attr.ndim == 1:
+        attr = attr[:, None]                                     # (N, 1)
+    p = attr.shape[1]
+
+    def _rows(x, name):
+        if x is None:
+            return jnp.zeros((1, p), jnp.uint32)
+        x = jnp.asarray(x, jnp.uint32)
+        if x.ndim == 0:
+            x = x.reshape(1)
+        if x.ndim == 1:
+            if x.shape[0] != p:
+                raise ValueError(
+                    f"{name} must carry all {p} predicate words: got shape "
+                    f"{x.shape} (per-query rows are (B, {p}))")
+            return x[None, :]                                    # (1, P)
+        if x.ndim == 2 and x.shape[1] == p:
+            return x                                             # (B, P)
+        raise ValueError(
+            f"{name} shape {x.shape} incompatible with {p}-word attr plane")
+
+    return attr, _rows(require, "require"), _rows(forbid, "forbid"), p
+
+
 def l2_topk_ref(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
-                role_mask: jax.Array, bound: jax.Array, k: int):
+                role_mask: jax.Array, bound: jax.Array, k: int,
+                attr_bits=None, require=None, forbid=None):
     """Reference top-k.
 
     Args:
@@ -77,6 +125,9 @@ def l2_topk_ref(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
       bound: float32 global k-th distance bound (inf = no bound) — scalar or
         (B,) per query.
       k: number of neighbours.
+      attr_bits: optional (N, P) packed uint32 attribute words.
+      require: optional (P,) / (B, P) required-bits word rows.
+      forbid: optional (P,) / (B, P) forbidden-bits word rows.
 
     Returns:
       dists (B, k) float32 (+inf for empty slots), ids (B, k) int32 (-1).
@@ -91,6 +142,15 @@ def l2_topk_ref(queries: jax.Array, db: jax.Array, auth_bits: jax.Array,
     # original single-word (auth & mask) != 0 compare
     ok = ((auth[None, :, :] & mask[:, None, :]) != 0).any(axis=-1)
     dist = jnp.where(ok, dist, INF)
+    pred = normalize_predicates(attr_bits, require, forbid)
+    if pred is not None:
+        attr, req, forb, _ = pred
+        # (B', N, P) word compares -> all-word AND: every required bit set,
+        # no forbidden bit set
+        a = attr[None, :, :]
+        pok = (((a & req[:, None, :]) == req[:, None, :]).all(axis=-1)
+               & ((a & forb[:, None, :]) == 0).all(axis=-1))
+        dist = jnp.where(pok, dist, INF)
     dist = jnp.where(dist < _per_query(bound, jnp.float32), dist, INF)
     # tie-break toward smaller id: sort by (dist, id) lexicographically
     n = db.shape[0]

@@ -418,7 +418,8 @@ class MicroBatchScheduler:
         cs.admitted += 1
         if self.cache is not None:
             hits = self.cache.lookup(query.vector, self._query_words(query),
-                                     query.k, query.efs)
+                                     query.k, query.efs,
+                                     pwords=self._query_pwords(query))
             if hits is not None:
                 st.cache_hits += 1
                 cs.cache_hits += 1
@@ -489,6 +490,22 @@ class MicroBatchScheduler:
             words = roles_word_mask(query.roles, width=int(width))
             self._words_cache[query.roles] = words
         return words
+
+    def _query_pwords(self, query: Query):
+        """Compiled predicate words for the cache key (``None`` for
+        unfiltered queries): filtered and unfiltered answers — and distinct
+        predicates — must never share a cache entry."""
+        if query.where is None:
+            return None
+        compile_where = getattr(self.store, "compile_where", None)
+        if compile_where is None:
+            raise ValueError(
+                "filtered query submitted to a scheduler whose store has "
+                "no predicate plane (compile_where)")
+        rf = compile_where(query.where)
+        if rf is None:
+            return None
+        return np.concatenate(rf).astype(np.uint32)
 
     def _slots_for(self, query: Query) -> frozenset:
         slots = self._slot_cache.get(query.roles)
@@ -759,7 +776,8 @@ class MicroBatchScheduler:
                     self.cache.store(r.query.vector,
                                      self._query_words(r.query),
                                      r.query.k, results[i].hits,
-                                     efs=r.query.efs)
+                                     efs=r.query.efs,
+                                     pwords=self._query_pwords(r.query))
                 r.future.set_result(results[i])
         self._signal_idle()
 

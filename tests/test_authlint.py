@@ -301,6 +301,32 @@ def test_jaxpr_audit_fails_on_severed_auth_operand():
     assert not by_name["zero-mask(B=3,W=1)"]["ok"]
 
 
+def test_jaxpr_audit_covers_predicate_plane():
+    from repro.analysis.jaxpr_audit import audit_l2_topk
+    rep = audit_l2_topk(widths=(1,), pred_widths=(1, 2))
+    assert rep["ok"], rep["checks"]
+    names = {c["name"] for c in rep["checks"]}
+    assert "pred-liveness(P=1)" in names and "pred-liveness(P=2)" in names
+    assert "pred-sensitivity(P=2)" in names
+
+
+def test_jaxpr_audit_fails_on_severed_predicate_operands():
+    """A kernel that honors auth but silently drops attr/require/forbid
+    must fail the predicate audit — and only it (the auth checks stay
+    green, so the failure is attributable)."""
+    from repro.analysis.jaxpr_audit import (audit_kernel,
+                                            severed_predicate_fixture)
+    rep = audit_kernel(severed_predicate_fixture(), pred_widths=(1, 2))
+    assert not rep["ok"]
+    by_name = {c["name"]: c for c in rep["checks"]}
+    assert by_name["zero-mask(B=3,W=1)"]["ok"]          # auth still honored
+    assert by_name["word-sensitivity(W=2)"]["ok"]
+    for p in (1, 2):
+        assert not by_name[f"pred-liveness(P={p})"]["ok"]
+        assert "dead operand" in by_name[f"pred-liveness(P={p})"]["detail"]
+        assert not by_name[f"pred-sensitivity(P={p})"]["ok"]
+
+
 # --------------------------------------------------------------------------
 # CLI (subprocess) — exit codes are the CI contract
 # --------------------------------------------------------------------------

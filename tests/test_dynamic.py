@@ -333,9 +333,9 @@ def test_grant_carries_auth_words_at_insert_time(monkeypatch):
     calls = []
     orig = HNSWIndex.insert
 
-    def spy(self, vid, vec, auth_bits=None):
+    def spy(self, vid, vec, auth_bits=None, attr_bits=None):
         calls.append((int(vid), auth_bits))
-        return orig(self, vid, vec, auth_bits=auth_bits)
+        return orig(self, vid, vec, auth_bits=auth_bits, attr_bits=attr_bits)
 
     monkeypatch.setattr(HNSWIndex, "insert", spy)
 

@@ -300,3 +300,200 @@ def test_multi_role_mask():
     for row in i:
         for v in row[row >= 0]:
             assert ok[v]
+
+
+# --------------------------------------------------------------------------
+# predicate-word plane (hybrid filtered search)
+# --------------------------------------------------------------------------
+def _pred_case(B, N, d, k, P, seed=0, cfg=None, density=0.5):
+    """Random auth + random (N, P) attribute words + per-row require/forbid
+    rows; returns kernel and ref outputs plus the host-side truth masks."""
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    auth = rng.integers(1, 2 ** 16, size=N).astype(np.uint32)
+    role = np.uint32(1 << 3)
+    attr = (rng.random((N, P * 32)) < density)
+    req_bits = np.zeros((B, P * 32), bool)
+    forb_bits = np.zeros((B, P * 32), bool)
+    for row in range(B):
+        req_bits[row, rng.integers(0, P * 32)] = True
+        forb_bits[row, rng.integers(0, P * 32)] = True
+    forb_bits &= ~req_bits
+
+    def pack(bits):
+        words = np.zeros((len(bits), P), np.uint32)
+        for j in range(bits.shape[1]):
+            words[:, j // 32] |= bits[:, j].astype(np.uint32) << (j % 32)
+        return words
+
+    attr_w, req_w, forb_w = pack(attr), pack(req_bits), pack(forb_bits)
+    cfg = cfg or L2TopKConfig()
+    dk, ik = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), role, k,
+                     config=cfg, attr_bits=attr_w, require=req_w,
+                     forbid=forb_w)
+    dr, ir = l2_topk_ref(jnp.array(q), jnp.array(db), jnp.array(auth),
+                         jnp.uint32(role), jnp.float32(np.inf), k,
+                         attr_bits=attr_w, require=req_w, forbid=forb_w)
+    pred_ok = np.stack([
+        (attr[:, req_bits[row]].all(axis=1) if req_bits[row].any()
+         else np.ones(N, bool))
+        & ~(attr[:, forb_bits[row]].any(axis=1))
+        for row in range(B)])
+    return (np.array(dk), np.array(ik), np.array(dr), np.array(ir),
+            (auth & role) != 0, pred_ok)
+
+
+@pytest.mark.parametrize("B,N,d,k,P", [
+    (3, 513, 17, 5, 1),      # unaligned everything
+    (6, 700, 24, 8, 2),
+    (1, 100, 8, 1, 2),
+])
+def test_predicate_matches_ref(B, N, d, k, P):
+    dk, ik, dr, ir, auth_ok, pred_ok = _pred_case(B, N, d, k, P)
+    assert (ik == ir).all()
+    finite = np.isfinite(dr)
+    np.testing.assert_allclose(dk[finite], dr[finite], rtol=1e-4, atol=1e-4)
+    # every hit satisfies auth AND its row's predicate conjunction
+    for row, hits in enumerate(ik):
+        for v in hits[hits >= 0]:
+            assert auth_ok[v] and pred_ok[row, v]
+
+
+def _pallas_invars(jaxpr):
+    out = []
+
+    def walk(j):
+        for eqn in j.eqns:
+            if eqn.primitive.name == "pallas_call":
+                out.append(len(eqn.invars))
+            for p in eqn.params.values():
+                if hasattr(p, "jaxpr"):
+                    walk(getattr(p.jaxpr, "jaxpr", p.jaxpr))
+                elif hasattr(p, "eqns"):
+                    walk(p)
+    walk(jaxpr.jaxpr)
+    return out
+
+
+def test_p0_operands_take_the_exact_existing_path():
+    """No-predicate calls are pinned to the pre-predicate kernel: the traced
+    jaxpr is byte-identical whether the predicate kwargs are omitted or
+    explicitly None, the pallas_call carries the original 8 operands (a
+    predicate plane adds 3), and outputs are bit-equal to an all-pass
+    predicate run."""
+    import jax
+    rng = np.random.default_rng(30)
+    B, N, d, k = 4, 600, 24, 8
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    auth = rng.integers(0, 2 ** 16, size=N).astype(np.uint32)
+    role = np.uint32(1 << 3)
+    j_plain = jax.make_jaxpr(
+        lambda q, db, a: l2_topk(q, db, a, role, k))(q, db, auth)
+    j_none = jax.make_jaxpr(
+        lambda q, db, a: l2_topk(q, db, a, role, k, attr_bits=None,
+                                 require=None, forbid=None))(q, db, auth)
+    assert str(j_plain) == str(j_none)
+    assert _pallas_invars(j_plain) == [8]
+    attr = rng.integers(0, 2 ** 8, size=(N, 1)).astype(np.uint32)
+    j_pred = jax.make_jaxpr(
+        lambda q, db, a, at, r, f: l2_topk(q, db, a, role, k, attr_bits=at,
+                                           require=r, forbid=f))(
+        q, db, auth, attr, np.zeros((B, 1), np.uint32),
+        np.zeros((B, 1), np.uint32))
+    assert _pallas_invars(j_pred) == [11]
+    # all-pass predicate (require=0, forbid=0) equals the unfiltered run
+    d0, i0 = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), role, k)
+    d1, i1 = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), role, k,
+                     attr_bits=attr, require=np.zeros((B, 1), np.uint32),
+                     forbid=np.zeros((B, 1), np.uint32))
+    assert (np.array(i0) == np.array(i1)).all()
+    assert (np.array(d0) == np.array(d1)).all()
+
+
+def test_predicate_padding_semantics():
+    """Padded db rows carry all-zero attribute words, so they fail every
+    nonzero require; padded query rows carry all-zero require/forbid.
+    Results on unaligned operands equal the same search over explicitly
+    padded operands bit-exactly, and no padding id ever surfaces."""
+    rng = np.random.default_rng(31)
+    B, N, d, k, P = 5, 700, 24, 8, 1       # B % bq != 0, N % bn != 0
+    cfg = L2TopKConfig(bq=8, bn=512)
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    auth = rng.integers(1, 2 ** 16, size=(N,)).astype(np.uint32)
+    role = np.uint32(1 << 2)
+    attr = rng.integers(1, 2 ** 8, size=(N, P)).astype(np.uint32)
+    req = np.zeros((B, P), np.uint32)
+    req[:, 0] = 1 << 2                      # nonzero require for every row
+    forb = np.zeros((B, P), np.uint32)
+    d1, i1 = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), role, k,
+                     config=cfg, attr_bits=attr, require=req, forbid=forb)
+    i1 = np.array(i1)
+    assert (i1 < N).all()                  # no padded db id surfaces
+    Npad, Bpad = 1024, 8
+    dbp = np.zeros((Npad, d), np.float32)
+    dbp[:N] = db
+    authp = np.zeros(Npad, np.uint32)
+    authp[:N] = auth
+    attrp = np.zeros((Npad, P), np.uint32)  # zero words: fail the require
+    attrp[:N] = attr
+    qp = np.zeros((Bpad, d), np.float32)
+    qp[:B] = q
+    reqp = np.zeros((Bpad, P), np.uint32)   # zero require/forbid: all-pass
+    reqp[:B] = req
+    forbp = np.zeros((Bpad, P), np.uint32)
+    maskp = np.zeros(Bpad, np.uint32)       # zero role mask: no results
+    maskp[:B] = role
+    d2, i2 = l2_topk(jnp.array(qp), jnp.array(dbp), jnp.array(authp), maskp,
+                     k, config=cfg, attr_bits=attrp, require=reqp,
+                     forbid=forbp)
+    assert (np.array(i2)[:B] == i1).all()
+    assert (np.array(i2)[B:] == -1).all()
+    assert (np.array(d1) == np.array(d2)[:B]).all()
+
+
+def test_predicate_word_boundary_does_not_alias():
+    """P=2: attribute bit 35 (word 1, bit 3) and bit 3 (word 0) are distinct
+    — a require on one must never admit rows tagged only with the other
+    (the predicate dual of the role-word aliasing regression)."""
+    rng = np.random.default_rng(32)
+    B, N, d, k = 2, 300, 8, 10
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    db = rng.standard_normal((N, d)).astype(np.float32)
+    auth = np.ones(N, np.uint32)
+    role = np.uint32(1)
+    tag_word1 = rng.random(N) < 0.5         # rows holding bit 35 only
+    attr = np.zeros((N, 2), np.uint32)
+    attr[tag_word1, 1] = 1 << 3
+    attr[~tag_word1, 0] = 1 << 3            # others hold bit 3 only
+    req_w1 = np.zeros((B, 2), np.uint32)
+    req_w1[:, 1] = 1 << 3
+    req_w0 = np.zeros((B, 2), np.uint32)
+    req_w0[:, 0] = 1 << 3
+    forb = np.zeros((B, 2), np.uint32)
+    for req, want in ((req_w1, tag_word1), (req_w0, ~tag_word1)):
+        dk, ik = l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), role,
+                         k, attr_bits=attr, require=req, forbid=forb)
+        dr, ir = l2_topk_ref(jnp.array(q), jnp.array(db), jnp.array(auth),
+                             jnp.uint32(role), jnp.float32(np.inf), k,
+                             attr_bits=attr, require=req, forbid=forb)
+        ik = np.array(ik)
+        assert (ik == np.array(ir)).all()
+        for row in ik:
+            got = row[row >= 0]
+            assert len(got)
+            assert want[got].all()          # only its own word's rows
+
+
+def test_predicate_rows_without_attr_plane_rejected():
+    """require/forbid against a call with no attr_bits is a hard error —
+    never a silently unfiltered answer."""
+    rng = np.random.default_rng(33)
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    db = rng.standard_normal((64, 8)).astype(np.float32)
+    auth = np.ones(64, np.uint32)
+    with pytest.raises(ValueError):
+        l2_topk(jnp.array(q), jnp.array(db), jnp.array(auth), np.uint32(1),
+                5, require=np.zeros((2, 1), np.uint32))

@@ -1,0 +1,309 @@
+"""Property-based hybrid filtered-search conformance harness (ISSUE:
+predicate-word plane).
+
+The predicate plane adds a second word family next to the auth words; this
+suite is the guard that NO execution path ever drifts from the combined
+(authorized AND predicate) ground truth.  For random schemas and predicates
+at P ∈ {1, 2} predicate words × W ∈ {1, 2} auth words (word boundaries are
+where packing bugs live), each path must return exactly the brute-force
+per-query oracle over ``auth_mask ∧ pred_mask``:
+
+  * batched     — ``store.search`` through the batched lattice engine
+                  (in-kernel require/forbid rows), plus the packed-leftover
+                  leg under ``packed=True``,
+  * sequential  — ``store.search`` falling back to per-query coordinated
+                  search (exact engines, selectivity-routed node scans),
+  * scheduler   — ``MicroBatchScheduler`` micro-batches with mixed
+                  filtered/unfiltered queries,
+  * dynamic     — ``DynamicStore`` searches after mutations (inserts carry
+                  attribute rows; attribute-less inserts fail every atom),
+  * sharded     — ``ShardedVectorStore`` over a size-2 mesh with per-shard
+                  pinned attribute rows.
+
+Degenerate selectivities ride along in every predicate pool: an
+empty-result predicate (a declared tag no row carries) and an all-pass
+predicate (a range bound every row satisfies).  The host oracle recomputes
+predicate truth from the raw attribute values — independently of the
+bit-packing under test.
+
+Runs under real hypothesis when installed, else the deterministic
+``_propshim`` corpus.
+"""
+import asyncio
+import functools
+
+import numpy as np
+import pytest
+
+from _propshim import given, settings, st
+
+from repro.ann.scorescan import scorescan_factory
+from repro.core import (DynamicStore, HNSWCostModel, Query, build_effveda,
+                        build_vector_storage, exact_factory, generate_policy,
+                        metrics)
+from repro.core.predicate import PredicateSchema
+
+pytestmark = pytest.mark.filtered
+
+DIM = 8
+N_VECTORS = 360
+ROLE_UNIVERSES = (8, 64)        # W = 1 and W = 2 auth words
+PRED_WIDTHS = (1, 2)            # P = 1 and P = 2 predicate words
+EDGES = (0.0, 10.0, 20.0, 30.0)
+
+
+def _schema(p: int) -> PredicateSchema:
+    """P=1: 21 tag bits + 4 range bits; P=2: 41 + 4 (spills into word 2).
+    The "never" tag is declared but never assigned — the empty-result
+    degenerate predicate."""
+    n_tags = 20 if p == 1 else 40
+    tags = tuple(f"c{i}" for i in range(n_tags)) + ("never",)
+    s = PredicateSchema.make(tags={"color": tags},
+                             ranges={"price": EDGES})
+    assert s.n_words == p, (s.n_words, p)
+    return s
+
+
+def _fresh(n_roles: int, p: int, seed: int, scan: bool):
+    """Store (ScoreScan or exact engines) + attribute plane over a random
+    policy/lattice; returns the raw attribute values for the host oracle."""
+    policy = generate_policy(n_vectors=N_VECTORS, n_roles=n_roles,
+                             n_permissions=n_roles + 12, seed=seed)
+    rng = np.random.default_rng(1000 + seed + 17 * p)
+    vecs = rng.standard_normal((policy.n_vectors, DIM)).astype(np.float32)
+    schema = _schema(p)
+    n_tags = 20 if p == 1 else 40
+    colors = [f"c{int(c)}" for c in rng.integers(0, n_tags, N_VECTORS)]
+    prices = rng.uniform(0.0, 40.0, N_VECTORS)
+    attrs = schema.encode_rows([{"color": c, "price": float(v)}
+                                for c, v in zip(colors, prices)])
+    cm = HNSWCostModel(lam_threshold=60)
+    res = build_effveda(policy, cm, beta=1.1, k=5)
+    factory = (scorescan_factory(policy, attr_words=attrs) if scan
+               else exact_factory())
+    store = build_vector_storage(res, vecs, engine_factory=factory,
+                                 pred_schema=schema, attr_words=attrs)
+    return policy, vecs, store, cm, schema, colors, prices
+
+
+# read-only tests share cached builds; mutation tests call _fresh directly
+_built = functools.lru_cache(maxsize=None)(_fresh)
+
+
+def _pred_pool(seed: int):
+    """(where, truth_fn) pairs; truth_fn(color, price) recomputes the
+    predicate from raw values (color None = attribute-less row).  The pool
+    always contains the empty-result and all-pass degenerates."""
+    rng = np.random.default_rng(4000 + seed)
+    c1 = f"c{int(rng.integers(0, 20))}"
+    c2 = f"c{int(rng.integers(0, 20))}"
+    lo, hi = 10.0, 30.0
+    return [
+        (None,
+         lambda c, v: True),
+        ((("has", "color", c1),),
+         lambda c, v: c == c1),
+        ((("lacks", "color", c2), ("ge", "price", lo)),
+         lambda c, v: c is not None and c != c2 and v >= lo),
+        ((("ge", "price", lo), ("lt", "price", hi)),
+         lambda c, v: v is not None and lo <= v < hi),
+        ((("has", "color", "never"),),             # empty result
+         lambda c, v: False),
+        ((("ge", "price", 0.0),),                  # all-pass (prices >= 0)
+         lambda c, v: v is not None and v >= 0.0),
+    ]
+
+
+def _queries(policy, vecs, seed: int, b: int = 6, k: int = 5):
+    """Random single- and multi-role queries, each with a predicate drawn
+    from the pool (including the degenerates and the unfiltered control)."""
+    rng = np.random.default_rng(2000 + seed)
+    pool = _pred_pool(seed)
+    out = []
+    for i in range(b):
+        x = vecs[int(rng.integers(len(vecs)))] + \
+            rng.standard_normal(DIM).astype(np.float32) * 0.05
+        roles = [int(rng.integers(policy.n_roles))]
+        if i % 3 == 2 and policy.n_roles > 1:      # multi-role union query
+            roles.append(int(rng.integers(policy.n_roles)))
+        where, truth = pool[i % len(pool)]
+        out.append((Query(vector=x, roles=tuple(set(roles)), k=k,
+                          where=where), truth))
+    return out
+
+
+def _oracle_ids(policy, vecs, colors, prices, q: Query, truth):
+    mask = np.zeros(len(vecs), dtype=bool)
+    ids = policy.d_of_roleset(q.roles)
+    mask[ids] = True
+    pred = np.fromiter((truth(colors[i], prices[i])
+                        for i in range(len(vecs))), bool, len(vecs))
+    return [i for _, i in metrics.brute_force_topk(vecs, mask & pred,
+                                                   q.vector, q.k)]
+
+
+def _assert_matches_oracle(policy, vecs, colors, prices, qts, results):
+    for (q, truth), res in zip(qts, results):
+        want = _oracle_ids(policy, vecs, colors, prices, q, truth)
+        got = [i for _, i in res]
+        assert got == want[:len(got)] and len(got) == len(want), (
+            q.roles, q.where, got, want)
+
+
+# ------------------------------------------------------------ property tests
+@settings(max_examples=8, deadline=None)
+@given(n_roles=st.sampled_from(ROLE_UNIVERSES),
+       p=st.sampled_from(PRED_WIDTHS), seed=st.integers(0, 2))
+def test_batched_path_matches_filtered_oracle(n_roles, p, seed):
+    policy, vecs, store, _, _, colors, prices = _built(n_roles, p, seed,
+                                                       scan=True)
+    qts = _queries(policy, vecs, seed)
+    results = store.search([q for q, _ in qts])
+    assert all(r.path.startswith("batched") for r in results)
+    _assert_matches_oracle(policy, vecs, colors, prices, qts,
+                           [r.hits for r in results])
+
+
+@settings(max_examples=4, deadline=None)
+@given(n_roles=st.sampled_from(ROLE_UNIVERSES),
+       p=st.sampled_from(PRED_WIDTHS), seed=st.integers(0, 1))
+def test_packed_leftover_path_matches_filtered_oracle(n_roles, p, seed):
+    """packed=True forces the packed leftover shard: predicate rows must
+    ride into its kernel launch too (zero rows for unfiltered queries)."""
+    policy, vecs, store, _, _, colors, prices = _built(n_roles, p, seed,
+                                                       scan=True)
+    qts = _queries(policy, vecs, seed)
+    results = store.search([q for q, _ in qts], packed=True)
+    _assert_matches_oracle(policy, vecs, colors, prices, qts,
+                           [r.hits for r in results])
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_roles=st.sampled_from(ROLE_UNIVERSES),
+       p=st.sampled_from(PRED_WIDTHS), seed=st.integers(0, 2))
+def test_sequential_path_matches_filtered_oracle(n_roles, p, seed):
+    policy, vecs, store, _, _, colors, prices = _built(n_roles, p, seed,
+                                                       scan=False)
+    qts = _queries(policy, vecs, seed)
+    results = store.search([q for q, _ in qts])
+    assert all(r.path == "sequential" for r in results)
+    _assert_matches_oracle(policy, vecs, colors, prices, qts,
+                           [r.hits for r in results])
+
+
+@settings(max_examples=4, deadline=None)
+@given(n_roles=st.sampled_from(ROLE_UNIVERSES),
+       p=st.sampled_from(PRED_WIDTHS), seed=st.integers(0, 1))
+def test_scheduler_path_matches_filtered_oracle(n_roles, p, seed):
+    from repro.launch.scheduler import MicroBatchScheduler
+    policy, vecs, store, _, _, colors, prices = _built(n_roles, p, seed,
+                                                       scan=True)
+    qts = _queries(policy, vecs, seed)
+
+    async def run():
+        sched = MicroBatchScheduler(store, max_batch=4, max_wait_ms=1.0)
+        try:
+            futs = [sched.submit(q) for q, _ in qts]
+            return await asyncio.gather(*futs)
+        finally:
+            await sched.close()
+
+    results = asyncio.run(run())
+    _assert_matches_oracle(policy, vecs, colors, prices, qts,
+                           [r.hits for r in results])
+
+
+@settings(max_examples=4, deadline=None)
+@given(n_roles=st.sampled_from(ROLE_UNIVERSES),
+       p=st.sampled_from(PRED_WIDTHS), seed=st.integers(0, 1))
+def test_sharded_path_matches_filtered_oracle(n_roles, p, seed):
+    from repro.core import shard_store
+    from repro.launch.mesh import DeviceMesh
+    policy, vecs, store, _, _, colors, prices = _fresh(n_roles, p, seed,
+                                                       scan=True)
+    sharded = shard_store(store, DeviceMesh.host(2))
+    try:
+        qts = _queries(policy, vecs, seed)
+        results = sharded.search([q for q, _ in qts])
+        assert all(r.path.startswith("sharded") for r in results)
+        _assert_matches_oracle(policy, vecs, colors, prices, qts,
+                               [r.hits for r in results])
+    finally:
+        sharded.close()
+
+
+@settings(max_examples=4, deadline=None)
+@given(n_roles=st.sampled_from(ROLE_UNIVERSES),
+       p=st.sampled_from(PRED_WIDTHS), seed=st.integers(0, 1))
+def test_dynamic_path_matches_filtered_oracle(n_roles, p, seed):
+    """Insert (with and without attribute rows) / delete / grant, then
+    every filtered search must match an exact rescan of the mutated state —
+    attribute words included (rebuilds and incremental inserts carry (P,)
+    rows)."""
+    policy, vecs, store, cm, schema, colors, prices = _fresh(
+        n_roles, p, seed, scan=True)
+    colors, prices = list(colors), list(prices)
+    dyn = DynamicStore(store, cm)
+    rng = np.random.default_rng(3000 + seed)
+    hi = policy.n_roles - 1
+    # attribute-carrying insert
+    dyn.insert(rng.standard_normal(DIM).astype(np.float32),
+               frozenset({hi}), attrs={"color": "c3", "price": 15.0})
+    colors.append("c3")
+    prices.append(15.0)
+    # attribute-less insert: zero words, fails every atom
+    dyn.insert(rng.standard_normal(DIM).astype(np.float32), frozenset({0}))
+    colors.append(None)
+    prices.append(None)
+    dyn.delete(int(policy.d_of_role(0)[0]))
+    alive = [v for v in range(N_VECTORS) if v not in dyn.tombstones]
+    dyn.grant(int(alive[1]), hi)
+    pool = _pred_pool(seed)
+    for i in range(4):
+        r = int(rng.integers(policy.n_roles)) if i % 2 else hi
+        x = rng.standard_normal(DIM).astype(np.float32)
+        where, truth = pool[i % len(pool)]
+        mask = dyn.store.authorized_mask(r).copy()
+        for t in dyn.tombstones:
+            mask[t] = False
+        pred = np.fromiter((truth(colors[j], prices[j])
+                            for j in range(len(colors))), bool, len(colors))
+        want = [v for _, v in metrics.brute_force_topk(
+            dyn.store.data, mask & pred, x, 5)]
+        got = [v for _, v in dyn.search(x, r, k=5, where=where)]
+        assert got == want[:len(got)] and len(got) == len(want), (
+            r, where, got, want)
+
+
+# ----------------------------------------------------- pinned hard-error law
+def test_filtered_query_against_plane_less_store_is_an_error():
+    """A where clause against a store with no predicate plane must raise —
+    never silently return unfiltered results."""
+    policy, vecs, store, _ = _plane_less()
+    q = Query(vector=vecs[0], roles=(1,), k=5,
+              where=(("has", "color", "c0"),))
+    with pytest.raises(ValueError):
+        store.search([q])
+
+
+def test_unknown_atom_values_are_hard_errors():
+    schema = _schema(1)
+    with pytest.raises(ValueError):
+        schema.compile_where((("has", "color", "chartreuse"),))
+    with pytest.raises(ValueError):
+        schema.compile_where((("ge", "price", 12.5),))   # undeclared edge
+    with pytest.raises(ValueError):
+        schema.compile_where((("between", "price", 0.0),))   # unknown op
+
+
+@functools.lru_cache(maxsize=1)
+def _plane_less():
+    policy = generate_policy(n_vectors=120, n_roles=8, n_permissions=20,
+                             seed=0)
+    rng = np.random.default_rng(0)
+    vecs = rng.standard_normal((120, DIM)).astype(np.float32)
+    cm = HNSWCostModel(lam_threshold=60)
+    res = build_effveda(policy, cm, beta=1.1, k=5)
+    store = build_vector_storage(res, vecs,
+                                 engine_factory=scorescan_factory(policy))
+    return policy, vecs, store, cm

@@ -365,6 +365,46 @@ def test_grant_revoke_invalidate_cached_answers(dyn_cached):
     assert all(v != vid for _, v in post)      # stale hit here = leak
 
 
+def test_filtered_query_never_served_unfiltered_cache_entry():
+    """Regression (hybrid filtered search): a cached answer stored for
+    ``where=None`` must NOT be served to a filtered query with the same
+    vector/roles/k/efs — predicate words are part of the answer's identity.
+    Before the fix the cache key ignored the predicate plane, so the
+    filtered query aliased the unfiltered entry and returned rows that
+    fail the predicate."""
+    from repro.core.predicate import PredicateSchema
+    schema = PredicateSchema.make(tags={"color": ("red", "green")})
+    policy = generate_policy(n_vectors=300, n_roles=8, n_permissions=20,
+                             seed=5)
+    rng = np.random.default_rng(5)
+    vecs = rng.standard_normal((300, 8)).astype(np.float32)
+    colors = rng.choice(["red", "green"], size=300)
+    attrs = schema.encode_rows([{"color": c} for c in colors])
+    cm = HNSWCostModel(lam_threshold=60)
+    res = build_effveda(policy, cm, beta=1.1, k=5)
+    store = build_vector_storage(res, vecs, engine_factory=exact_factory(),
+                                 pred_schema=schema, attr_words=attrs)
+    dyn = DynamicStore(store, cm)
+    cache = AnswerCache(capacity=64)
+    dyn.attach_cache(cache)
+    x = vecs[0] + 0.01
+    where = (("has", "color", "red"),)
+    unfiltered = dyn.search(x, 2, k=5)
+    filtered = dyn.search(x, 2, k=5, where=where)
+    # the filtered answer must actually satisfy the predicate...
+    assert all(colors[v] == "red" for _, v in filtered)
+    # ...and must not be the aliased unfiltered entry
+    red_only = [(d, v) for d, v in unfiltered if colors[v] == "red"]
+    assert filtered != unfiltered or unfiltered == red_only
+    # both directions: the filtered entry must not serve the unfiltered query
+    again = dyn.search(x, 2, k=5)
+    assert again == unfiltered
+    # repeat filtered query is a genuine cache hit on its own entry
+    hits_before = cache.stats.hits
+    assert dyn.search(x, 2, k=5, where=where) == filtered
+    assert cache.stats.hits == hits_before + 1
+
+
 def test_compaction_purge_clears_attached_cache(dyn_cached):
     from repro.core import CompactionConfig, LatticeCompactor
     dyn, cache, policy = dyn_cached
